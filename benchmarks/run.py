@@ -1,0 +1,295 @@
+"""Benchmark harness — one section per paper table/figure + framework benches.
+
+Run: PYTHONPATH=src python -m benchmarks.run [--only table3,fig2,...]
+Prints `name,value,unit` rows per section (CSV-ish, grep-friendly).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _timeit(fn, *args, n=5, warmup=2):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / n * 1e6, out
+
+
+# --------------------------------------------------------------------- table1
+def bench_table1():
+    """Table I parameters + the derived per-scenario link cost of one
+    MobileNetV2 activation transfer (0.57 MB)."""
+    from repro.core import ucie as ucie_mod
+    from repro.core.scenarios import SCENARIOS, SCENARIO_ORDER
+    print("\n## Table I — scenario parameters + derived link cost")
+    for name in SCENARIO_ORDER:
+        s = SCENARIOS[name]
+        if s.is_monolithic:
+            print(f"table1,{name},latency_us=0,bw=inf,transfer_ms=0")
+            continue
+        cfg = ucie_mod.UCIeConfig(
+            bandwidth_gbps=s.link_bandwidth_gbps, latency_us=s.link_latency_us,
+            streaming=s.prefetch_overlap, compression_ratio=s.compression_ratio)
+        t_us, e_mj, wire = ucie_mod.transfer(jnp.float32(0.57e6), cfg)
+        print(f"table1,{name},latency_us={s.link_latency_us},"
+              f"bw_gbps={s.link_bandwidth_gbps},transfer_ms="
+              f"{float(t_us)/1e3:.3f},wire_MB={float(wire)/1e6:.2f},"
+              f"energy_mJ={float(e_mj):.3f}")
+
+
+# --------------------------------------------------------------------- table3
+def bench_table3():
+    from repro.core import perf_model as pm
+    from repro.core.scenarios import SCENARIOS, SCENARIO_ORDER
+    from repro.core.workloads import WORKLOADS
+    mnv2 = WORKLOADS["mobilenetv2"]
+    print("\n## Table III — MobileNetV2 INT8 batch=1 (paper → reproduced)")
+    paper = {"monolithic": (4.7, 213, 1284), "basic_chiplet": (4.8, 208, 1026),
+             "ai_optimized": (4.1, 244, 860), "poor_integration": (6.2, 163, 1776)}
+    us, _ = _timeit(lambda: pm.predict(SCENARIOS["ai_optimized"], mnv2, 1))
+    for name in SCENARIO_ORDER:
+        r = pm.predict(SCENARIOS[name], mnv2, 1)
+        p = paper[name]
+        print(f"table3,{name},lat_ms={float(r.latency_ms):.2f}(paper {p[0]}),"
+              f"thpt={float(r.throughput_ips):.0f}(paper {p[1]}),"
+              f"power_mW={float(r.power_mw):.0f}(paper {p[2]}),"
+              f"tops_w={float(r.tops_per_w):.3f}")
+    b = pm.predict(SCENARIOS["basic_chiplet"], mnv2, 1)
+    a = pm.predict(SCENARIOS["ai_optimized"], mnv2, 1)
+    print(f"table3,improvements,lat=-{100*(1-float(a.latency_ms)/float(b.latency_ms)):.1f}%"
+          f"(paper -14.7%),thpt=+{100*(float(a.throughput_ips)/float(b.throughput_ips)-1):.1f}%"
+          f"(paper +17.3%),power=-{100*(1-float(a.power_mw)/float(b.power_mw)):.1f}%"
+          f"(paper -16.2%),topsw=+{100*(float(a.tops_per_w)/float(b.tops_per_w)-1):.1f}%"
+          f"(paper +40.1%)")
+    print(f"table3,model_eval_us,{us:.1f}")
+
+
+# ----------------------------------------------------------------------- fig2
+def bench_fig2():
+    from repro.core import perf_model as pm
+    from repro.core.scenarios import SCENARIOS, SCENARIO_ORDER
+    from repro.core.workloads import WORKLOADS, WORKLOAD_ORDER
+    mnv2 = WORKLOADS["mobilenetv2"]
+    print("\n## Fig 2(b) — throughput scaling, batch 1→32")
+    batches = [1, 2, 4, 8, 16, 32]
+    grid = pm.predict_grid([SCENARIOS[s] for s in SCENARIO_ORDER], [mnv2],
+                           batches)
+    for i, s in enumerate(SCENARIO_ORDER):
+        vals = ",".join(f"{float(v):.0f}" for v in grid.throughput_ips[i, 0])
+        print(f"fig2b,{s},ips@[1-32]=[{vals}]")
+    print("\n## Fig 2(d) — per-workload latency (ms)")
+    for w in WORKLOAD_ORDER:
+        row = {s: float(pm.predict(SCENARIOS[s], WORKLOADS[w], 1).latency_ms)
+               for s in SCENARIO_ORDER}
+        print(f"fig2d,{w}," + ",".join(f"{k}={v:.2f}" for k, v in row.items()))
+    print("\n## Fig 2(e) — AI-optimized vs basic chiplet (%)")
+    for w in WORKLOAD_ORDER:
+        b = pm.predict(SCENARIOS["basic_chiplet"], WORKLOADS[w], 1)
+        a = pm.predict(SCENARIOS["ai_optimized"], WORKLOADS[w], 1)
+        print(f"fig2e,{w},lat=-{100*(1-float(a.latency_ms)/float(b.latency_ms)):.1f}%,"
+              f"thpt=+{100*(float(a.throughput_ips)/float(b.throughput_ips)-1):.1f}%,"
+              f"power=-{100*(1-float(a.power_mw)/float(b.power_mw)):.1f}%,"
+              f"topsw=+{100*(float(a.tops_per_w)/float(b.tops_per_w)-1):.1f}%")
+    print("\n## Fig 2(f) — sub-5 ms real-time capability (AI-optimized)")
+    for w in WORKLOAD_ORDER:
+        r = pm.predict(SCENARIOS["ai_optimized"], WORKLOADS[w], 1)
+        print(f"fig2f,{w},lat_ms={float(r.latency_ms):.2f},"
+              f"meets_5ms={bool(r.realtime_ok)}")
+
+
+# ------------------------------------------------------------------------ soc
+def bench_soc():
+    from repro.core import build_soc, simulate
+    from repro.core.scenarios import SCENARIOS
+    from repro.core.workloads import WORKLOADS
+    print("\n## Time-stepped SoC simulator (I1+I2+I3+I4 composed)")
+    for s in ("basic_chiplet", "ai_optimized"):
+        soc = build_soc(SCENARIOS[s])
+        t0 = time.perf_counter()
+        out = simulate(soc, WORKLOADS["mobilenetv2"], arrival_rate_ips=200.0,
+                       duration_ms=200.0)
+        jax.block_until_ready(out["throughput_ips"])
+        dt = time.perf_counter() - t0
+        print(f"soc,{s},thpt={float(out['throughput_ips']):.0f}ips,"
+              f"E/inf={float(out['energy_mj_per_inf']):.2f}mJ,"
+              f"peakT={float(out['peak_temp_c']):.1f}C,"
+              f"migrations={int(out['migrations'])},sim_wall_s={dt:.2f}")
+
+
+# ------------------------------------------------------------------------ dse
+def bench_dse():
+    """Beyond-paper: vmapped design-space sweep + gradient co-design."""
+    from repro.core import perf_model as pm
+    from repro.core.scenarios import AI_OPTIMIZED
+    from repro.core.workloads import MOBILENET_V2
+    print("\n## Design-space exploration (vmapped sweep; gradient co-design)")
+    base = AI_OPTIMIZED.as_vector()
+    n = 4096
+    key = jax.random.key(0)
+    cand = base[None, :] * jax.random.uniform(key, (n, base.shape[0]),
+                                              minval=0.8, maxval=1.2)
+    wv = MOBILENET_V2.as_vector()
+
+    @jax.jit
+    def sweep(c):
+        return jax.vmap(lambda v: pm.predict_vec(v, wv, jnp.float32(1.0))
+                        .tops_per_w)(c)
+
+    us, eff = _timeit(sweep, cand)
+    best = int(jnp.argmax(eff))
+    print(f"dse,sweep,{n}_candidates,{us:.0f}us_total,"
+          f"{us/n*1e3:.1f}ns_per_design,best_tops_w={float(eff[best]):.3f}")
+
+    # projected gradient ascent within ±25 % engineering margins of the
+    # published design point (the feasible interposer/process box)
+    lo, hi = base * 0.75, base * 1.25
+
+    @jax.jit
+    def step(v):
+        g = jax.grad(lambda v: -pm.predict_vec(v, wv, jnp.float32(1.0))
+                     .tops_per_w)(v)
+        # co-designable knobs: link latency/bw, power envelope, efficiency,
+        # compression ratio — the interposer/process design space
+        mask = jnp.zeros_like(v).at[jnp.asarray([0, 1, 2, 4, 10])].set(1.0)
+        v = v - 0.05 * g * mask * jnp.abs(v)
+        return jnp.clip(v, jnp.minimum(lo, hi), jnp.maximum(lo, hi))
+
+    v = base
+    e0 = float(pm.predict_vec(v, wv, jnp.float32(1.0)).tops_per_w)
+    for _ in range(200):
+        v = step(v)
+    e1 = float(pm.predict_vec(v, wv, jnp.float32(1.0)).tops_per_w)
+    print(f"dse,grad_codesign,tops_w {e0:.4f}->{e1:.4f} within +/-25% design"
+          f" box (lat/bw/power/eff/compression tuned by gradient)")
+
+
+# -------------------------------------------------------------------- kernels
+def bench_kernels():
+    from repro.kernels import ops, ref
+    print("\n## Pallas kernels (interpret mode on CPU; TPU is the target)")
+    x = jax.random.normal(jax.random.key(0), (256, 1024), jnp.float32)
+    w = jax.random.normal(jax.random.key(1), (1024, 256), jnp.float32)
+    wq, s = ops.quantize_weight(w)
+    us, out = _timeit(lambda: ops.int8_matmul(x.astype(jnp.bfloat16), wq, s),
+                      n=3, warmup=1)
+    want = ref.int8_matmul_ref(x, wq, s)
+    rel = float(jnp.max(jnp.abs(out.astype(jnp.float32) - want))
+                / jnp.max(jnp.abs(want)))
+    print(f"kernels,int8_matmul,256x1024x256,{us:.0f}us,rel_err={rel:.4f}")
+    q = jax.random.normal(jax.random.key(2), (1, 4, 256, 64), jnp.float32)
+    us, out = _timeit(lambda: ops.flash_attention(q, q, q, causal=True),
+                      n=3, warmup=1)
+    err = float(jnp.max(jnp.abs(out - ref.flash_attention_ref(q, q, q))))
+    print(f"kernels,flash_attention,B1H4S256D64,{us:.0f}us,err={err:.2e}")
+    g = jax.random.normal(jax.random.key(3), (1 << 16,), jnp.float32)
+    us, (qq, ss, nn) = _timeit(lambda: ops.quantize_blocks(g), n=3, warmup=1)
+    print(f"kernels,quantize_blocks,64Ktokens,{us:.0f}us,"
+          f"payload_ratio={float((qq.size + 4*ss.size)/(4*g.size)):.3f}")
+
+
+# ------------------------------------------------------------------- roofline
+def bench_roofline():
+    print("\n## Roofline (from dry-run artifacts, single-pod 256 chips)")
+    try:
+        from repro.launch.roofline import build_table
+        table = build_table()
+    except Exception as e:  # noqa: BLE001
+        print(f"roofline,unavailable,{e}")
+        return
+    ok = 0
+    for key, row in table.items():
+        if row["status"] != "ok":
+            print(f"roofline,{key},{row['status']}")
+            continue
+        ok += 1
+        print(f"roofline,{key},bound={row['dominant']},"
+              f"compute_s={row['compute_s']:.3f},memory_s={row['memory_s']:.3f},"
+              f"collective_s={row['collective_s']:.3f},"
+              f"useful={row['useful_ratio']:.2f},"
+              f"fraction={row['roofline_fraction']:.2f},"
+              f"peak_GiB={row['peak_gib']:.1f}")
+    print(f"roofline,cells_ok,{ok}")
+
+
+SECTIONS = {
+    "table1": bench_table1,
+    "table3": bench_table3,
+    "fig2": bench_fig2,
+    "soc": bench_soc,
+    "dse": bench_dse,
+    "kernels": bench_kernels,
+    "roofline": bench_roofline,
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of " + ",".join(SECTIONS))
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(SECTIONS)
+    t0 = time.time()
+    for n in names:
+        SECTIONS[n]()
+    print(f"\nbenchmarks done in {time.time()-t0:.1f}s")
+
+
+
+
+# -------------------------------------------------------------- ablations
+def bench_ablations():
+    """Beyond-paper: attribute the AI-optimized gains to each §II mechanism.
+
+    The paper reports the joint effect (−14.7 % latency); the reconstructed
+    model lets us toggle I1 (DVFS boost), I2a (prefetch overlap),
+    I2b (compression) independently — an ablation the paper doesn't run.
+    """
+    import dataclasses
+    from repro.core import perf_model as pm
+    from repro.core.scenarios import AI_OPTIMIZED, BASIC_CHIPLET
+    from repro.core.workloads import MOBILENET_V2
+    print("\n## Ablations — which mechanism buys what (MobileNetV2, batch 1)")
+    basic = pm.predict(BASIC_CHIPLET, MOBILENET_V2, 1)
+
+    variants = {
+        "full_ai_optimized": {},
+        "no_dvfs_boost(I1)": dict(dvfs_adaptive=False, dvfs_boost_max=0.0),
+        "no_prefetch(I2a)": dict(prefetch_overlap=False),
+        "no_compression(I2b)": dict(compression_ratio=1.0),
+        "silicon_only(no I1+I2)": dict(dvfs_adaptive=False, dvfs_boost_max=0.0,
+                                       prefetch_overlap=False,
+                                       compression_ratio=1.0),
+    }
+    for name, kw in variants.items():
+        s = dataclasses.replace(AI_OPTIMIZED, **kw)
+        r = pm.predict(s, MOBILENET_V2, 1)
+        dlat = 100 * (1 - float(r.latency_ms) / float(basic.latency_ms))
+        dtw = 100 * (float(r.tops_per_w) / float(basic.tops_per_w) - 1)
+        print(f"ablation,{name},lat_ms={float(r.latency_ms):.2f},"
+              f"vs_basic_lat=-{dlat:.1f}%,vs_basic_topsw=+{dtw:.1f}%")
+    # thermal mechanism (I4) shows up at sustained batch, not batch-1
+    from repro.core.scenarios import SCENARIOS
+    import jax.numpy as jnp
+    grid = pm.predict_grid([AI_OPTIMIZED,
+                            dataclasses.replace(AI_OPTIMIZED, name="react",
+                                                dvfs_adaptive=False,
+                                                dvfs_boost_max=0.0)],
+                           [MOBILENET_V2], [32])
+    ai32, re32 = float(grid.throughput_ips[0, 0, 0]), float(
+        grid.throughput_ips[1, 0, 0])
+    print(f"ablation,migration_at_batch32(I4),ai={ai32:.0f}ips,"
+          f"reactive={re32:.0f}ips,delta=+{100*(ai32/re32-1):.1f}%")
+
+
+SECTIONS["ablations"] = bench_ablations
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Core — the paper's contribution: chiplet SoC models and orchestration.
+
+Faithful layer (paper §II-§V):
+  scenarios / workloads    Table I / Table II
+  perf_model               reconstructed closed-form simulator (Table III, Fig 2)
+  dvfs / ucie / thermal / security   innovations I1-I4
+  soc                      time-stepped lax.scan SoC simulator
+
+Beyond-paper layer:
+  planner                  roofline-driven plan selection for the TPU framework
+"""
+
+from repro.core.perf_model import PerfResult, predict, predict_grid, predict_noisy
+from repro.core.planner import PlanDecision, RooflineTerms, plan
+from repro.core.scenarios import (
+    AI_OPTIMIZED,
+    BASIC_CHIPLET,
+    MONOLITHIC,
+    POOR_INTEGRATION,
+    SCENARIO_ORDER,
+    SCENARIOS,
+    Scenario,
+    get_scenario,
+)
+from repro.core.soc import SoCConfig, build_soc, simulate
+from repro.core.workloads import (
+    MOBILENET_V2,
+    REALTIME_VIDEO,
+    RESNET_50,
+    WORKLOAD_ORDER,
+    WORKLOADS,
+    Workload,
+    get_workload,
+)
+
+__all__ = [
+    "AI_OPTIMIZED",
+    "BASIC_CHIPLET",
+    "MOBILENET_V2",
+    "MONOLITHIC",
+    "POOR_INTEGRATION",
+    "PerfResult",
+    "PlanDecision",
+    "REALTIME_VIDEO",
+    "RESNET_50",
+    "RooflineTerms",
+    "SCENARIOS",
+    "SCENARIO_ORDER",
+    "Scenario",
+    "SoCConfig",
+    "WORKLOADS",
+    "WORKLOAD_ORDER",
+    "Workload",
+    "build_soc",
+    "get_scenario",
+    "get_workload",
+    "plan",
+    "predict",
+    "predict_grid",
+    "predict_noisy",
+    "simulate",
+]

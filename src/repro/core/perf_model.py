@@ -1,0 +1,201 @@
+"""Closed-form chiplet SoC performance model (the paper's evaluation methodology).
+
+Reconstruction of the paper's Python simulator from its Tables I-III (the paper
+does not publish equations; DESIGN.md §2 derives and validates this model).
+
+Per (scenario s, workload w, batch b):
+
+    T_compute(b) = alpha * C_w * chi_w * eps_s * (1 + (b-1)*eta_w) / (clock*boost)
+    T_comm(b)    = (ell_s/1000 + 8*S_w*b*cr_s/B_s) * rho_s          [ms]
+    T_total(b)   = T_compute(b) + [no prefetch overlap] * T_comm(b)
+    u(b)         = 1 - (1-u0)/b                      (NPU duty cycle)
+    clock        = min(1, tau_s/u(b)) unless predictive migration holds it at 1
+    P(b)         = P0_s*v_s^2*(sigma_s + (1-sigma_s)*u(b)*clock) + Pc_s*T_comm(b)
+    thpt         = 1000*b/T_total ;  TOPS/W = thpt*GOP/P ;  E = P*T_total/b
+
+Two constants are calibrated once against the Monolithic row of Table III
+(DESIGN.md §2): ALPHA (compute scale) and BASE_UTIL (batch-1 duty cycle). The
+AI-optimized scenario's extra mechanisms (prefetch overlap, compression,
+DVFS power-headroom boost, migration-backed thermal headroom) are the paper's
+§II innovations I1/I2/I4 and are controlled by flags on the Scenario.
+
+Everything is pure JAX: jit-, vmap- and grad-compatible. The design-space
+explorer vmaps `predict_vec` over thousands of candidate scenario vectors and
+can differentiate the model w.r.t. design parameters.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.scenarios import Scenario
+from repro.core.workloads import Workload
+
+# Calibrated once on the Monolithic batch-1 MobileNetV2 row (4.7 ms):
+#   ALPHA = 4.7 / (3.5 * 0.8)
+ALPHA = 1.6785714285714286
+# Calibrated batch-1 NPU duty cycle (power model; fits all 4 scenario rows):
+BASE_UTIL = 0.75
+# DVFS boost engages fully once power headroom reaches this fraction (I1).
+DVFS_HEADROOM_FULL = 0.10
+# Predictive thermal management (I4) adds migration headroom on top of the
+# throttle threshold: load shifts to the second NPU chiplet before derating.
+MIGRATION_HEADROOM = 0.25
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PerfResult:
+    """Model outputs; every field is a jnp array of the broadcast batch shape."""
+
+    latency_ms: jnp.ndarray       # end-to-end per-batch latency
+    throughput_ips: jnp.ndarray   # images (inferences) per second
+    power_mw: jnp.ndarray         # average power draw
+    tops_per_w: jnp.ndarray       # paper's efficiency metric
+    energy_mj: jnp.ndarray        # energy per inference, millijoule
+    utilization: jnp.ndarray      # NPU duty cycle u(b)
+    clock_scale: jnp.ndarray      # thermal derating factor (1 = no throttle)
+    t_compute_ms: jnp.ndarray
+    t_comm_ms: jnp.ndarray        # raw (pre-overlap) transfer time
+    realtime_ok: jnp.ndarray      # bool: per-image latency meets the deadline
+
+    def tree_flatten(self):
+        return (
+            tuple(getattr(self, f.name) for f in dataclasses.fields(self)),
+            None,
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+
+def predict_vec(
+    scen_vec: jnp.ndarray,
+    work_vec: jnp.ndarray,
+    batch_size: jnp.ndarray,
+    *,
+    alpha: float = ALPHA,
+    base_util: float = BASE_UTIL,
+    realtime_deadline_ms: float = 5.0,
+) -> PerfResult:
+    """Vector-encoded model (for vmapped DSE). See Scenario.as_vector for layout."""
+    (ell, bw, p0, pc, eps, tau, sigma, v, rho, overlap, cr, boost_max) = [
+        scen_vec[i] for i in range(12)
+    ]
+    c, s_mb, chi, eta, gops = [work_vec[i] for i in range(5)]
+    b = jnp.asarray(batch_size, jnp.float32)
+
+    # --- utilization & thermal derating (I4) ---------------------------------
+    u = 1.0 - (1.0 - base_util) / b
+    # Predictive migration raises the effective throttle ceiling (AI-optimized
+    # keeps clock=1 while a reactive design derates once u exceeds tau).
+    tau_eff = tau + MIGRATION_HEADROOM * (boost_max > 0.0)
+    clock = jnp.minimum(1.0, tau_eff / jnp.maximum(u, 1e-6))
+
+    # --- communication (I2) ---------------------------------------------------
+    t_comm = (ell / 1000.0 + 8.0 * s_mb * b * cr / bw) * rho  # ms
+
+    # --- power (pre-boost, to derive DVFS headroom non-self-referentially) ---
+    p_nominal = p0 * v**2 * (sigma + (1.0 - sigma) * u * clock) + pc * t_comm
+    headroom = 1.0 - p_nominal / (p0 * v**2)
+    boost = 1.0 + boost_max * jnp.clip(headroom / DVFS_HEADROOM_FULL, 0.0, 1.0)
+
+    # --- compute --------------------------------------------------------------
+    t_compute = alpha * c * chi * eps * (1.0 + (b - 1.0) * eta) / (clock * boost)
+    t_total = t_compute + (1.0 - overlap) * t_comm
+
+    thpt = 1000.0 * b / t_total
+    power = p_nominal  # boost spends the headroom; envelope unchanged
+    tops_per_w = (thpt * gops * 1e9) / (power / 1000.0) / 1e12
+    energy_mj = power * t_total / b / 1000.0  # mW*ms = uJ; /1000 = mJ
+    per_image_ms = t_total / b
+
+    return PerfResult(
+        latency_ms=t_total,
+        throughput_ips=thpt,
+        power_mw=power,
+        tops_per_w=tops_per_w,
+        energy_mj=energy_mj,
+        utilization=u,
+        clock_scale=clock,
+        t_compute_ms=t_compute,
+        t_comm_ms=t_comm,
+        realtime_ok=per_image_ms <= realtime_deadline_ms,
+    )
+
+
+def predict(
+    scenario: Scenario,
+    workload: Workload,
+    batch_size: int | jnp.ndarray = 1,
+    *,
+    alpha: float = ALPHA,
+    base_util: float = BASE_UTIL,
+) -> PerfResult:
+    """Typed front-end over `predict_vec`."""
+    return predict_vec(
+        scenario.as_vector(),
+        workload.as_vector(),
+        jnp.asarray(batch_size, jnp.float32),
+        alpha=alpha,
+        base_util=base_util,
+        realtime_deadline_ms=workload.realtime_deadline_ms,
+    )
+
+
+def predict_grid(
+    scenarios: Sequence[Scenario],
+    workloads: Sequence[Workload],
+    batch_sizes: Sequence[int],
+) -> PerfResult:
+    """Full (n_scenarios, n_workloads, n_batches) grid in one vmapped call."""
+    sv = jnp.stack([s.as_vector() for s in scenarios])          # (S, 12)
+    wv = jnp.stack([w.as_vector() for w in workloads])          # (W, 5)
+    bs = jnp.asarray(batch_sizes, jnp.float32)                  # (B,)
+    fn = jax.vmap(  # over scenarios
+        jax.vmap(  # over workloads
+            jax.vmap(predict_vec, in_axes=(None, None, 0)),  # over batches
+            in_axes=(None, 0, None),
+        ),
+        in_axes=(0, None, None),
+    )
+    return fn(sv, wv, bs)
+
+
+def predict_noisy(
+    key: jax.Array,
+    scenario: Scenario,
+    workload: Workload,
+    batch_size: int = 1,
+    *,
+    n_runs: int = 32,
+    noise_frac: float = 0.05,
+) -> PerfResult:
+    """Monte-Carlo runs with multiplicative gaussian measurement noise.
+
+    The paper reports single-run numbers with +/-0.2-0.3 ms spread; this models
+    that spread so tests can assert reproduction within the paper's own bars.
+    """
+    base = predict(scenario, workload, batch_size)
+    eps_lat, eps_pow = jax.random.normal(key, (2, n_runs))
+    lat = base.latency_ms * (1.0 + noise_frac * eps_lat)
+    pow_ = base.power_mw * (1.0 + noise_frac * eps_pow)
+    b = jnp.asarray(batch_size, jnp.float32)
+    thpt = 1000.0 * b / lat
+    return dataclasses.replace(
+        base,
+        latency_ms=lat,
+        power_mw=pow_,
+        throughput_ips=thpt,
+        tops_per_w=(thpt * workload.gops_per_inference * 1e9)
+        / (pow_ / 1000.0)
+        / 1e12,
+        energy_mj=pow_ * lat / b / 1000.0,
+        realtime_ok=(lat / b) <= workload.realtime_deadline_ms,
+    )

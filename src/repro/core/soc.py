@@ -1,0 +1,268 @@
+"""Time-stepped chiplet SoC simulator — composes I1 (DVFS), I2 (UCIe),
+I3 (security), I4 (thermal/migration) over the paper's floorplan.
+
+The paper's SoC (Fig 1): on a 30x30 mm interposer,
+  * 5x5 mm  7 nm RISC-V CPU chiplet (custom vector extensions)
+  * 2x 6x4 mm 5 nm NPU chiplets, 15 TOPS INT8 each
+  * 16 GB HBM3 stack (819 GB/s)
+  * 7x3 mm I/O + power-management chiplet
+  * 3x2 mm security controller
+
+`simulate()` runs a `lax.scan` over fixed ticks (default 0.1 ms): requests
+arrive, their activations cross the UCIe link (compressed/streamed per
+scenario, AEAD-sealed per the security config), the CPU dispatches work across
+the two NPUs, the DVFS controller retunes per-chiplet P-states, and the RC
+thermal network integrates — migrating load off a hot NPU when the predictor
+fires. The closed-form model (perf_model.py) is the calibrated summary of this
+machine; tests assert the two agree on steady-state throughput.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dvfs as dvfs_mod
+from repro.core import thermal as thermal_mod
+from repro.core import ucie as ucie_mod
+from repro.core.perf_model import ALPHA
+from repro.core.scenarios import Scenario
+from repro.core.security import SecurityConfig, aead_overhead, attestation_latency_us
+from repro.core.workloads import Workload
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipletSpec:
+    name: str
+    kind: str                  # cpu | npu | mem | io | sec
+    area_mm2: float
+    peak_dyn_mw: float
+    static_mw: float
+    r_k_per_w: float
+    c_j_per_k: float
+
+
+def paper_floorplan(scenario: Scenario) -> Tuple[ChipletSpec, ...]:
+    """The paper's five-chiplet SoC, with the scenario's power envelope split
+    across dies (NPUs dominate; ratios follow the floorplan areas and node
+    maturity). Static share follows Table I's static_power_ratio."""
+    p0 = scenario.base_power_mw
+    st = scenario.static_power_ratio
+    # dynamic-share split: cpu .20, npu .30 each, mem .12, io .06, sec .02
+    shares = {"cpu": 0.20, "npu0": 0.30, "npu1": 0.30, "hbm": 0.12, "io": 0.06,
+              "sec": 0.02}
+    dyn = p0 * (1.0 - st)
+    stat = p0 * st
+    mk = lambda n, k, a, r, c: ChipletSpec(  # noqa: E731
+        n, k, a, dyn * shares[n], stat * shares[n], r, c
+    )
+    return (
+        mk("cpu", "cpu", 25.0, 9.0, 0.9),
+        mk("npu0", "npu", 24.0, 8.0, 0.8),
+        mk("npu1", "npu", 24.0, 8.0, 0.8),
+        mk("hbm", "mem", 121.0, 6.0, 3.0),
+        mk("io", "io", 21.0, 12.0, 0.7),
+        mk("sec", "sec", 6.0, 20.0, 0.3),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class SoCConfig:
+    scenario: Scenario
+    chiplets: Tuple[ChipletSpec, ...]
+    ucie: ucie_mod.UCIeConfig
+    dvfs: dvfs_mod.DVFSConfig
+    thermal: thermal_mod.ThermalConfig
+    security: SecurityConfig
+    tick_ms: float = 0.1
+
+
+def build_soc(scenario: Scenario, *, security: bool = True) -> SoCConfig:
+    chiplets = paper_floorplan(scenario)
+    bw = scenario.link_bandwidth_gbps
+    mono = scenario.is_monolithic
+    return SoCConfig(
+        scenario=scenario,
+        chiplets=chiplets,
+        ucie=ucie_mod.UCIeConfig(
+            bandwidth_gbps=1e6 if mono else bw,
+            latency_us=scenario.link_latency_us,
+            streaming=scenario.prefetch_overlap,
+            compression_ratio=scenario.compression_ratio,
+        ),
+        dvfs=dvfs_mod.DVFSConfig(
+            power_budget_mw=scenario.base_power_mw,
+            adaptive=scenario.dvfs_adaptive,
+        ),
+        thermal=thermal_mod.ThermalConfig(
+            r_k_per_w=tuple(c.r_k_per_w for c in chiplets),
+            c_j_per_k=tuple(c.c_j_per_k for c in chiplets),
+            predictive=scenario.dvfs_adaptive,
+        ),
+        security=SecurityConfig(enabled=security and not mono),
+        tick_ms=0.1,
+    )
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SimState:
+    dvfs: dvfs_mod.DVFSState
+    thermal: thermal_mod.ThermalState
+    link: ucie_mod.LinkState
+    npu_queue_ms: jnp.ndarray     # (n_chiplets,) work queued per die (NPU slots used)
+    staged_images: jnp.ndarray    # () images whose activations crossed the link
+    completed: jnp.ndarray        # () f32 images finished
+    busy_ms: jnp.ndarray          # () cumulative NPU busy time
+    energy_mj: jnp.ndarray        # () total SoC energy
+    queue_integral: jnp.ndarray   # () sum of queue depth (Little's-law latency)
+
+    def tree_flatten(self):
+        return (
+            tuple(getattr(self, f.name) for f in dataclasses.fields(self)),
+            None,
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+
+def _init_state(soc: SoCConfig) -> SimState:
+    n = len(soc.chiplets)
+    z = jnp.zeros((), jnp.float32)
+    return SimState(
+        dvfs=dvfs_mod.init_state(n, soc.dvfs),
+        thermal=thermal_mod.init_state(soc.thermal),
+        link=ucie_mod.init_link(),
+        npu_queue_ms=jnp.zeros((n,), jnp.float32),
+        staged_images=z,
+        completed=z,
+        busy_ms=z,
+        energy_mj=z,
+        queue_integral=z,
+    )
+
+
+def simulate(
+    soc: SoCConfig,
+    workload: Workload,
+    *,
+    arrival_rate_ips: float,
+    duration_ms: float = 200.0,
+) -> Dict[str, jnp.ndarray]:
+    """Run the SoC against a steady request stream; return summary metrics."""
+    sc = soc.scenario
+    n = len(soc.chiplets)
+    npu_mask = jnp.asarray([c.kind == "npu" for c in soc.chiplets])
+    n_npu = int(npu_mask.sum())
+    peak_dyn = jnp.asarray([c.peak_dyn_mw for c in soc.chiplets], jnp.float32)
+    static = jnp.asarray([c.static_mw for c in soc.chiplets], jnp.float32)
+
+    # Per-image NPU compute cost at nominal clock (same calibration as the
+    # closed-form model; ALPHA folds ISA/runtime overheads into NPU-ms).
+    img_ms = ALPHA * workload.base_compute_ms * workload.complexity_factor \
+        * sc.efficiency_factor
+    img_bytes = workload.input_size_mb * 1e6
+    ticks = int(round(duration_ms / soc.tick_ms))
+    arrivals_per_tick = arrival_rate_ips * soc.tick_ms / 1e3
+
+    def tick_fn(state: SimState, _):
+        # --- I2/I3: activations cross the UCIe link (AEAD-sealed) ------------
+        payload = arrivals_per_tick * img_bytes
+        link, (drained, occupancy) = ucie_mod.link_tick(
+            state.link, payload, soc.ucie, soc.tick_ms
+        )
+        aead_t, aead_e = aead_overhead(payload, soc.security)
+        # protocol overhead stretches effective service (Table I column)
+        staged = state.staged_images + drained / jnp.maximum(
+            img_bytes * soc.ucie.compression_ratio
+            / ucie_mod.protocol_efficiency(jnp.asarray(1.0 if soc.ucie.streaming else 0.0)),
+            1.0,
+        ) / sc.protocol_overhead
+
+        # --- CPU dispatch: stage ready images onto the shorter NPU queue -----
+        ready = staged - state.completed - (
+            jnp.sum(state.npu_queue_ms * npu_mask) / img_ms
+        )
+        ready = jnp.maximum(ready, 0.0)
+        npu_q = state.npu_queue_ms
+        # split across NPUs inversely to queue depth
+        qd = jnp.where(npu_mask, npu_q, jnp.inf)
+        inv = jnp.where(npu_mask, 1.0 / (1.0 + qd), 0.0)
+        frac = inv / jnp.maximum(jnp.sum(inv), 1e-9)
+        npu_q = npu_q + frac * ready * img_ms
+
+        # --- I1: DVFS picks per-chiplet P-states ------------------------------
+        demand = jnp.where(
+            npu_mask,
+            jnp.clip(npu_q / (n_npu * img_ms), 0.0, 1.2),
+            occupancy * (~npu_mask),
+        )
+        dvfs_state, (freq, power_mw, util) = dvfs_mod.step(
+            state.dvfs, demand, soc.dvfs, peak_dyn, static, soc.tick_ms
+        )
+
+        # --- I4: thermal integrate + predictive migration ---------------------
+        thermal_state, (clock, npu_q) = thermal_mod.step(
+            state.thermal, power_mw, npu_mask, npu_q, soc.thermal, soc.tick_ms
+        )
+
+        # --- service ----------------------------------------------------------
+        service = jnp.where(npu_mask, soc.tick_ms * freq * clock, 0.0)
+        done_ms = jnp.minimum(npu_q, service)
+        npu_q = npu_q - done_ms
+        completed = state.completed + jnp.sum(done_ms) / img_ms
+        busy = state.busy_ms + jnp.sum(done_ms)
+
+        energy = (
+            state.energy_mj
+            + jnp.sum(power_mw) * soc.tick_ms / 1e3
+            + aead_e
+        )
+        queue_integral = state.queue_integral + jnp.sum(npu_q) / img_ms
+
+        new_state = SimState(
+            dvfs=dvfs_state,
+            thermal=thermal_state,
+            link=link,
+            npu_queue_ms=npu_q,
+            staged_images=staged,
+            completed=completed,
+            busy_ms=busy,
+            energy_mj=energy,
+            queue_integral=queue_integral,
+        )
+        obs = (jnp.max(thermal_state.temp_c), jnp.sum(power_mw))
+        return new_state, obs
+
+    state0 = _init_state(soc)
+    final, (temps, powers) = jax.lax.scan(tick_fn, state0, None, length=ticks)
+
+    dur_s = duration_ms / 1e3
+    throughput = final.completed / dur_s
+    avg_queue = final.queue_integral / ticks
+    # Little's law + link/attestation offsets for end-to-end latency.
+    latency_ms = (
+        jnp.where(throughput > 0, avg_queue / (throughput / 1e3), 0.0)
+        + img_ms
+        + (0.0 if sc.prefetch_overlap else ucie_mod.transfer(
+            jnp.asarray(img_bytes, jnp.float32), soc.ucie)[0] / 1e3)
+    )
+    return {
+        "throughput_ips": throughput,
+        "latency_ms": latency_ms,
+        "avg_power_mw": jnp.mean(powers),
+        "peak_temp_c": jnp.max(temps),
+        "energy_mj": final.energy_mj,
+        "energy_mj_per_inf": final.energy_mj / jnp.maximum(final.completed, 1.0),
+        "migrations": final.thermal.migrations,
+        "throttle_ticks": final.thermal.throttle_ticks,
+        "attestation_us": attestation_latency_us(n, soc.security),
+        "completed": final.completed,
+        "npu_utilization": final.busy_ms / (n_npu * duration_ms),
+    }

@@ -1,0 +1,131 @@
+"""I4 — RC thermal network + sensor-driven predictive load migration (paper §II).
+
+Each chiplet is one RC node (Cauer-style compact model, cf. HotSpot [14]):
+
+    C_i dT_i/dt = P_i - (T_i - T_amb)/R_i + sum_j G_ij (T_j - T_i)
+
+with G the interposer lateral-coupling conductance matrix. Forward-Euler
+integration per simulator tick (ticks are 0.1 ms, far below the thermal time
+constants R*C ~ 10-100 ms, so Euler is stable and accurate).
+
+The paper's predictive policy: per-chiplet sensors extrapolate T over a horizon
+h; when an NPU's *predicted* temperature crosses T_migrate, a fraction of its
+load shifts to the cooler NPU chiplet *before* any derating is needed.
+Reactive designs instead clip the clock once T crosses T_throttle.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ThermalConfig:
+    r_k_per_w: Tuple[float, ...]       # per-chiplet junction->ambient resistance
+    c_j_per_k: Tuple[float, ...]       # per-chiplet thermal capacitance
+    coupling_w_per_k: float = 0.05     # lateral interposer conductance (uniform)
+    t_ambient_c: float = 45.0
+    t_throttle_c: float = 95.0         # reactive derating point
+    t_critical_c: float = 105.0
+    t_migrate_c: float = 88.0          # predictive migration point
+    predict_horizon_ms: float = 5.0
+    migrate_fraction: float = 0.25     # load moved per migration event
+    predictive: bool = True            # False = reactive throttling only
+
+    def arrays(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        return (
+            jnp.asarray(self.r_k_per_w, jnp.float32),
+            jnp.asarray(self.c_j_per_k, jnp.float32),
+        )
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ThermalState:
+    temp_c: jnp.ndarray        # (n_chiplets,)
+    migrations: jnp.ndarray    # () int32 cumulative migration events
+    throttle_ticks: jnp.ndarray  # () int32 ticks spent derated
+
+    def tree_flatten(self):
+        return ((self.temp_c, self.migrations, self.throttle_ticks), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+
+def init_state(cfg: ThermalConfig) -> ThermalState:
+    n = len(cfg.r_k_per_w)
+    return ThermalState(
+        temp_c=jnp.full((n,), cfg.t_ambient_c, jnp.float32),
+        migrations=jnp.zeros((), jnp.int32),
+        throttle_ticks=jnp.zeros((), jnp.int32),
+    )
+
+
+def _dTdt(temp: jnp.ndarray, power_w: jnp.ndarray, cfg: ThermalConfig) -> jnp.ndarray:
+    r, c = cfg.arrays()
+    n = temp.shape[0]
+    # Uniform lateral coupling: each pair exchanges G*(Tj - Ti).
+    lateral = cfg.coupling_w_per_k * (jnp.sum(temp) - n * temp)
+    return (power_w - (temp - cfg.t_ambient_c) / r + lateral) / c
+
+
+def step(
+    state: ThermalState,
+    power_mw: jnp.ndarray,
+    npu_mask: jnp.ndarray,
+    npu_load: jnp.ndarray,
+    cfg: ThermalConfig,
+    tick_ms: float,
+) -> Tuple[ThermalState, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """One thermal tick.
+
+    Args:
+      power_mw: (n,) per-chiplet power this tick.
+      npu_mask: (n,) bool — which chiplets are NPUs (migration candidates).
+      npu_load: (n,) current normalized load per chiplet (NPUs carry the AI work).
+
+    Returns (state, (clock_scale, new_npu_load)):
+      clock_scale: (n,) thermal derating multiplier in (0, 1];
+      new_npu_load: (n,) load after any predictive migration.
+    """
+    dt_s = tick_ms / 1e3
+    deriv = _dTdt(state.temp_c, power_mw / 1e3, cfg)
+    temp = state.temp_c + deriv * dt_s
+
+    # --- predictive migration (I4) -------------------------------------------
+    predicted = temp + deriv * (cfg.predict_horizon_ms / 1e3)
+    hot = npu_mask & (predicted > cfg.t_migrate_c) & (npu_load > 0.0)
+    any_hot = jnp.any(hot) & jnp.asarray(cfg.predictive)
+    # Donor: hottest loaded NPU. Receiver: coolest NPU (can be same if only one).
+    npu_temp = jnp.where(npu_mask, predicted, -jnp.inf)
+    donor = jnp.argmax(jnp.where(hot, npu_temp, -jnp.inf))
+    recv_temp = jnp.where(npu_mask, predicted, jnp.inf)
+    receiver = jnp.argmin(recv_temp)
+    do_migrate = any_hot & (receiver != donor)
+    moved = jnp.where(do_migrate, npu_load[donor] * cfg.migrate_fraction, 0.0)
+    new_load = npu_load.at[donor].add(-moved).at[receiver].add(moved)
+
+    # --- reactive derating (what basic/poor integration fall back to) --------
+    over = jnp.clip(
+        (temp - cfg.t_throttle_c) / (cfg.t_critical_c - cfg.t_throttle_c),
+        0.0,
+        1.0,
+    )
+    clock_scale = 1.0 - 0.5 * over  # linear derate, floor at 0.5x
+    throttled = jnp.any(over > 0.0)
+
+    return (
+        ThermalState(
+            temp_c=temp,
+            migrations=state.migrations + do_migrate.astype(jnp.int32),
+            throttle_ticks=state.throttle_ticks + throttled.astype(jnp.int32),
+        ),
+        (clock_scale, new_load),
+    )

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the compute hot-spots (validated interpret=True):
+
+  int8_matmul      — the paper's 15 TOPS INT8 NPU datapath on the MXU
+  flash_attention  — blockwise online-softmax attention (prefill hot-spot)
+  quantize         — I2 compression-aware transfer payloads (gradient sync)
+
+Each has a pure-jnp oracle in ref.py; ops.py holds the jit'd wrappers.
+"""
+
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

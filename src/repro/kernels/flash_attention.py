@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: blockwise online-softmax attention (causal + window).
+
+VMEM tiling: (block_q × D) query tile resident; K/V stream through in
+(block_k × D) tiles along the innermost grid dim; the m/l/acc running
+statistics live in VMEM scratch across the K sweep (FlashAttention-2
+schedule adapted to the MXU: both matmuls per tile are 128-aligned).
+The causal/window structure prunes dead tiles via `pl.when` on block
+indices, so the kernel does ~half the tiles of a dense-masked pass.
+
+Layout: q/k/v (B, H, S, D) — B·H is the embarrassingly-parallel leading
+grid dim; q blocks next; k blocks innermost ('arbitrary').
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, window: int, block_q: int,
+            block_k: int, n_k: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+
+    # tile liveness: any (q,k) pair in range?
+    live = True
+    if causal:
+        live = jnp.logical_and(live, iq * block_q + block_q - 1 >= ik * block_k)
+    if window > 0:
+        live = jnp.logical_and(
+            live, iq * block_q <= ik * block_k + block_k - 1 + window)
+
+    @pl.when(live)
+    def _tile():
+        q = q_ref[0, ...].astype(jnp.float32)       # (block_q, D)
+        k = k_ref[0, ...].astype(jnp.float32)       # (block_k, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+        ok = jnp.ones((block_q, block_k), jnp.bool_)
+        if causal:
+            ok &= q_pos >= k_pos
+        if window > 0:
+            ok &= q_pos - k_pos < window
+        s = jnp.where(ok, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        m_ref[...] = m_new
+        v = v_ref[0, ...].astype(jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+
+    @pl.when(ik == n_k - 1)
+    def _done():
+        o_ref[0, ...] = (acc_ref[...]
+                         / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "scale", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    scale=None, block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False):
+    """q/k/v: (B, H, S, D) → (B, H, S, D)."""
+    b, h, sq, d = q.shape
+    sk = k.shape[2]
+    scale = float(scale if scale is not None else d ** -0.5)
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    assert sq % block_q == 0 and sk % block_k == 0
+    n_k = sk // block_k
+    grid = (b * h, sq // block_q, n_k)
+    qf = q.reshape(b * h, sq, d)
+    kf = k.reshape(b * h, sk, d)
+    vf = v.reshape(b * h, sk, d)
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal, window=window,
+                          block_q=block_q, block_k=block_k, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda g, i, j: (g, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda g, i, j: (g, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda g, i, j: (g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda g, i, j: (g, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # m
+            pltpu.VMEM((block_q, 1), jnp.float32),   # l
+            pltpu.VMEM((block_q, d), jnp.float32),   # acc
+        ],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(qf, kf, vf)
+    return out.reshape(b, h, sq, d)

@@ -1,0 +1,65 @@
+"""Pallas TPU kernel: weight-only INT8 × bf16 matmul with per-channel scales.
+
+The paper's NPU chiplets are 15 TOPS INT8 (§II); this is that datapath on the
+MXU: int8 weights are upcast in-register on the way into the systolic array,
+accumulation is fp32 in a VMEM scratch tile, and the per-output-channel scale
+is fused into the epilogue. Block sizes are MXU-aligned (multiples of 128 on
+M/N; 512 on K keeps the (bm·bk + bk·bn + bm·bn) working set ≈ 1.4 MiB of
+VMEM at the 128×512×128 default — well inside the ~16 MiB/core budget while
+deep enough to amortize the accumulate loop).
+
+Grid: (M/bm, N/bn, K/bk), K innermost ('arbitrary') so the fp32 accumulator
+tile lives across the K sweep; M/N are 'parallel'.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *, n_k: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]                                  # (bm, bk) bf16
+    w = w_ref[...].astype(jnp.bfloat16)             # (bk, bn) int8 → bf16 (MXU)
+    acc_ref[...] += jax.lax.dot(x, w, preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _done():
+        o_ref[...] = (acc_ref[...] * s_ref[...][None, :]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def int8_matmul(x: jnp.ndarray, w_q: jnp.ndarray, scales: jnp.ndarray,
+                *, bm: int = 128, bn: int = 128, bk: int = 512,
+                interpret: bool = False) -> jnp.ndarray:
+    """x (M,K) bf16/f32 · w_q (K,N) int8 · scales (N,) f32 → (M,N) x.dtype."""
+    m, k = x.shape
+    k2, n = w_q.shape
+    assert k == k2 and scales.shape == (n,), (x.shape, w_q.shape, scales.shape)
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    n_k = k // bk
+    grid = (m // bm, n // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, h: (i, h)),
+            pl.BlockSpec((bk, bn), lambda i, j, h: (h, j)),
+            pl.BlockSpec((bn,), lambda i, j, h: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, h: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(x, w_q, scales)

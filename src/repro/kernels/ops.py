@@ -1,0 +1,55 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+`interpret` defaults to True off-TPU so every call path works (and is
+validated) on CPU; on TPU the compiled kernels run natively.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as ref_mod
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.int8_matmul import int8_matmul as _int8_mm
+from repro.kernels.quantize import dequantize_blocks as _deq
+from repro.kernels.quantize import quantize_blocks as _quant
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def int8_matmul(x, w_q, scales, **kw):
+    kw.setdefault("interpret", _interpret_default())
+    return _int8_mm(x, w_q, scales, **kw)
+
+
+def quantize_weight(w):
+    """Per-output-channel int8 weight quantization (serving load path)."""
+    return ref_mod.quantize_weight_ref(w)
+
+
+def flash_attention(q, k, v, **kw):
+    kw.setdefault("interpret", _interpret_default())
+    return _flash(q, k, v, **kw)
+
+
+def quantize_blocks(x, *, block: int = 256, **kw):
+    """Any-shape tensor → (int8 blocks, scales, orig_size). Pads the flat
+    size to a whole number of (rows_per_tile × block) grid tiles."""
+    kw.setdefault("interpret", _interpret_default())
+    rows = kw.get("rows_per_tile", 8)
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % (block * rows)
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    q, s = _quant(flat.reshape(-1, block), block=block, **kw)
+    return q, s, n
+
+
+def dequantize_blocks(q, scales, n, shape, dtype=jnp.float32, **kw):
+    kw.setdefault("interpret", _interpret_default())
+    flat = _deq(q, scales, out_dtype=dtype, **kw).reshape(-1)
+    return flat[:n].reshape(shape)

@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def int8_matmul_ref(x: jnp.ndarray, w_q: jnp.ndarray,
+                    scales: jnp.ndarray) -> jnp.ndarray:
+    """x (M,K) float; w_q (K,N) int8; scales (N,) f32 per-out-channel."""
+    acc = jnp.dot(x.astype(jnp.float32), w_q.astype(jnp.float32))
+    return (acc * scales[None, :]).astype(x.dtype)
+
+
+def quantize_weight_ref(w: jnp.ndarray):
+    """Symmetric per-output-channel int8 weight quantization. w (K,N)."""
+    absmax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=0)
+    scale = jnp.maximum(absmax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale[None, :]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, scale=None):
+    """q/k/v: (B, H, S, D) → (B, H, S, D). fp32 softmax oracle."""
+    d = q.shape[-1]
+    scale = scale if scale is not None else d ** -0.5
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    sq, sk = q.shape[2], k.shape[2]
+    diff = jnp.arange(sq)[:, None] - jnp.arange(sk)[None, :]
+    ok = jnp.ones((sq, sk), bool)
+    if causal:
+        ok &= diff >= 0
+    if window > 0:
+        ok &= diff < window
+    s = jnp.where(ok[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def quantize_blocks_ref(x: jnp.ndarray, block: int = 256):
+    """Flatten x, pad to a block multiple, symmetric per-block int8.
+
+    Returns (q (n_blocks, block) int8, scales (n_blocks,) f32, orig_size)."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    absmax = jnp.max(jnp.abs(blocks), axis=1)
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(blocks / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale, n
+
+
+def dequantize_blocks_ref(q: jnp.ndarray, scales: jnp.ndarray, n: int,
+                          shape, dtype=jnp.float32):
+    flat = (q.astype(jnp.float32) * scales[:, None]).reshape(-1)[:n]
+    return flat.reshape(shape).astype(dtype)

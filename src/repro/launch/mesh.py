@@ -1,0 +1,31 @@
+"""Production meshes (assignment brief: 16×16 single pod, 2×16×16 multi-pod).
+
+`make_production_mesh` is a FUNCTION (not a module constant) so importing this
+module never touches jax device state; the dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax import.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape, axes) -> jax.sharding.Mesh:
+    """Arbitrary mesh (tests / small-host runs / elastic re-shard)."""
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model: int = 1) -> jax.sharding.Mesh:
+    """Mesh over whatever devices this host actually has."""
+    n = len(jax.devices())
+    assert n % model == 0, (n, model)
+    return make_mesh((n // model, model), ("data", "model"))

@@ -1,0 +1,169 @@
+"""Roofline report (deliverable g) — reads experiments/dryrun/*.json.
+
+Terms per (arch × shape) on the single-pod mesh (per the brief; dry-run
+numbers are per-device, global = ×chips, so the per-chip formulas divide out):
+
+  compute_s    = HLO_FLOPs_global   / (chips · 197e12)   = flops_per_dev / 197e12
+  memory_s     = HLO_bytes_global   / (chips · 819e9)    = bytes_per_dev / 819e9
+  collective_s = coll_bytes_global  / (chips · 50e9)     = coll_per_dev  / 50e9
+
+MODEL_FLOPS: 6·N·D train (N = analytic params, D = tokens), 6·N_active·D MoE,
+2·N·D forward-only (prefill), 2·N_active·B per decode step.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+from typing import Dict, Optional
+
+from repro.configs import ARCH_ORDER, SHAPES, SHAPE_ORDER, get_config
+from repro.core.planner import HBM_BW, ICI_BW, PEAK_FLOPS_BF16, RooflineTerms
+
+DRYRUN_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """Analytic 'useful' FLOPs for one step (global)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch        # one decoded token
+
+
+def load_cell(arch: str, shape_name: str, tag: str = "") -> Optional[Dict]:
+    safe = arch.replace(".", "_")
+    sfx = f"__{tag}" if tag else ""
+    path = DRYRUN_DIR / f"{safe}__{shape_name}{sfx}.json"
+    if not path.exists():
+        return None
+    return json.loads(path.read_text())
+
+
+def cell_terms(rec: Dict) -> Optional[RooflineTerms]:
+    if rec.get("status") != "ok" or "totals_per_dev" not in rec:
+        return None
+    t = rec["totals_per_dev"]
+    chips = rec["single_pod"]["chips"]
+    return RooflineTerms(
+        flops=t["flops"] * chips,
+        hbm_bytes=t["bytes"] * chips,
+        collective_bytes=t["coll_bytes"] * chips,
+        chips=chips,
+        model_flops=model_flops(rec["arch"], rec["shape"]),
+    )
+
+
+def one_line_fix(terms: RooflineTerms, rec: Dict) -> str:
+    dom = terms.dominant
+    if dom == "collective":
+        return ("shrink the TP/SP reshard traffic (fewer model-axis hops, "
+                "compressed or reduce-scattered grads)")
+    if dom == "memory":
+        return ("raise arithmetic intensity: fuse/flash the attention reads, "
+                "int8 weights halve the stream")
+    if terms.useful_flops_ratio < 0.5:
+        return ("cut non-useful FLOPs: lighter remat policy, tighter causal "
+                "block pruning, less head padding")
+    return "already compute-bound; overlap remaining collectives"
+
+
+def build_table(tag: str = "") -> Dict[str, Dict]:
+    out = {}
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            rec = load_cell(arch, shape, tag)
+            key = f"{arch} × {shape}"
+            if rec is None:
+                out[key] = {"status": "missing"}
+                continue
+            if rec["status"] == "skipped":
+                out[key] = {"status": "skipped", "reason": rec["reason"]}
+                continue
+            if rec["status"] == "failed":
+                out[key] = {"status": "failed", "error": rec.get("error", "")}
+                continue
+            terms = cell_terms(rec)
+            mem = rec["single_pod"]["memory"]
+            out[key] = {
+                "status": "ok",
+                "compute_s": terms.compute_s,
+                "memory_s": terms.memory_s,
+                "collective_s": terms.collective_s,
+                "dominant": terms.dominant,
+                "model_flops": terms.model_flops,
+                "hlo_flops": terms.flops,
+                "useful_ratio": terms.useful_flops_ratio,
+                "roofline_fraction": terms.roofline_fraction,
+                "peak_gib": mem["peak_gib"],
+                "fits": mem["fits_16gib_hbm"],
+                "multi_pod_fits": rec["multi_pod"]["memory"]["fits_16gib_hbm"],
+                "fix": one_line_fix(terms, rec),
+            }
+    return out
+
+
+def render_markdown(table: Dict[str, Dict]) -> str:
+    lines = [
+        "| arch × shape | compute s | memory s | collective s | bound | "
+        "useful | roofline | peak GiB | fits |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for key, row in table.items():
+        if row["status"] != "ok":
+            lines.append(f"| {key} | — | — | — | {row['status']} "
+                         f"| | | | |")
+            continue
+        lines.append(
+            f"| {key} | {row['compute_s']:.3f} | {row['memory_s']:.3f} | "
+            f"{row['collective_s']:.3f} | **{row['dominant']}** | "
+            f"{row['useful_ratio']:.2f} | {row['roofline_fraction']:.2f} | "
+            f"{row['peak_gib']:.1f} | {'✓' if row['fits'] else '✗'} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--json", action="store_true")
+    ap.add_argument("--write-experiments", action="store_true",
+                    help="inject the table at <!-- ROOFLINE_TABLE --> in "
+                         "EXPERIMENTS.md")
+    args = ap.parse_args()
+    table = build_table(args.tag)
+    if args.json:
+        print(json.dumps(table, indent=1))
+        return
+    md = render_markdown(table)
+    if args.write_experiments:
+        exp = DRYRUN_DIR.parents[1] / "EXPERIMENTS.md"
+        marker = "<!-- ROOFLINE_TABLE -->"
+        text = exp.read_text()
+        start = text.index(marker)
+        end = text.index("\n\n", start + len(marker) + 1) \
+            if marker + "\n|" in text[start:start + len(marker) + 3] \
+            else start + len(marker)
+        # replace marker (and any previously injected table right after it)
+        rest = text[start + len(marker):]
+        if rest.lstrip().startswith("|"):
+            tbl_end = rest.index("\n\n")
+            rest = rest[tbl_end:]
+        text = text[:start] + marker + "\n" + md + rest
+        exp.write_text(text)
+        print(f"wrote table into {exp}")
+    print(md)
+    ok = [r for r in table.values() if r["status"] == "ok"]
+    if ok:
+        worst = min(ok, key=lambda r: r["roofline_fraction"])
+        print(f"\ncells ok={len(ok)}; worst roofline fraction "
+              f"{worst['roofline_fraction']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Serving driver: continuous-batching engine over a chosen architecture.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \
+      --requests 16 --slots 4 [--int8]
+
+On a pod the same engine runs against the mesh-sharded prefill/decode steps
+from `launch/steps.py`; on CPU it serves the reduced configs (examples +
+tests exercise this path).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import ExecOptions, build_model
+from repro.serve.engine import ServeEngine
+
+
+def quantize_params_int8(params):
+    """Weight-only int8 QDQ (the paper's 15 TOPS INT8 NPU numerics)."""
+    from repro.kernels import ops as kops
+
+    def qdq(p):
+        if p.ndim == 2 and min(p.shape) >= 64:
+            q, s = kops.quantize_weight(p.astype(jnp.float32))
+            return (q.astype(jnp.float32) * s[None, :]).astype(p.dtype)
+        return p
+
+    return jax.tree.map(qdq, params)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=96)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--int8", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    model = build_model(cfg, ExecOptions(attn_impl="reference", ce_chunk=32))
+    params = model.init(jax.random.key(args.seed))
+    if args.int8:
+        params = quantize_params_int8(params)
+    eng = ServeEngine(model, n_slots=args.slots, max_len=args.max_len,
+                      params=params)
+    rng = np.random.default_rng(args.seed)
+    reqs = []
+    for _ in range(args.requests):
+        plen = int(rng.integers(8, 24))
+        prompt = rng.integers(0, cfg.vocab_size, plen).astype(np.int32)
+        reqs.append(eng.submit(prompt, max_new_tokens=args.new_tokens))
+    t0 = time.time()
+    stats = eng.run_to_completion()
+    wall = time.time() - t0
+    done = sum(r.done for r in reqs)
+    ttft = [r.t_first_token - r.t_enqueue for r in reqs if r.t_first_token]
+    print(f"[serve] {done}/{len(reqs)} done  {stats.summary()}")
+    print(f"[serve] {stats.tokens_out / wall:.1f} tok/s  "
+          f"mean TTFT {1e3 * sum(ttft) / len(ttft):.0f} ms  wall {wall:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,301 @@
+"""Step builders: jit-able train / prefill / decode steps with explicit
+in/out shardings for a given (arch × shape × mesh) cell.
+
+This is what the multi-pod dry-run lowers and what `launch/train.py` runs on
+real hosts — a single code path, mesh-parameterized.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import ExecOptions, ModelApi, build_model
+from repro.models import registry as registry_mod
+from repro.parallel import sharding as sh
+from repro.train import optimizer as opt_mod
+
+
+# ---------------------------------------------------------------------------
+# Exec options per (shape × variant)
+# ---------------------------------------------------------------------------
+
+def _train_carry_gib(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh) -> float:
+    """Remat-saved residual stream across the layer scan, per device, GiB."""
+    data = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    b_loc = max(shape.global_batch // data, 1)
+    return cfg.n_layers * b_loc * shape.seq_len * cfg.d_model * 2 / 2**30
+
+
+def exec_options_for(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+                     overrides: Optional[Dict[str, Any]] = None,
+                     rules=None) -> ExecOptions:
+    """Baseline execution strategy; `overrides` is the hillclimb hook."""
+    kw: Dict[str, Any] = dict(constrain=sh.make_constrain(mesh, rules))
+    if shape.kind == "train":
+        # remat='full' (save only layer boundaries): the 'dots' policy keeps
+        # every matmul output alive across the layer scan — measured 36.9 GiB
+        # temp/device on gemma-7b train_4k vs 16 GiB HBM (EXPERIMENTS.md §Perf).
+        # Sequence-parallel residuals only when the saved carry would crowd
+        # HBM — SP costs ~4 activation-sized all-gathers per layer (the
+        # planner trade-off recorded in EXPERIMENTS.md §Perf).
+        sp = _train_carry_gib(cfg, shape, mesh) > 4.0
+        kw.update(attn_impl="chunked", q_chunk=min(1024, shape.seq_len),
+                  kv_chunk=min(1024, shape.seq_len), ce_chunk=512,
+                  remat="full", act_seq_shard=sp)
+    elif shape.kind == "prefill":
+        kw.update(attn_impl="chunked", q_chunk=2048, kv_chunk=2048,
+                  ce_chunk=512, remat="none", act_seq_shard=False)
+    else:  # decode
+        kw.update(attn_impl="reference", ce_chunk=512, remat="none",
+                  act_seq_shard=False)
+    if overrides:
+        kw.update(overrides)
+    return ExecOptions(**kw)
+
+
+def arch_for_mesh(cfg: ArchConfig, mesh: Mesh) -> ArchConfig:
+    """Apply distribution-time head padding for the mesh's TP size."""
+    tp = mesh.shape.get("model", 1)
+    return dataclasses.replace(cfg, tp_pad=tp)
+
+
+def suggest_plan(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh) -> str:
+    """The chiplet-aware planner's topology decision (§Perf hillclimbs #2/#3).
+
+    * tiny models on a big mesh: 16-way TP leaves <~8 M params per model
+      shard and the per-layer TP collectives dwarf the compute (measured
+      15.2× collective reduction on smollm-360m) → 'dp_heavy';
+    * MoE/dense decode: FSDP-gathered weights dominate the step (measured
+      28× collective reduction on dbrx-132b decode) → 'serve_ws';
+    * everything else → the default 'tp16'.
+    """
+    tp = mesh.shape.get("model", 1)
+    params_per_shard = cfg.param_count_analytic() / max(tp, 1)
+    if shape.is_train and params_per_shard < 128e6 \
+            and shape.global_batch % mesh.size == 0:
+        return "dp_heavy"
+    if shape.kind == "decode":
+        # weight-stationary decode needs the experts to actually shard (EP);
+        # with replicated experts (E % tp != 0, e.g. qwen2-moe's 60) the
+        # decode token-replication multiplies replicated expert compute
+        # (measured ×10.8 flops, ×2.8 collectives — EXPERIMENTS.md §Perf #3)
+        if cfg.family == "moe" and cfg.n_experts % tp != 0:
+            return "tp16"
+        return "serve_ws"
+    return "tp16"
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+def train_state_specs(model: ModelApi, mesh: Mesh, rules=None):
+    pspec = sh.schema_pspecs(model.schema, mesh, rules)
+    return {
+        "params": pspec,
+        "opt": {"m": pspec, "v": pspec, "step": P()},
+    }
+
+
+def abstract_train_state(model: ModelApi):
+    params = model.abstract()
+    f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)  # noqa: E731
+    return {
+        "params": params,
+        "opt": {"m": jax.tree.map(f32, params),
+                "v": jax.tree.map(f32, params),
+                "step": jax.ShapeDtypeStruct((), jnp.int32)},
+    }
+
+
+def suggest_n_micro(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+                    hbm_gib: float = 12.0) -> int:
+    """Gradient-accumulation factor from a napkin memory model (validated on
+    the dry-run: gemma-7b ≈ 12 activation units + states; dbrx-132b 30.4 GiB
+    at n_micro=1). activation_unit = one fp32 (B_loc, S, d) tensor."""
+    chips = mesh.size
+    data = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    b_loc = max(shape.global_batch // data, 1)
+    unit = b_loc * shape.seq_len * cfg.d_model * 4 / 2**30
+    carry = _train_carry_gib(cfg, shape, mesh)
+    if _train_carry_gib(cfg, shape, mesh) > 4.0:   # SP shards the carry
+        carry /= mesh.shape.get("model", 1)
+    fixed = cfg.param_count_analytic() * 14 / chips / 2**30  # p+m+v+g
+    units = 14
+    if cfg.family == "moe":
+        # grouped dispatch adds ~top_k·cf·(2d+f)/d activation units
+        # (dispatch/combine + expert slot tensors; qwen2-moe measured
+        # 22.5 GiB at n_micro=1 without this term)
+        units += 8
+    need = units * unit + carry
+    avail = hbm_gib - fixed
+    if "pod" in mesh.shape:
+        # cross-pod gradient staging + larger collective buffers: calibrated
+        # on the two cells the plain model missed (dbrx-132b 16.4 GiB,
+        # qwen2-moe 19.2 GiB at the un-reserved choice — EXPERIMENTS §Dry-run)
+        avail -= 6.0
+    avail = max(avail, 2.0)
+    n = 1
+    while need / n > avail and n < b_loc:
+        n *= 2
+    return n
+
+
+def make_train_step(model: ModelApi, opt_cfg: opt_mod.OptimizerConfig,
+                    grad_transform: Optional[Callable] = None,
+                    n_micro: int = 1, unroll: bool = False):
+    """(state, batch) → (state, metrics). Pure; jit with shardings outside.
+
+    n_micro > 1 runs gradient accumulation over microbatches (fp32 grad
+    buffer) — the memory lever that avoids SP's per-layer collective cost.
+    """
+
+    def grad_of(params, mb):
+        def loss_fn(p):
+            return model.train_loss(p, mb)
+
+        return jax.value_and_grad(loss_fn, has_aux=True)(params)
+
+    def step(state, batch):
+        params = state["params"]
+        if n_micro == 1:
+            (loss, _), grads = grad_of(params, batch)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        else:
+            micro = jax.tree.map(
+                lambda t: t.reshape((n_micro, t.shape[0] // n_micro)
+                                    + t.shape[1:]), batch)
+
+            def body(acc, mb):
+                (l, _), g = grad_of(params, mb)
+                acc_g = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32) / n_micro,
+                    acc[0], g)
+                return (acc_g, acc[1] + l / n_micro), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            from repro.models.common import scan_or_unroll
+            (grads, loss), _ = scan_or_unroll(
+                body, (zeros, jnp.float32(0.0)), micro, unroll=unroll)
+        if grad_transform is not None:  # e.g. compression-aware DP sync
+            grads = grad_transform(grads)
+        grads, gnorm = opt_mod.clip_by_global_norm(grads, opt_cfg.clip_norm)
+        params, opt, lr = opt_mod.adamw_update(params, grads,
+                                               state["opt"], opt_cfg)
+        new_state = {"params": params, "opt": opt}
+        return new_state, {"loss": loss, "grad_norm": gnorm, "lr": lr}
+
+    return step
+
+
+def jit_train_step(model: ModelApi, mesh: Mesh, shape: ShapeConfig,
+                   opt_cfg: Optional[opt_mod.OptimizerConfig] = None,
+                   grad_transform: Optional[Callable] = None,
+                   n_micro: int = 1, rules=None):
+    """Returns (jitted_step, abstract_args) ready to .lower() or call."""
+    opt_cfg = opt_cfg or opt_mod.OptimizerConfig()
+    step = make_train_step(model, opt_cfg, grad_transform, n_micro=n_micro,
+                           unroll=model.opts.unroll_scans)
+    state_specs = train_state_specs(model, mesh, rules)
+    abs_state = abstract_train_state(model)
+    abs_batch = registry_mod.input_specs(model.cfg, shape)
+    batch_specs = sh.batch_pspecs(abs_batch, mesh, rules)
+    metrics_specs = {"loss": P(), "grad_norm": P(), "lr": P()}
+    jitted = jax.jit(
+        step,
+        in_shardings=(sh.named(mesh, state_specs), sh.named(mesh, batch_specs)),
+        out_shardings=(sh.named(mesh, state_specs),
+                       sh.named(mesh, metrics_specs)),
+        donate_argnums=(0,),
+    )
+    return jitted, (abs_state, abs_batch)
+
+
+# ---------------------------------------------------------------------------
+# Serve steps
+# ---------------------------------------------------------------------------
+
+def jit_prefill_step(model: ModelApi, mesh: Mesh, shape: ShapeConfig,
+                     rules=None):
+    pspec = sh.schema_pspecs(model.schema, mesh, rules)
+    abs_params = model.abstract()
+    abs_batch = registry_mod.input_specs(model.cfg, shape)
+    batch_specs = sh.batch_pspecs(abs_batch, mesh, rules)
+    out_abs = jax.eval_shape(model.prefill, abs_params, abs_batch)
+    logits_spec = sh.logits_pspec(mesh, shape.global_batch,
+                                  model.cfg.padded_vocab, rules)
+    cache_specs = sh.cache_pspecs(model.cfg, out_abs[1], mesh, rules)
+    jitted = jax.jit(
+        model.prefill,
+        in_shardings=(sh.named(mesh, pspec), sh.named(mesh, batch_specs)),
+        out_shardings=(NamedSharding(mesh, logits_spec),
+                       sh.named(mesh, cache_specs)),
+    )
+    return jitted, (abs_params, abs_batch)
+
+
+def jit_decode_step(model: ModelApi, mesh: Mesh, shape: ShapeConfig,
+                    cache_dtype=jnp.bfloat16, rules=None):
+    pspec = sh.schema_pspecs(model.schema, mesh, rules)
+    abs_params = model.abstract()
+    abs_batch = registry_mod.input_specs(model.cfg, shape)
+    batch_specs = sh.batch_pspecs(abs_batch, mesh, rules)
+    abs_cache = model.cache_shape(shape.global_batch, shape.seq_len,
+                                  cache_dtype)
+    cache_specs = sh.cache_pspecs(model.cfg, abs_cache, mesh, rules)
+    out_abs = jax.eval_shape(model.decode, abs_params, abs_batch, abs_cache)
+    logits_spec = sh.logits_pspec(mesh, shape.global_batch,
+                                  model.cfg.padded_vocab, rules)
+    out_cache_specs = sh.cache_pspecs(model.cfg, out_abs[1], mesh, rules)
+    jitted = jax.jit(
+        model.decode,
+        in_shardings=(sh.named(mesh, pspec), sh.named(mesh, batch_specs),
+                      sh.named(mesh, cache_specs)),
+        out_shardings=(NamedSharding(mesh, logits_spec),
+                       sh.named(mesh, out_cache_specs)),
+        donate_argnums=(2,),
+    )
+    return jitted, (abs_params, abs_batch, abs_cache)
+
+
+# ---------------------------------------------------------------------------
+# One-call cell lowering (dry-run entry)
+# ---------------------------------------------------------------------------
+
+def build_cell(arch_cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+               overrides: Optional[Dict[str, Any]] = None,
+               opt_cfg: Optional[opt_mod.OptimizerConfig] = None):
+    """Returns (jitted_fn, abstract_args) for one (arch × shape × mesh) cell.
+
+    `overrides` may carry step-level keys (n_micro) alongside ExecOptions
+    fields — the hillclimb hook tunes both from one dict.
+    """
+    overrides = dict(overrides or {})
+    plan = overrides.pop("plan", "tp16")
+    if plan == "auto":  # the chiplet-aware planner decides (§Perf findings)
+        plan = suggest_plan(arch_cfg, shape, mesh)
+    rules = sh.rules_for_plan(plan)
+    if plan == "dp_heavy":
+        # TP retired → no head padding needed
+        cfg = arch_cfg
+    else:
+        cfg = arch_for_mesh(arch_cfg, mesh)
+    n_micro = overrides.pop("n_micro", None)
+    opts = exec_options_for(cfg, shape, mesh, overrides, rules)
+    model = build_model(cfg, opts)
+    if shape.kind == "train":
+        if n_micro is None:
+            n_micro = suggest_n_micro(cfg, shape, mesh)
+        return jit_train_step(model, mesh, shape, opt_cfg, n_micro=n_micro,
+                              rules=rules)
+    if shape.kind == "prefill":
+        return jit_prefill_step(model, mesh, shape, rules=rules)
+    return jit_decode_step(model, mesh, shape, rules=rules)

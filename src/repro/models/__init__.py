@@ -1,0 +1,6 @@
+"""Model zoo: the 10 assigned architectures behind one functional API."""
+
+from repro.models.registry import ModelApi, build_model, input_specs, make_inputs
+from repro.models.transformer import ExecOptions
+
+__all__ = ["ExecOptions", "ModelApi", "build_model", "input_specs", "make_inputs"]

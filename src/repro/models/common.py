@@ -1,0 +1,213 @@
+"""Shared model substrate: param schemas with logical sharding axes, norms,
+activations, rotary embeddings.
+
+Parameters are declared as a *schema* (a pytree of `ParamDef`), from which we
+derive (a) materialized params via `init_params`, (b) abstract shapes via
+`eval_shape`, and (c) `PartitionSpec`s via `parallel.sharding.schema_pspecs`.
+Logical axis names (not mesh axes) are attached at declaration; the mesh
+mapping + divisibility rule lives in `repro.parallel.sharding`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------
+# Param schema
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    """Declaration of one parameter tensor.
+
+    logical: one name per dim, drawn from the vocabulary in
+    `repro.parallel.sharding.DEFAULT_RULES` ('embed', 'heads', 'ff', 'vocab',
+    'experts', 'batchlike', None, ...). 'layers' marks a stacked-layer dim.
+    """
+
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    init: str = "normal"       # normal | zeros | ones | small_normal
+    scale: float = 1.0         # fan-in scaling applied on top of init
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def _init_one(key: jax.Array, d: ParamDef, dtype) -> jnp.ndarray:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dtype)
+    fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+    std = d.scale / math.sqrt(max(fan_in, 1))
+    if d.init == "small_normal":
+        std = 0.02 * d.scale
+    return (std * jax.random.normal(key, d.shape, jnp.float32)).astype(dtype)
+
+
+def is_schema_leaf(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def init_params(schema, key: jax.Array, dtype=jnp.bfloat16):
+    """Materialize a schema into a params pytree (same structure)."""
+    leaves, treedef = jax.tree.flatten(schema, is_leaf=is_schema_leaf)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(
+        treedef, [_init_one(k, d, dtype) for k, d in zip(keys, leaves)]
+    )
+
+
+def abstract_params(schema, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct pytree for a schema — no allocation (dry-run path)."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype),
+        schema,
+        is_leaf=is_schema_leaf,
+    )
+
+
+def param_count(schema) -> int:
+    return sum(
+        math.prod(d.shape)
+        for d in jax.tree.leaves(schema, is_leaf=is_schema_leaf)
+    )
+
+
+# --------------------------------------------------------------------------
+# Norms / activations
+# --------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray, *, eps: float = 1e-6,
+             plus_one: bool = False) -> jnp.ndarray:
+    """RMSNorm in fp32 (mixed-precision-sensitive long reduction)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    w = weight.astype(jnp.float32)
+    if plus_one:  # gemma / recurrentgemma convention: weight is (1 + w)
+        w = 1.0 + w
+    return (y * w).astype(x.dtype)
+
+
+def layer_norm(x: jnp.ndarray, weight: jnp.ndarray, bias: jnp.ndarray,
+               *, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def act_fn(name: str) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    return {
+        "silu": jax.nn.silu,
+        "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+        "relu": jax.nn.relu,
+    }[name]
+
+
+def glu_act(name: str):
+    """GLU family: (gate_act, uses_glu). swiglu→silu, geglu→gelu."""
+    return {"swiglu": "silu", "geglu": "gelu"}[name]
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    """Soft logit capping (gemma/recurrentgemma): cap*tanh(x/cap)."""
+    if cap <= 0:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Rotary position embeddings
+# --------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, fraction: float, theta: float) -> jnp.ndarray:
+    """Inverse frequencies for the rotated sub-dimension (fraction of head_dim)."""
+    rot = int(head_dim * fraction)
+    rot -= rot % 2
+    return 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, *, fraction: float = 1.0,
+               theta: float = 1e4) -> jnp.ndarray:
+    """Apply RoPE over the final dim.
+
+    x: (..., S, n_heads, head_dim); positions: broadcastable to (..., S).
+    fraction < 1 rotates only the leading `fraction` of head dims
+    (ChatGLM's 2D/partial rotary); the remainder passes through.
+    """
+    head_dim = x.shape[-1]
+    inv = rope_frequencies(head_dim, fraction, theta)          # (rot/2,)
+    rot = inv.shape[0] * 2
+    angles = positions[..., None].astype(jnp.float32) * inv    # (..., S, rot/2)
+    cos = jnp.cos(angles)[..., None, :]                        # (..., S, 1, rot/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    x1, x2 = x_rot[..., 0::2], x_rot[..., 1::2]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    o1 = xf1 * cos - xf2 * sin
+    o2 = xf2 * cos + xf1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(x_rot.shape).astype(x.dtype)
+    return jnp.concatenate([out, x_pass], axis=-1) if rot < head_dim else out
+
+
+# --------------------------------------------------------------------------
+# Depthwise causal conv1d (mamba2 / RG-LRU temporal conv)
+# --------------------------------------------------------------------------
+
+def causal_conv1d(x: jnp.ndarray, w: jnp.ndarray, *,
+                  state: Optional[jnp.ndarray] = None):
+    """Depthwise causal 1-D conv.
+
+    x: (B, S, C); w: (K, C). Returns (y, new_state) where state is the last
+    K-1 inputs (B, K-1, C) for streaming decode.
+    """
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                     # (B, S+K-1, C)
+    y = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(k):  # K is tiny (4); unrolled shifted adds beat conv lowering
+        y = y + xp[:, i : i + x.shape[1]].astype(jnp.float32) * w[i].astype(jnp.float32)
+    new_state = xp[:, -(k - 1):] if k > 1 else jnp.zeros((x.shape[0], 0, x.shape[2]), x.dtype)
+    return y.astype(x.dtype), new_state
+
+
+# --------------------------------------------------------------------------
+# Scan-or-unroll: XLA's cost analysis counts a while-loop body ONCE, not
+# trip_count times. The dry-run therefore lowers small "probe" programs with
+# every internal lax.scan statically unrolled (exact flops/bytes/collectives)
+# and combines them analytically; the real deliverable program still scans.
+# --------------------------------------------------------------------------
+
+def scan_or_unroll(body, init, xs, *, unroll: bool, length=None):
+    """Drop-in for jax.lax.scan(body, init, xs) with optional static unroll."""
+    import jax as _jax
+    import jax.numpy as _jnp
+
+    if not unroll:
+        return _jax.lax.scan(body, init, xs, length=length)
+    if length is None:
+        length = len(_jax.tree.leaves(xs)[0])
+    carry = init
+    ys = []
+    for i in range(length):
+        xi = _jax.tree.map(lambda t: t[i], xs) if xs is not None else None
+        carry, y = body(carry, xi)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = _jax.tree.map(lambda *ts: _jnp.stack(ts), *ys)
+    else:
+        ys = None
+    return carry, ys

@@ -1,0 +1,240 @@
+"""Encoder-decoder transformer (seamless-m4t-medium backbone).
+
+The audio frontend is a STUB per the assignment: the encoder consumes
+precomputed frame embeddings (B, S_enc, d_model). 12-layer bidirectional
+encoder + 12-layer causal decoder with per-layer cross-attention. Decode
+shapes grow the decoder self-attention cache; cross-attention K/V are
+computed once at prefill and cached.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models.common import ParamDef, act_fn, apply_rope, glu_act, rms_norm
+from repro.models.transformer import (
+    ExecOptions, _expand_kv, attn_schema, chunked_ce_loss, embed_tokens,
+    head_mask, lm_head_weights, remat_wrap, _write_cache,
+)
+
+
+def _ffn_params(L, d, f):
+    return {
+        "w1": ParamDef((L, d, f), ("layers", "embed", "ff")),
+        "w3": ParamDef((L, d, f), ("layers", "embed", "ff")),
+        "w2": ParamDef((L, f, d), ("layers", "ff", "embed")),
+    }
+
+
+def schema(cfg) -> Dict[str, Any]:
+    d, h, kv, hd, f = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+                       cfg.d_ff)
+    Le, Ld, v = cfg.n_enc_layers, cfg.n_dec_layers, cfg.padded_vocab
+    enc = {"attn_norm": ParamDef((Le, d), ("layers", None), init="ones"),
+           "ffn_norm": ParamDef((Le, d), ("layers", None), init="ones")}
+    enc.update(attn_schema(cfg, Le))
+    enc.update(_ffn_params(Le, d, f))
+    dec = {"attn_norm": ParamDef((Ld, d), ("layers", None), init="ones"),
+           "cross_norm": ParamDef((Ld, d), ("layers", None), init="ones"),
+           "ffn_norm": ParamDef((Ld, d), ("layers", None), init="ones")}
+    dec.update(attn_schema(cfg, Ld))
+    dec.update(attn_schema(cfg, Ld, prefix="c"))
+    dec.update(_ffn_params(Ld, d, f))
+    return {
+        "embed": ParamDef((v, d), ("vocab", "embed"), init="small_normal"),
+        "enc_norm": ParamDef((d,), (None,), init="ones"),
+        "final_norm": ParamDef((d,), (None,), init="ones"),
+        "enc": enc,
+        "dec": dec,
+    }
+
+
+def _self_attn(x, p, cfg, opts, positions, *, causal, prefix=""):
+    c = opts.constrain
+    q = jnp.einsum("bsd,dhk->bshk", x, p[prefix + "wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p[prefix + "wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p[prefix + "wv"])
+    q = apply_rope(q, positions, theta=cfg.rope_theta)
+    k = apply_rope(k, positions, theta=cfg.rope_theta)
+    kx, vx = _expand_kv(k, v, cfg)
+    qp = c(q[:, :, :, None, :], "batchlike", None, "heads_flat", None, None)
+    kx = c(kx, "batchlike", None, "heads_flat", None)
+    vx = c(vx, "batchlike", None, "heads_flat", None)
+    o = attn_mod.attention(qp, kx, vx, causal=causal, scale=cfg.head_dim ** -0.5,
+                           impl=opts.attn_impl, q_chunk=opts.q_chunk,
+                           kv_chunk=opts.kv_chunk, unroll=opts.unroll_scans)
+    o = o[:, :, :, 0, :] * head_mask(cfg, x.dtype)[None, None, :, None]
+    return jnp.einsum("bshk,hkd->bsd", o, p[prefix + "wo"]), (k, v)
+
+
+def _cross_attn_full(x, p, cfg, opts, enc_out):
+    """Full cross attention (train/prefill). Returns (out, (ck, cv))."""
+    c = opts.constrain
+    q = jnp.einsum("bsd,dhk->bshk", x, p["cwq"])
+    ck = jnp.einsum("bsd,dhk->bshk", enc_out, p["cwk"])
+    cv = jnp.einsum("bsd,dhk->bshk", enc_out, p["cwv"])
+    kx, vx = _expand_kv(ck, cv, cfg)
+    qp = c(q[:, :, :, None, :], "batchlike", None, "heads_flat", None, None)
+    o = attn_mod.attention(qp, kx, vx, causal=False, scale=cfg.head_dim ** -0.5,
+                           impl=opts.attn_impl, q_chunk=opts.q_chunk,
+                           kv_chunk=opts.kv_chunk, unroll=opts.unroll_scans)
+    o = o[:, :, :, 0, :] * head_mask(cfg, x.dtype)[None, None, :, None]
+    return jnp.einsum("bshk,hkd->bsd", o, p["cwo"]), (ck, cv)
+
+
+def encode(params, frames, cfg, opts: ExecOptions):
+    x = opts.constrain(frames, "batchlike", None, None)
+    positions = jnp.arange(frames.shape[1])[None, :]
+
+    def body(h, lp):
+        h = opts.constrain(h, "batchlike", opts.seq_axis, None)
+        a, _ = _self_attn(rms_norm(h, lp["attn_norm"]), lp, cfg, opts,
+                          positions, causal=False)
+        h = h + a
+        hn = rms_norm(h, lp["ffn_norm"])
+        act = act_fn(glu_act(cfg.activation))
+        ff = act(jnp.einsum("bsd,df->bsf", hn, lp["w1"])) \
+            * jnp.einsum("bsd,df->bsf", hn, lp["w3"])
+        ff = opts.constrain(ff, "batchlike", None, "ff")
+        return h + jnp.einsum("bsf,fd->bsd", ff, lp["w2"]), None
+
+    from repro.models.common import scan_or_unroll
+    x, _ = scan_or_unroll(remat_wrap(body, opts.remat), x, params["enc"],
+                          unroll=opts.unroll_scans)
+    return rms_norm(x, params["enc_norm"])
+
+
+def _dec_layer(h, lp, cfg, opts, positions, enc_out, mode, cache):
+    c = opts.constrain
+    if mode != "decode":
+        h = c(h, "batchlike", opts.seq_axis, None)
+    act = act_fn(glu_act(cfg.activation))
+    if mode in ("train", "prefill"):
+        a, (k, v) = _self_attn(rms_norm(h, lp["attn_norm"]), lp, cfg, opts,
+                               positions, causal=True)
+        h = h + a
+        ca, (ck, cv) = _cross_attn_full(rms_norm(h, lp["cross_norm"]), lp, cfg,
+                                        opts, enc_out)
+        h = h + ca
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"k": k, "v": v, "ck": ck, "cv": cv}
+    else:  # decode
+        b = h.shape[0]
+        pos_b = positions.reshape(-1)
+        xn = rms_norm(h, lp["attn_norm"])
+        q = jnp.einsum("bsd,dhk->bshk", xn, lp["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", xn, lp["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", xn, lp["wv"])
+        q = apply_rope(q, positions, theta=cfg.rope_theta)
+        k = apply_rope(k, positions, theta=cfg.rope_theta)
+        k_cache = _write_cache(cache["k"], k, pos_b)
+        v_cache = _write_cache(cache["v"], v, pos_b)
+        kvp, gp = cfg.padded_kv_group
+        hm = head_mask(cfg, h.dtype)[None, None, :, None]
+        qg = q.reshape(b, 1, kvp, gp, cfg.head_dim)
+        o = attn_mod.decode_attention(qg, k_cache, v_cache, pos_b + 1,
+                                      scale=cfg.head_dim ** -0.5)
+        o = o.reshape(b, 1, cfg.n_heads_padded, cfg.head_dim) * hm
+        h = h + jnp.einsum("bshk,hkd->bsd", o, lp["wo"])
+        xn = rms_norm(h, lp["cross_norm"])
+        cq = jnp.einsum("bsd,dhk->bshk", xn, lp["cwq"])
+        cqg = cq.reshape(b, 1, kvp, gp, cfg.head_dim)
+        se = cache["ck"].shape[1]
+        co = attn_mod.decode_attention(cqg, cache["ck"], cache["cv"],
+                                       jnp.full((b,), se, jnp.int32),
+                                       scale=cfg.head_dim ** -0.5)
+        co = co.reshape(b, 1, cfg.n_heads_padded, cfg.head_dim) * hm
+        h = h + jnp.einsum("bshk,hkd->bsd", co, lp["cwo"])
+        new_cache = {"k": k_cache, "v": v_cache}
+    hn = rms_norm(h, lp["ffn_norm"])
+    ff = act(jnp.einsum("bsd,df->bsf", hn, lp["w1"])) \
+        * jnp.einsum("bsd,df->bsf", hn, lp["w3"])
+    ff = c(ff, "batchlike", None, "ff")
+    return h + jnp.einsum("bsf,fd->bsd", ff, lp["w2"]), new_cache
+
+
+def decode_stack(params, tokens, cfg, opts, enc_out, *, mode, cache=None,
+                 positions=None):
+    x = embed_tokens(params, tokens, cfg, opts)
+    if positions is None:
+        positions = jnp.arange(tokens.shape[1])[None, :]
+
+    def body(h, xs):
+        lp, lc = xs
+        return _dec_layer(h, lp, cfg, opts, positions, enc_out, mode, lc)
+
+    from repro.models.common import scan_or_unroll
+    x, new_cache = scan_or_unroll(
+        remat_wrap(body, opts.remat if mode == "train" else "none"),
+        x, (params["dec"], cache), unroll=opts.unroll_scans)
+    return rms_norm(x, params["final_norm"]), new_cache
+
+
+def train_loss(params, batch, cfg, opts: ExecOptions):
+    enc_out = encode(params, batch["frames"], cfg, opts)
+    hidden, _ = decode_stack(params, batch["tokens"], cfg, opts, enc_out,
+                             mode="train")
+    loss = chunked_ce_loss(hidden, lm_head_weights(params, cfg),
+                           batch["labels"], cfg, opts)
+    return loss, {"loss": loss}
+
+
+def prefill(params, batch, cfg, opts: ExecOptions):
+    enc_out = encode(params, batch["frames"], cfg, opts)
+    hidden, cache = decode_stack(params, batch["tokens"], cfg, opts, enc_out,
+                                 mode="prefill")
+    logits = jnp.einsum("bsd,vd->bsv", hidden[:, -1:, :],
+                        lm_head_weights(params, cfg)).astype(jnp.float32)
+    b, s = batch["tokens"].shape
+    cache = dict(cache, pos=jnp.full((b,), s, jnp.int32))
+    return logits, cache
+
+
+def decode_step(params, batch, cache, cfg, opts: ExecOptions):
+    """Self KV rides the scan carry (in-place DUS); cross K/V are read-only
+    xs (no ys re-emission) — avoids double-buffering either cache."""
+    positions = cache["pos"]
+    x = embed_tokens(params, batch["tokens"], cfg, opts)
+
+    def body(carry, xs):
+        h, kc, vc = carry
+        lp, ck, cv, i = xs
+        layer_cache = {
+            "k": jax.lax.dynamic_index_in_dim(kc, i, 0, keepdims=False),
+            "v": jax.lax.dynamic_index_in_dim(vc, i, 0, keepdims=False),
+            "ck": ck, "cv": cv,
+        }
+        h, new_cache = _dec_layer(h, lp, cfg, opts, positions[:, None],
+                                  None, "decode", layer_cache)
+        kc = jax.lax.dynamic_update_index_in_dim(kc, new_cache["k"], i, 0)
+        vc = jax.lax.dynamic_update_index_in_dim(vc, new_cache["v"], i, 0)
+        return (h, kc, vc), None
+
+    from repro.models.common import scan_or_unroll
+    (x, kc, vc), _ = scan_or_unroll(
+        body, (x, cache["k"], cache["v"]),
+        (params["dec"], cache["ck"], cache["cv"],
+         jnp.arange(cfg.n_dec_layers)),
+        unroll=opts.unroll_scans)
+    x = rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,vd->bsv", x,
+                        lm_head_weights(params, cfg)).astype(jnp.float32)
+    new_cache = {"k": kc, "v": vc, "ck": cache["ck"], "cv": cache["cv"],
+                 "pos": positions + 1}
+    return logits, new_cache
+
+
+def cache_shape(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    L, kv, hd, se = cfg.n_dec_layers, cfg.kv_pad, cfg.head_dim, cfg.cross_len
+    return {
+        "k": jax.ShapeDtypeStruct((L, batch, max_len, kv, hd), dtype),
+        "v": jax.ShapeDtypeStruct((L, batch, max_len, kv, hd), dtype),
+        "ck": jax.ShapeDtypeStruct((L, batch, se, kv, hd), dtype),
+        "cv": jax.ShapeDtypeStruct((L, batch, se, kv, hd), dtype),
+        "pos": jax.ShapeDtypeStruct((batch,), jnp.int32),
+    }

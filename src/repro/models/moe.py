@@ -1,0 +1,139 @@
+"""Mixture-of-Experts FFN — GShard/Mesh-TF grouped dispatch, GSPMD-friendly.
+
+Tokens are reshaped into (G groups × group_size) and dispatched to experts
+through one-hot dispatch/combine tensors built from a cumulative-sum position
+assignment (capacity-bounded, dropped-token semantics, GShard [arXiv:2006.16668]).
+Under the production mesh the groups dim shards over ('pod','data') and the
+experts dim over 'model' (expert parallelism) when E divides the axis; the
+expert contraction then reduces over 'model' exactly like a Megatron TP FFN.
+
+This is the paper-analog layer: experts ↔ accelerator chiplets, the dispatch
+einsum ↔ the UCIe die-to-die transfer, capacity ↔ link bandwidth budget.
+
+Cost note: dispatch/combine einsums add ~group_size/(6·d_ff_expert) relative
+FLOPs (≈6 % at gs=512, f=1408) — the accounting shows up in the roofline's
+useful-flops ratio.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamDef, act_fn, glu_act
+
+
+def moe_schema(cfg, n_layers: int) -> dict:
+    d, e, fe = cfg.d_model, cfg.n_experts, cfg.d_ff_expert
+    L = n_layers
+    sch = {
+        "router": ParamDef((L, d, e), ("layers", "embed", None), scale=0.1),
+        "w1": ParamDef((L, e, d, fe), ("layers", "experts", "embed", "ff")),
+        "w3": ParamDef((L, e, d, fe), ("layers", "experts", "embed", "ff")),
+        "w2": ParamDef((L, e, fe, d), ("layers", "experts", "ff", "embed")),
+    }
+    if cfg.d_ff_shared:
+        fs = cfg.d_ff_shared
+        sch["shared_w1"] = ParamDef((L, d, fs), ("layers", "embed", "ff"))
+        sch["shared_w3"] = ParamDef((L, d, fs), ("layers", "embed", "ff"))
+        sch["shared_w2"] = ParamDef((L, fs, d), ("layers", "ff", "embed"))
+        sch["shared_gate"] = ParamDef((L, d, 1), ("layers", "embed", None), scale=0.1)
+    return sch
+
+
+def capacity(cfg, group_size: int) -> int:
+    c = int(group_size * cfg.moe_top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(8, (c + 7) // 8 * 8)
+
+
+def router_topk(logits: jnp.ndarray, top_k: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """softmax → top-k → renormalized combine gates. logits: (..., E)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_p, top_idx = jax.lax.top_k(probs, top_k)
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, axis=-1, keepdims=True), 1e-9)
+    return top_p, top_idx
+
+
+def make_dispatch(top_p, top_idx, n_experts: int, cap: int):
+    """Build dispatch (G,S,E,C) bool-ish and combine (G,S,E,C) float tensors.
+
+    top_p/top_idx: (G, S, K). Position-in-expert via cumulative sum over the
+    flattened (S·K) assignment order (GShard §3.2); tokens past capacity drop.
+    """
+    g, s, k = top_idx.shape
+    onehot = jax.nn.one_hot(top_idx, n_experts, dtype=jnp.float32)  # (G,S,K,E)
+    flat = onehot.reshape(g, s * k, n_experts)
+    pos = jnp.cumsum(flat, axis=1) - flat                            # 0-based
+    pos = pos.reshape(g, s, k, n_experts)
+    # position of the chosen expert per (token, k); dead entries → cap (dropped)
+    pos_sel = jnp.sum(pos * onehot, axis=-1)                         # (G,S,K)
+    within = pos_sel < cap
+    # accumulate per-k outer products — never materialize a (G,S,K,E,C) tensor
+    dispatch = jnp.zeros((g, s, n_experts, cap), jnp.float32)
+    combine = jnp.zeros((g, s, n_experts, cap), jnp.float32)
+    for j in range(k):
+        e_oh = onehot[:, :, j, :]                                    # (G,S,E)
+        c_oh = jax.nn.one_hot(pos_sel[:, :, j].astype(jnp.int32), cap,
+                              dtype=jnp.float32)
+        c_oh = c_oh * within[:, :, j, None]
+        outer = jnp.einsum("gse,gsc->gsec", e_oh, c_oh)
+        dispatch = dispatch + outer
+        combine = combine + outer * top_p[:, :, j, None, None]
+    return dispatch, combine
+
+
+def moe_ffn(x: jnp.ndarray, p: dict, cfg, *, constrain=lambda t, *a: t):
+    """x: (B, S, d) → (B, S, d). p holds this layer's slices of moe_schema."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.moe_top_k
+    gs = min(cfg.moe_group, s)
+    assert (b * s) % gs == 0, (b, s, gs)
+    g = b * s // gs
+    cap = capacity(cfg, gs)
+    act = act_fn(glu_act(cfg.activation))
+
+    xg = x.reshape(g, gs, d)
+    # Weight-stationary decode: with one token per sequence the MoE
+    # activations are KB-scale — replicate them across `data` so GSPMD never
+    # re-gathers the GB-scale expert weights (measured 30 GB/step/device of
+    # fp32 weight all-gathers on dbrx-132b × decode_32k; §Perf hillclimb #3).
+    tok_b = None if s == 1 else "batchlike"
+    xg = constrain(xg, tok_b, None, None)
+    logits = jnp.einsum("gsd,de->gse", xg, p["router"].astype(x.dtype))
+    top_p, top_idx = router_topk(logits, k)
+    dispatch, combine = make_dispatch(top_p, top_idx, e, cap)
+    dispatch = constrain(dispatch.astype(x.dtype), tok_b, None, "experts", None)
+    combine = constrain(combine.astype(jnp.float32), tok_b, None, "experts", None)
+
+    # --- dispatch: groups-sharded tokens → experts-sharded slots --------------
+    xin = jnp.einsum("gsec,gsd->egcd", dispatch, xg)
+    xin = constrain(xin, "experts", tok_b, None, None)
+    h = act(jnp.einsum("egcd,edf->egcf", xin, p["w1"])) \
+        * jnp.einsum("egcd,edf->egcf", xin, p["w3"])
+    h = constrain(h, "experts", tok_b, None, "ff")
+    xout = jnp.einsum("egcf,efd->egcd", h, p["w2"])
+    xout = constrain(xout, "experts", tok_b, None, None)
+    y = jnp.einsum("gsec,egcd->gsd", combine.astype(jnp.float32),
+                   xout.astype(jnp.float32)).astype(x.dtype)
+
+    # --- shared experts (qwen2-moe), sigmoid-gated -----------------------------
+    if "shared_w1" in p:
+        hs = act(jnp.einsum("gsd,df->gsf", xg, p["shared_w1"])) \
+            * jnp.einsum("gsd,df->gsf", xg, p["shared_w3"])
+        ys = jnp.einsum("gsf,fd->gsd", hs, p["shared_w2"])
+        gate = jax.nn.sigmoid(
+            jnp.einsum("gsd,do->gso", xg, p["shared_gate"]).astype(jnp.float32))
+        y = y + (ys.astype(jnp.float32) * gate).astype(x.dtype)
+
+    return y.reshape(b, s, d)
+
+
+def load_balance_loss(logits: jnp.ndarray, top_idx: jnp.ndarray, n_experts: int):
+    """Switch-style aux loss: E · Σ_e f_e · p̄_e (for training integration)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    p_mean = jnp.mean(probs.reshape(-1, n_experts), axis=0)
+    counts = jnp.mean(
+        jax.nn.one_hot(top_idx.reshape(-1), n_experts, dtype=jnp.float32), axis=0)
+    return n_experts * jnp.sum(p_mean * counts)

@@ -1,0 +1,171 @@
+"""Model registry — one uniform API over all 10 assigned architectures.
+
+`build_model(cfg, opts)` returns a `ModelApi` whose members are plain
+functions of (params, batch[, cache]) suitable for jax.jit with explicit
+in/out shardings. `input_specs(cfg, shape)` produces ShapeDtypeStruct
+stand-ins for every model input of an assigned (arch × shape) cell — the
+dry-run lowers against these, allocating nothing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import encdec, rglru, ssm, transformer
+from repro.models.common import abstract_params, init_params
+from repro.models.transformer import ExecOptions
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    cfg: ArchConfig
+    opts: ExecOptions
+    schema: Any
+    train_loss: Callable   # (params, batch) -> (loss, metrics)
+    prefill: Callable      # (params, batch) -> (logits, cache)
+    decode: Callable       # (params, batch, cache) -> (logits, cache)
+    cache_shape: Callable  # (batch, max_len, dtype) -> abstract cache pytree
+
+    def init(self, key: jax.Array, dtype=None):
+        return init_params(self.schema, key, dtype or _dt(self.cfg))
+
+    def abstract(self, dtype=None):
+        return abstract_params(self.schema, dtype or _dt(self.cfg))
+
+
+def _dt(cfg: ArchConfig):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+
+
+def build_model(cfg: ArchConfig, opts: Optional[ExecOptions] = None) -> ModelApi:
+    opts = opts or ExecOptions()
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        mod = transformer
+        sch = transformer.schema(cfg)
+        return ModelApi(
+            cfg=cfg, opts=opts, schema=sch,
+            train_loss=functools.partial(mod.train_loss, cfg=cfg, opts=opts),
+            prefill=functools.partial(mod.prefill, cfg=cfg, opts=opts),
+            decode=functools.partial(mod.decode_step, cfg=cfg, opts=opts),
+            cache_shape=functools.partial(mod.cache_shape, cfg),
+        )
+    if fam == "ssm":
+        sch = ssm.schema(cfg)
+        return ModelApi(
+            cfg=cfg, opts=opts, schema=sch,
+            train_loss=functools.partial(ssm.train_loss, cfg=cfg, opts=opts),
+            prefill=functools.partial(ssm.prefill, cfg=cfg, opts=opts),
+            decode=functools.partial(ssm.decode_step, cfg=cfg, opts=opts),
+            cache_shape=functools.partial(ssm.cache_shape, cfg),
+        )
+    if fam == "hybrid":
+        sch = rglru.schema(cfg)
+
+        def train_loss(params, batch):
+            hidden, _ = rglru.forward(params, batch["tokens"], cfg, opts,
+                                      mode="train")
+            loss = transformer.chunked_ce_loss(
+                hidden, transformer.lm_head_weights(params, cfg),
+                batch["labels"], cfg, opts)
+            return loss, {"loss": loss}
+
+        def prefill(params, batch):
+            hidden, states = rglru.forward(params, batch["tokens"], cfg, opts,
+                                           mode="prefill")
+            logits = jnp.einsum(
+                "bsd,vd->bsv", hidden[:, -1:, :],
+                transformer.lm_head_weights(params, cfg)).astype(jnp.float32)
+            from repro.models.common import softcap
+            logits = softcap(logits, cfg.logit_softcap)
+            b, s = batch["tokens"].shape
+            return logits, {"layers": states,
+                            "pos": jnp.full((b,), s, jnp.int32)}
+
+        def decode(params, batch, cache):
+            pos = cache["pos"]
+            hidden, states = rglru.forward(
+                params, batch["tokens"], cfg, opts, mode="decode",
+                cache=cache["layers"], positions=pos)
+            logits = jnp.einsum(
+                "bsd,vd->bsv", hidden,
+                transformer.lm_head_weights(params, cfg)).astype(jnp.float32)
+            from repro.models.common import softcap
+            logits = softcap(logits, cfg.logit_softcap)
+            return logits, {"layers": states, "pos": pos + 1}
+
+        def cache_shape(batch, max_len, dtype=jnp.bfloat16):
+            return {"layers": rglru.cache_shape(cfg, batch, max_len, dtype),
+                    "pos": jax.ShapeDtypeStruct((batch,), jnp.int32)}
+
+        return ModelApi(cfg=cfg, opts=opts, schema=sch, train_loss=train_loss,
+                        prefill=prefill, decode=decode, cache_shape=cache_shape)
+    if fam == "encdec":
+        sch = encdec.schema(cfg)
+        return ModelApi(
+            cfg=cfg, opts=opts, schema=sch,
+            train_loss=functools.partial(encdec.train_loss, cfg=cfg, opts=opts),
+            prefill=functools.partial(encdec.prefill, cfg=cfg, opts=opts),
+            decode=functools.partial(encdec.decode_step, cfg=cfg, opts=opts),
+            cache_shape=functools.partial(encdec.cache_shape, cfg),
+        )
+    raise ValueError(f"unknown family {fam!r}")
+
+
+# ---------------------------------------------------------------------------
+# Dry-run input specs (ShapeDtypeStruct stand-ins, no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig,
+                dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """Model inputs for one (arch × shape) cell.
+
+    train:    {'tokens','labels'} (+ 'patch_embeds' vlm / 'frames' audio)
+    prefill:  {'tokens'} (+ frontend stubs)
+    decode:   {'tokens' (B,1)} — the cache comes via `ModelApi.cache_shape`.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((b, s), i32),
+            "labels": jax.ShapeDtypeStruct((b, s), i32),
+        }
+        if cfg.family == "vlm":
+            specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_image_tokens, cfg.d_model), dtype)
+        if cfg.family == "encdec":
+            specs["frames"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), dtype)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        if cfg.family == "vlm":
+            specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_image_tokens, cfg.d_model), dtype)
+        if cfg.family == "encdec":
+            specs["frames"] = jax.ShapeDtypeStruct((b, cfg.cross_len, cfg.d_model),
+                                                   dtype)
+        return specs
+    # decode: one new token against a seq_len-deep cache
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+
+
+def make_inputs(cfg: ArchConfig, shape: ShapeConfig, key: jax.Array,
+                dtype=jnp.bfloat16) -> Dict[str, jnp.ndarray]:
+    """Concrete random inputs matching `input_specs` (smoke tests/examples)."""
+    specs = input_specs(cfg, shape, dtype)
+    out = {}
+    for name, sds in specs.items():
+        key, k = jax.random.split(key)
+        if sds.dtype == jnp.int32:
+            out[name] = jax.random.randint(k, sds.shape, 0, cfg.vocab_size,
+                                           jnp.int32)
+        else:
+            out[name] = jax.random.normal(k, sds.shape, jnp.float32).astype(sds.dtype)
+    return out

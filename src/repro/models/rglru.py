@@ -1,0 +1,392 @@
+"""RecurrentGemma / Griffin hybrid — RG-LRU recurrent blocks + local attention
+in a (rec, rec, attn) pattern [arXiv:2402.19427].
+
+The RG-LRU recurrence h_t = a_t·h_{t-1} + √(1−a_t²)·(i_t⊙x_t) with
+a_t = exp(−c·softplus(Λ)·r_t) runs as a log-depth jax.lax.associative_scan
+over the sequence (fp32). Local attention uses the shared chunked-attention
+machinery with window=2048. Constant-size state (LRU h + window cache) →
+this family runs the long_500k cell.
+
+Layer pattern is heterogeneous, so params are stacked per block type
+('rec' ×18, 'attn' ×8 for 26 layers) and the layer loop is a static python
+unroll indexing those stacks; MLP + norms stack over all layers.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models.common import (
+    ParamDef, act_fn, apply_rope, causal_conv1d, glu_act, rms_norm,
+)
+
+LRU_C = 8.0
+
+
+def _counts(cfg):
+    pat = cfg.layer_pattern()
+    return sum(1 for b in pat if b == "rec"), sum(1 for b in pat if b == "attn")
+
+
+def schema(cfg) -> Dict[str, Any]:
+    d, w, f = cfg.d_model, cfg.lru_width, cfg.d_ff
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    L, v, k = cfg.n_layers, cfg.padded_vocab, cfg.conv_kernel
+    nr, na = _counts(cfg)
+    ni = "zeros" if cfg.norm_plus_one else "ones"
+    rec = {
+        "in_x": ParamDef((nr, d, w), ("layers", "embed", "ff")),
+        "in_gate": ParamDef((nr, d, w), ("layers", "embed", "ff")),
+        "conv_w": ParamDef((nr, k, w), ("layers", None, "ff"), init="small_normal"),
+        "gate_a_w": ParamDef((nr, w, w), ("layers", "embed", "ff"), scale=0.5),
+        "gate_a_b": ParamDef((nr, w), ("layers", "ff"), init="zeros"),
+        "gate_x_w": ParamDef((nr, w, w), ("layers", "embed", "ff"), scale=0.5),
+        "gate_x_b": ParamDef((nr, w), ("layers", "ff"), init="zeros"),
+        "lam": ParamDef((nr, w), ("layers", "ff"), init="ones"),
+        "out": ParamDef((nr, w, d), ("layers", "ff", "embed")),
+    }
+    from repro.models.transformer import attn_schema
+    att = attn_schema(cfg, na)
+    mlp = {
+        "t_norm": ParamDef((L, d), ("layers", None), init=ni),
+        "m_norm": ParamDef((L, d), ("layers", None), init=ni),
+        "w1": ParamDef((L, d, f), ("layers", "embed", "ff")),
+        "w3": ParamDef((L, d, f), ("layers", "embed", "ff")),
+        "w2": ParamDef((L, f, d), ("layers", "ff", "embed")),
+    }
+    return {
+        "embed": ParamDef((v, d), ("vocab", "embed"), init="small_normal"),
+        "final_norm": ParamDef((d,), (None,), init=ni),
+        "rec": rec,
+        "attn": att,
+        "mlp": mlp,
+    }
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+def _lru_gates(x, rp):
+    """x: (B,S,w) → log-decay la (fp32), gated input gx (fp32)."""
+    r = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", x, rp["gate_a_w"])
+                       .astype(jnp.float32) + rp["gate_a_b"].astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", x, rp["gate_x_w"])
+                       .astype(jnp.float32) + rp["gate_x_b"].astype(jnp.float32))
+    la = -LRU_C * jax.nn.softplus(rp["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(la)
+    gx = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * i * x.astype(jnp.float32)
+    return a, gx
+
+
+def rg_lru_scan(a, gx, h0: Optional[jnp.ndarray] = None):
+    """Associative linear recurrence h_t = a_t·h_{t-1} + gx_t over axis 1."""
+    if h0 is not None:
+        # fold the initial state into the first input
+        gx = gx.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    av, bv = jax.lax.associative_scan(combine, (a, gx), axis=1)
+    return bv  # (B,S,w) hidden states
+
+
+def rg_lru_scan_chunked(a, gx, h0: Optional[jnp.ndarray] = None, *,
+                        chunk: int = 256, unroll: bool = False):
+    """Chunked linear recurrence: log-depth associative scan within chunks,
+    lax.scan state carry across chunks.
+
+    Differentiating a full-sequence associative_scan keeps O(log S) fp32
+    (B,S,w) intermediates alive — measured 109 GiB/device on recurrentgemma
+    train_4k (EXPERIMENTS.md §Perf). Chunking bounds the AD working set to
+    O(B·chunk·w·log chunk) while staying numerically identical."""
+    b, s, w = a.shape
+    chunk = min(chunk, s)
+    if s % chunk or s == chunk:
+        return rg_lru_scan(a, gx, h0)
+    nc = s // chunk
+    ac = a.reshape(b, nc, chunk, w).transpose(1, 0, 2, 3)
+    gc = gx.reshape(b, nc, chunk, w).transpose(1, 0, 2, 3)
+
+    def body(h, xs):
+        a_k, g_k = xs
+        hs = rg_lru_scan(a_k, g_k, h0=h)
+        return hs[:, -1], hs
+
+    from repro.models.common import scan_or_unroll
+    init = h0 if h0 is not None else jnp.zeros((b, w), a.dtype)
+    _, ys = scan_or_unroll(body, init, (ac, gc), unroll=unroll)
+    return ys.transpose(1, 0, 2, 3).reshape(b, s, w)
+
+
+def rec_block_full(x, rp, cfg, constrain, unroll: bool = False):
+    """Full-sequence recurrent block. Returns (out, state dict)."""
+    gate = act_fn("gelu")(jnp.einsum("bsd,dw->bsw", x, rp["in_gate"]))
+    xr = jnp.einsum("bsd,dw->bsw", x, rp["in_x"])
+    xr, conv_state = causal_conv1d(xr, rp["conv_w"])
+    xr = constrain(xr, "batchlike", None, "ff")
+    a, gx = _lru_gates(xr, rp)
+    h = rg_lru_scan_chunked(a, gx, chunk=cfg.ssm_chunk, unroll=unroll)
+    y = (h.astype(x.dtype)) * gate
+    out = jnp.einsum("bsw,wd->bsd", y, rp["out"])
+    return out, {"h": h[:, -1].astype(jnp.float32), "conv": conv_state}
+
+
+def rec_block_decode(x, rp, cfg, state):
+    """One-step recurrent block. x: (B,1,d)."""
+    gate = act_fn("gelu")(jnp.einsum("bsd,dw->bsw", x, rp["in_gate"]))
+    xr = jnp.einsum("bsd,dw->bsw", x, rp["in_x"])
+    xr, conv_state = causal_conv1d(xr, rp["conv_w"], state=state["conv"])
+    a, gx = _lru_gates(xr, rp)
+    h = a[:, 0] * state["h"] + gx[:, 0]
+    y = h[:, None].astype(x.dtype) * gate
+    out = jnp.einsum("bsw,wd->bsd", y, rp["out"])
+    return out, {"h": h, "conv": conv_state}
+
+
+# ---------------------------------------------------------------------------
+# Local attention (MQA, window)
+# ---------------------------------------------------------------------------
+
+def attn_block_full(x, ap, cfg, opts, positions, want_cache):
+    from repro.models.transformer import _expand_kv, head_mask
+    c = opts.constrain
+    q = jnp.einsum("bsd,dhk->bshk", x, ap["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, ap["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, ap["wv"])
+    q = apply_rope(q, positions, theta=cfg.rope_theta)
+    k = apply_rope(k, positions, theta=cfg.rope_theta)
+    kx, vx = _expand_kv(k, v, cfg)
+    qp = c(q[:, :, :, None, :], "batchlike", None, "heads_flat", None, None)
+    kx = c(kx, "batchlike", None, "heads_flat", None)
+    vx = c(vx, "batchlike", None, "heads_flat", None)
+    o = attn_mod.attention(qp, kx, vx, causal=True, window=cfg.window,
+                           scale=cfg.head_dim ** -0.5, impl=opts.attn_impl,
+                           q_chunk=opts.q_chunk, kv_chunk=opts.kv_chunk,
+                           unroll=opts.unroll_scans)
+    o = o[:, :, :, 0, :] * head_mask(cfg, x.dtype)[None, None, :, None]
+    out = jnp.einsum("bshk,hkd->bsd", o, ap["wo"])
+    cache = None
+    if want_cache:
+        # keep the trailing `window` positions, ring-aligned (slot = pos % W)
+        s = x.shape[1]
+        w = cfg.window
+        if s >= w:
+            k_tail, v_tail = k[:, s - w:], v[:, s - w:]
+            shift = s % w
+            k_ring = jnp.roll(k_tail, shift, axis=1)
+            v_ring = jnp.roll(v_tail, shift, axis=1)
+        else:
+            pad = [(0, 0), (0, w - s), (0, 0), (0, 0)]
+            k_ring, v_ring = jnp.pad(k, pad), jnp.pad(v, pad)
+        cache = {"k": k_ring, "v": v_ring}
+    return out, cache
+
+
+def attn_block_decode(x, ap, cfg, positions, cache):
+    """x: (B,1,d); cache k/v: (B, window, KV, hd) ring; positions: (B,)."""
+    b = x.shape[0]
+    w = cfg.window
+    q = jnp.einsum("bsd,dhk->bshk", x, ap["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, ap["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, ap["wv"])
+    q = apply_rope(q, positions[:, None], theta=cfg.rope_theta)
+    k = apply_rope(k, positions[:, None], theta=cfg.rope_theta)
+    slot = positions % w
+    onehot = (jnp.arange(w)[None, :] == slot[:, None])[:, :, None, None]
+    oh = onehot.astype(cache["k"].dtype)
+    k_cache = cache["k"] * (1 - oh) + oh * k.astype(cache["k"].dtype)
+    v_cache = cache["v"] * (1 - oh) + oh * v.astype(cache["v"].dtype)
+    kvp, gp = cfg.padded_kv_group
+    qg = q.reshape(b, 1, kvp, gp, cfg.head_dim)
+    valid_len = jnp.minimum(positions + 1, w)
+    o = attn_mod.decode_attention(qg, k_cache, v_cache, valid_len,
+                                  scale=cfg.head_dim ** -0.5)
+    o = o.reshape(b, 1, cfg.n_heads_padded, cfg.head_dim)
+    from repro.models.transformer import head_mask
+    o = o * head_mask(cfg, o.dtype)[None, None, :, None]
+    out = jnp.einsum("bshk,hkd->bsd", o, ap["wo"])
+    return out, {"k": k_cache, "v": v_cache}
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+def _mlp(x, mp, cfg, constrain):
+    act = act_fn(glu_act(cfg.activation))
+    h = act(jnp.einsum("bsd,df->bsf", x, mp["w1"])) \
+        * jnp.einsum("bsd,df->bsf", x, mp["w3"])
+    h = constrain(h, "batchlike", None, "ff")
+    return jnp.einsum("bsf,fd->bsd", h, mp["w2"])
+
+
+def _slice(tree, i):
+    return jax.tree.map(lambda t: t[i], tree)
+
+
+def _one_layer(x, mp, kind, rp_or_ap, cfg, opts, positions, mode, lc):
+    """Shared single-layer body (temporal block + MLP)."""
+    c = opts.constrain
+    xn = rms_norm(x, mp["t_norm"], plus_one=cfg.norm_plus_one)
+    if kind == "rec":
+        if mode == "decode":
+            t_out, st = rec_block_decode(xn, rp_or_ap, cfg, lc)
+        else:
+            t_out, st = rec_block_full(xn, rp_or_ap, cfg, c,
+                                       unroll=opts.unroll_scans)
+            if mode != "prefill":
+                st = None
+    else:
+        if mode == "decode":
+            t_out, st = attn_block_decode(xn, rp_or_ap, cfg,
+                                          positions.reshape(-1), lc)
+        else:
+            t_out, st = attn_block_full(xn, rp_or_ap, cfg, opts, positions,
+                                        want_cache=(mode == "prefill"))
+    x = x + t_out
+    m = _mlp(rms_norm(x, mp["m_norm"], plus_one=cfg.norm_plus_one),
+             mp, cfg, c)
+    return x + m, st
+
+
+def _forward_train_grouped(params, x, cfg, opts, positions):
+    """Training path: lax.scan over whole (rec,rec,attn) pattern groups.
+
+    The python-unrolled 26-layer graph leaves XLA's scheduler free to run
+    every checkpointed layer's backward-recompute concurrently — measured
+    109 GiB/device of simultaneous fp32 recompute residuals. A scan over
+    pattern groups forces serial processing (peak = one group's working
+    set); the trailing partial group unrolls."""
+    from repro.models.transformer import remat_wrap
+    pat = cfg.block_pattern
+    plen = len(pat)
+    n_rec_per = sum(1 for k in pat if k == "rec")
+    n_att_per = plen - n_rec_per
+    n_groups = cfg.n_layers // plen
+    regroup = lambda t, n, per: t[: n * per].reshape(  # noqa: E731
+        (n, per) + t.shape[1:])
+    rec_g = jax.tree.map(lambda t: regroup(t, n_groups, n_rec_per),
+                         params["rec"])
+    att_g = jax.tree.map(lambda t: regroup(t, n_groups, n_att_per),
+                         params["attn"])
+    mlp_g = jax.tree.map(lambda t: regroup(t, n_groups, plen), params["mlp"])
+
+    def group_body(h, xs):
+        recp, attnp, mlpp = xs
+        ri = ai = 0
+        for j, kind in enumerate(pat):
+            mp = _slice(mlpp, j)
+            if kind == "rec":
+                bp = _slice(recp, ri)
+                ri += 1
+            else:
+                bp = _slice(attnp, ai)
+                ai += 1
+            h = opts.constrain(h, "batchlike", opts.seq_axis, None)
+            h, _ = _one_layer(h, mp, kind, bp, cfg, opts, positions,
+                              "train", None)
+        return h, None
+
+    from repro.models.common import scan_or_unroll
+    x, _ = scan_or_unroll(remat_wrap(group_body, opts.remat), x,
+                          (rec_g, att_g, mlp_g), unroll=opts.unroll_scans)
+    # trailing partial group (26 = 8×3 + 2: two rec layers)
+    ri, ai = n_groups * n_rec_per, n_groups * n_att_per
+    for li in range(n_groups * plen, cfg.n_layers):
+        kind = cfg.layer_pattern()[li]
+        mp = _slice(params["mlp"], li)
+        bp = _slice(params["rec"] if kind == "rec" else params["attn"],
+                    ri if kind == "rec" else ai)
+        ri, ai = ri + (kind == "rec"), ai + (kind == "attn")
+        x = opts.constrain(x, "batchlike", opts.seq_axis, None)
+        body = remat_wrap(
+            lambda h, mp=mp, kind=kind, bp=bp: _one_layer(
+                h, mp, kind, bp, cfg, opts, positions, "train", None),
+            opts.remat)
+        x, _ = body(x)
+    return x
+
+
+def forward(params, tokens, cfg, opts, *, mode="train", cache=None,
+            positions=None):
+    """mode: train | prefill | decode. Returns (hidden, new_cache list)."""
+    from repro.models.transformer import embed_tokens, remat_wrap
+    c = opts.constrain
+    x = embed_tokens(params, tokens, cfg, opts)
+    if positions is None:
+        positions = jnp.arange(tokens.shape[1])[None, :]
+    if mode == "train" and cfg.block_pattern \
+            and cfg.n_layers >= 2 * len(cfg.block_pattern):
+        x = _forward_train_grouped(params, x, cfg, opts, positions)
+        x = rms_norm(x, params["final_norm"], plus_one=cfg.norm_plus_one)
+        return x, []
+    pat = cfg.layer_pattern()
+    new_cache = []
+    ri = ai = 0
+    for li, kind in enumerate(pat):
+        mp = _slice(params["mlp"], li)
+        lc = None if cache is None else cache[li]
+
+        def one_layer(x, mp=mp, li=li, kind=kind, ri=ri, ai=ai, lc=lc):
+            xn = rms_norm(x, mp["t_norm"], plus_one=cfg.norm_plus_one)
+            if kind == "rec":
+                rp = _slice(params["rec"], ri)
+                if mode == "decode":
+                    t_out, st = rec_block_decode(xn, rp, cfg, lc)
+                else:
+                    t_out, st = rec_block_full(xn, rp, cfg, c,
+                                               unroll=opts.unroll_scans)
+                    if mode != "prefill":
+                        st = None
+            else:
+                ap = _slice(params["attn"], ai)
+                if mode == "decode":
+                    t_out, st = attn_block_decode(
+                        xn, ap, cfg, positions.reshape(-1), lc)
+                else:
+                    t_out, st = attn_block_full(
+                        xn, ap, cfg, opts, positions, want_cache=(mode == "prefill"))
+            x = x + t_out
+            m = _mlp(rms_norm(x, mp["m_norm"], plus_one=cfg.norm_plus_one),
+                     mp, cfg, c)
+            return x + m, st
+
+        if mode == "train" and opts.remat != "none":
+            one_layer = remat_wrap(one_layer, opts.remat)
+        # constrain OUTSIDE the checkpointed body: the remat-saved inter-layer
+        # residual is then the SP-sharded bf16 tensor, not a replicated fp32
+        # transient (the python-unrolled stack otherwise kept ~26 full fp32
+        # activations alive — 109 GiB/device; EXPERIMENTS.md §Perf P0d)
+        x = c(x, "batchlike", opts.seq_axis if mode == "train" else None, None)
+        x, st = one_layer(x)
+        new_cache.append(st)
+        ri, ai = ri + (kind == "rec"), ai + (kind == "attn")
+    x = rms_norm(x, params["final_norm"], plus_one=cfg.norm_plus_one)
+    return x, new_cache
+
+
+def cache_shape(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Per-layer state list: rec {h, conv} / attn {k, v} (+ global pos)."""
+    w, k = cfg.lru_width, cfg.conv_kernel
+    win, kv, hd = cfg.window, cfg.kv_pad, cfg.head_dim
+    out = []
+    for kind in cfg.layer_pattern():
+        if kind == "rec":
+            out.append({
+                "h": jax.ShapeDtypeStruct((batch, w), jnp.float32),
+                "conv": jax.ShapeDtypeStruct((batch, k - 1, w), dtype),
+            })
+        else:
+            out.append({
+                "k": jax.ShapeDtypeStruct((batch, win, kv, hd), dtype),
+                "v": jax.ShapeDtypeStruct((batch, win, kv, hd), dtype),
+            })
+    return out

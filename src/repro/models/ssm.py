@@ -1,0 +1,235 @@
+"""Mamba-2 — SSD (state-space duality) blocks [arXiv:2405.21060].
+
+Chunked SSD: within a chunk the recurrence is computed as a (masked,
+decay-weighted) attention-like quadratic; across chunks a recurrent state
+(B, H, P, N) carries via lax.scan. This is the TPU-native adaptation of the
+paper's chunk-parallel algorithm — block sizes chosen so the per-chunk
+working set (T×T attention tile + state) lives in VMEM-scale memory.
+
+Shapes: x (B,S,H,P) with H = d_inner/head_dim heads (48 for mamba2-780m,
+sharding 3-per-chip over the 16-way model axis); B/C projections are shared
+across heads (n_groups=1), state size N = 128. Decode is an O(1) update →
+this family runs the long_500k cell.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamDef, causal_conv1d, rms_norm
+
+
+def schema(cfg) -> Dict[str, Any]:
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    L, v, k = cfg.n_layers, cfg.padded_vocab, cfg.conv_kernel
+    layers = {
+        "norm": ParamDef((L, d), ("layers", None), init="ones"),
+        "in_z": ParamDef((L, d, di), ("layers", "embed", "ff")),
+        "in_x": ParamDef((L, d, di), ("layers", "embed", "ff")),
+        "in_b": ParamDef((L, d, n), ("layers", "embed", None)),
+        "in_c": ParamDef((L, d, n), ("layers", "embed", None)),
+        "in_dt": ParamDef((L, d, h), ("layers", "embed", "heads")),
+        "conv_x": ParamDef((L, k, di), ("layers", None, "ff"), init="small_normal"),
+        "conv_b": ParamDef((L, k, n), ("layers", None, None), init="small_normal"),
+        "conv_c": ParamDef((L, k, n), ("layers", None, None), init="small_normal"),
+        "dt_bias": ParamDef((L, h), ("layers", "heads"), init="zeros"),
+        "a_log": ParamDef((L, h), ("layers", "heads"), init="zeros"),
+        "skip_d": ParamDef((L, h), ("layers", "heads"), init="ones"),
+        "gate_norm": ParamDef((L, di), ("layers", "ff"), init="ones"),
+        "out": ParamDef((L, di, d), ("layers", "ff", "embed")),
+    }
+    sch = {
+        "embed": ParamDef((v, d), ("vocab", "embed"), init="small_normal"),
+        "final_norm": ParamDef((d,), (None,), init="ones"),
+        "layers": layers,
+    }
+    if not cfg.tie_embeddings:
+        sch["lm_head"] = ParamDef((v, d), ("vocab", "embed"), init="small_normal")
+    return sch
+
+
+def _ssd_chunked(xh, bt, ct, dt, a, cfg, h0, constrain, unroll=False):
+    """Chunk-parallel SSD.
+
+    xh: (B,S,H,P); bt/ct: (B,S,N); dt: (B,S,H) (post-softplus); a: (H,) < 0.
+    h0: initial state (B,H,P,N) or None. Returns (y (B,S,H,P), h_final).
+    """
+    b, s, h, p = xh.shape
+    n = bt.shape[-1]
+    t = min(cfg.ssm_chunk, s)
+    assert s % t == 0
+    nc = s // t
+
+    xc = xh.reshape(b, nc, t, h, p).transpose(1, 0, 2, 3, 4)
+    bc = bt.reshape(b, nc, t, n).transpose(1, 0, 2, 3)
+    cc = ct.reshape(b, nc, t, n).transpose(1, 0, 2, 3)
+    dc = dt.reshape(b, nc, t, h).transpose(1, 0, 2, 3)
+
+    af = a.astype(jnp.float32)
+
+    def chunk_fn(hprev, xs):
+        xk, bk, ck, dk = xs                       # (B,T,H,P) (B,T,N) (B,T,H)
+        dkf = dk.astype(jnp.float32)
+        la = dkf * af                             # log decay per step (B,T,H)
+        lcum = jnp.cumsum(la, axis=1)             # inclusive
+        # intra-chunk quadratic: att[i,j] = C_i·B_j · exp(lcum_i - lcum_j) · dt_j, i≥j
+        scores = jnp.einsum("bin,bjn->bij", ck.astype(jnp.float32),
+                            bk.astype(jnp.float32))
+        decay = lcum[:, :, None, :] - lcum[:, None, :, :]     # (B,T,T,H)
+        causal = jnp.tril(jnp.ones((t, t), bool))
+        w = jnp.where(causal[None, :, :, None], jnp.exp(decay), 0.0)
+        att = scores[:, :, :, None] * w * dkf[:, None, :, :]  # (B,T,T,H)
+        y = jnp.einsum("bijh,bjhp->bihp", att, xk.astype(jnp.float32))
+        # inter-chunk: contribution of carried state
+        y = y + jnp.einsum("bin,bhpn->bihp", ck.astype(jnp.float32), hprev) \
+            * jnp.exp(lcum)[:, :, :, None]
+        # state update: h_new = exp(l_T)·h_prev + Σ_j exp(l_T - l_j)·dt_j·B_j⊗x_j
+        ltot = lcum[:, -1:, :]                                # (B,1,H)
+        wj = jnp.exp(ltot - lcum) * dkf                        # (B,T,H)
+        s_chunk = jnp.einsum("bjn,bjh,bjhp->bhpn", bk.astype(jnp.float32),
+                             wj, xk.astype(jnp.float32))
+        hnew = jnp.exp(ltot[:, 0, :])[:, :, None, None] * hprev + s_chunk
+        return hnew, y.astype(xh.dtype)
+
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    from repro.models.common import scan_or_unroll
+    hf, ys = scan_or_unroll(chunk_fn, h0, (xc, bc, cc, dc), unroll=unroll)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, p)
+    return y, hf
+
+
+def _layer_inputs(x, lp, cfg, conv_state=None):
+    """Projections + causal conv + activations for one layer."""
+    z = jnp.einsum("bsd,de->bse", x, lp["in_z"])
+    xi = jnp.einsum("bsd,de->bse", x, lp["in_x"])
+    bt = jnp.einsum("bsd,dn->bsn", x, lp["in_b"])
+    ct = jnp.einsum("bsd,dn->bsn", x, lp["in_c"])
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, lp["in_dt"])
+    cs = {} if conv_state is None else conv_state
+    xi, cs_x = causal_conv1d(xi, lp["conv_x"], state=cs.get("x"))
+    bt, cs_b = causal_conv1d(bt, lp["conv_b"], state=cs.get("b"))
+    ct, cs_c = causal_conv1d(ct, lp["conv_c"], state=cs.get("c"))
+    xi, bt, ct = jax.nn.silu(xi), jax.nn.silu(bt), jax.nn.silu(ct)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + lp["dt_bias"].astype(jnp.float32))
+    return z, xi, bt, ct, dt, {"x": cs_x, "b": cs_b, "c": cs_c}
+
+
+def _finish(y, z, xi, lp, cfg):
+    """Skip connection + gated RMSNorm + out projection."""
+    b, s, _ = z.shape
+    h, p = cfg.ssm_heads, cfg.ssm_head_dim
+    y = y + xi.reshape(b, s, h, p) * lp["skip_d"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(b, s, h * p)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 lp["gate_norm"])
+    return jnp.einsum("bse,ed->bsd", y, lp["out"])
+
+
+def layer_full(x, lp, cfg, constrain, unroll=False):
+    """Full-sequence SSD layer (train / prefill). Returns (out, state)."""
+    b, s, d = x.shape
+    h, p = cfg.ssm_heads, cfg.ssm_head_dim
+    xn = rms_norm(x, lp["norm"])
+    z, xi, bt, ct, dt, conv_state = _layer_inputs(xn, lp, cfg)
+    a = -jnp.exp(lp["a_log"].astype(jnp.float32))
+    xh = constrain(xi.reshape(b, s, h, p), "batchlike", None, "heads", None)
+    y, hf = _ssd_chunked(xh, bt, ct, dt, a, cfg, None, constrain, unroll)
+    out = _finish(y, z, xi, lp, cfg)
+    return x + out, {"h": hf, "conv": conv_state, }
+
+
+def layer_decode(x, lp, cfg, state):
+    """Single-step recurrence. x: (B,1,d); state {'h': (B,H,P,N), 'conv': ...}."""
+    b = x.shape[0]
+    h, p = cfg.ssm_heads, cfg.ssm_head_dim
+    xn = rms_norm(x, lp["norm"])
+    z, xi, bt, ct, dt, conv_state = _layer_inputs(xn, lp, cfg, state["conv"])
+    a = -jnp.exp(lp["a_log"].astype(jnp.float32))
+    xh = xi.reshape(b, 1, h, p).astype(jnp.float32)
+    decay = jnp.exp(dt[:, 0, :] * a)                      # (B,H)
+    hnew = decay[:, :, None, None] * state["h"] + jnp.einsum(
+        "bn,bh,bhp->bhpn", bt[:, 0].astype(jnp.float32), dt[:, 0], xh[:, 0])
+    y = jnp.einsum("bn,bhpn->bhp", ct[:, 0].astype(jnp.float32), hnew)
+    y = y[:, None].astype(x.dtype)                        # (B,1,H,P)
+    out = _finish(y, z, xi, lp, cfg)
+    return x + out, {"h": hnew, "conv": conv_state}
+
+
+# ---------------------------------------------------------------------------
+# Model entry points (layer-stacked scan, same contract as transformer.py)
+# ---------------------------------------------------------------------------
+
+def _forward_full(params, tokens, cfg, opts, *, mode):
+    from repro.models.transformer import embed_tokens, remat_wrap
+    x = embed_tokens(params, tokens, cfg, opts)
+
+    def body(h, lp):
+        h = opts.constrain(h, "batchlike", opts.seq_axis, None)
+        h, st = layer_full(h, lp, cfg, opts.constrain, opts.unroll_scans)
+        return h, (st if mode == "prefill" else None)
+
+    from repro.models.common import scan_or_unroll
+    x, states = scan_or_unroll(
+        remat_wrap(body, opts.remat if mode == "train" else "none"),
+        x, params["layers"], unroll=opts.unroll_scans)
+    return rms_norm(x, params["final_norm"]), states
+
+
+def train_loss(params, batch, cfg, opts):
+    from repro.models.transformer import chunked_ce_loss, lm_head_weights
+    hidden, _ = _forward_full(params, batch["tokens"], cfg, opts, mode="train")
+    loss = chunked_ce_loss(hidden, lm_head_weights(params, cfg),
+                           batch["labels"], cfg, opts)
+    return loss, {"loss": loss}
+
+
+def prefill(params, batch, cfg, opts):
+    from repro.models.transformer import lm_head_weights
+    hidden, states = _forward_full(params, batch["tokens"], cfg, opts,
+                                   mode="prefill")
+    logits = jnp.einsum("bsd,vd->bsv", hidden[:, -1:, :],
+                        lm_head_weights(params, cfg)).astype(jnp.float32)
+    b, s = batch["tokens"].shape
+    cache = dict(states, pos=jnp.full((b,), s, jnp.int32))
+    return logits, cache
+
+
+def decode_step(params, batch, cache, cfg, opts):
+    from repro.models.transformer import embed_tokens, lm_head_weights
+    x = embed_tokens(params, batch["tokens"], cfg, opts)
+    kv = {"h": cache["h"], "conv": cache["conv"]}
+
+    def body(h, xs):
+        lp, st = xs
+        h, st = layer_decode(h, lp, cfg, st)
+        return h, st
+
+    from repro.models.common import scan_or_unroll
+    x, new_states = scan_or_unroll(body, x, (params["layers"], kv),
+                                   unroll=opts.unroll_scans)
+    x = rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,vd->bsv", x,
+                        lm_head_weights(params, cfg)).astype(jnp.float32)
+    new_cache = dict(new_states, pos=cache["pos"] + 1)
+    return logits, new_cache
+
+
+def cache_shape(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """SSM state is O(1) in context length — max_len only bounds positions."""
+    L, h, p, n = cfg.n_layers, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    di, k = cfg.d_inner, cfg.conv_kernel
+    ns = cfg.ssm_state
+    return {
+        "h": jax.ShapeDtypeStruct((L, batch, h, p, n), jnp.float32),
+        "conv": {
+            "x": jax.ShapeDtypeStruct((L, batch, k - 1, di), dtype),
+            "b": jax.ShapeDtypeStruct((L, batch, k - 1, ns), dtype),
+            "c": jax.ShapeDtypeStruct((L, batch, k - 1, ns), dtype),
+        },
+        "pos": jax.ShapeDtypeStruct((batch,), jnp.int32),
+    }

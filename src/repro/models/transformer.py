@@ -1,0 +1,383 @@
+"""Decoder-only transformer — covers the dense, moe and vlm families.
+
+Design notes (DESIGN.md §6):
+  * layer-stacked params + lax.scan over layers (jax.checkpoint policy on the
+    body) → HLO size O(1) in depth; 64-layer qwen2.5 compiles like 12 layers.
+  * GQA executes with KV heads expanded to H and head-padded to a multiple of
+    `head_pad` (the TP axis size): attention then shards over the flat head
+    dim for every arch, including the 15/40/10-head ones that don't divide 16.
+    Dead pad heads carry zeros; their wo rows don't exist, so outputs are exact.
+  * sharded-vocab chunked cross-entropy: logits are never materialized beyond
+    (B, ce_chunk, V) and the vocab dim stays sharded on `model`.
+  * vlm (llava-next): precomputed anyres patch embeddings (frontend STUB)
+    overwrite the leading n_image_tokens embedding positions.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models.common import ParamDef, act_fn, apply_rope, glu_act, rms_norm, softcap
+
+
+def _noop_constrain(x, *logical):
+    return x
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecOptions:
+    """Execution-strategy knobs (everything performance, nothing semantic)."""
+    attn_impl: str = "chunked"        # chunked | reference
+    q_chunk: int = 1024
+    kv_chunk: int = 1024
+    ce_chunk: int = 512
+    remat: str = "none"               # none | dots | full
+    # Megatron-style sequence parallelism on the residual stream: the layer
+    # carry is sharded seq→model, cutting saved-activation memory 16×; GSPMD
+    # inserts the all-gather/reduce-scatter pair at the attention boundary.
+    act_seq_shard: bool = False
+    moe_group: Optional[int] = None   # override cfg.moe_group
+    constrain: Callable = _noop_constrain
+    # dry-run cost probes: statically unroll every internal lax.scan so
+    # cost_analysis counts loop bodies exactly (see common.scan_or_unroll)
+    unroll_scans: bool = False
+
+    @property
+    def seq_axis(self) -> Optional[str]:
+        return "seq" if self.act_seq_shard else None
+
+
+def remat_wrap(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return jax.checkpoint(fn)
+
+
+# ---------------------------------------------------------------------------
+# Schema
+# ---------------------------------------------------------------------------
+
+def attn_schema(cfg, L: int, prefix: str = "") -> Dict[str, Any]:
+    """QKV/O projections with distribution-time head padding (ArchConfig.tp_pad).
+
+    Dead heads are masked to zero contribution in `attn_block` — outputs are
+    exactly the real-head model's, and dead slices receive zero gradient."""
+    d, hd = cfg.d_model, cfg.head_dim
+    hp, kvp = cfg.n_heads_padded, cfg.kv_pad
+    sch = {
+        prefix + "wq": ParamDef((L, d, hp, hd), ("layers", "embed", "heads", None)),
+        prefix + "wk": ParamDef((L, d, kvp, hd), ("layers", "embed", "heads", None)),
+        prefix + "wv": ParamDef((L, d, kvp, hd), ("layers", "embed", "heads", None)),
+        prefix + "wo": ParamDef((L, hp, hd, d), ("layers", "heads", None, "embed")),
+    }
+    if cfg.qkv_bias and not prefix:
+        sch["bq"] = ParamDef((L, hp, hd), ("layers", "heads", None), init="zeros")
+        sch["bk"] = ParamDef((L, kvp, hd), ("layers", "heads", None), init="zeros")
+        sch["bv"] = ParamDef((L, kvp, hd), ("layers", "heads", None), init="zeros")
+    return sch
+
+
+def head_mask(cfg, dtype=jnp.float32) -> jnp.ndarray:
+    """(Hp,) — 1 for real heads (kv < n_kv_heads and g < q_per_kv), else 0."""
+    kvp, gp = cfg.padded_kv_group
+    kvi = jnp.arange(kvp * gp) // gp
+    gi = jnp.arange(kvp * gp) % gp
+    return ((kvi < cfg.n_kv_heads) & (gi < cfg.q_per_kv)).astype(dtype)
+
+
+def schema(cfg) -> Dict[str, Any]:
+    d, f = cfg.d_model, cfg.d_ff
+    L, v = cfg.n_layers, cfg.padded_vocab
+    norm_init = "zeros" if cfg.norm_plus_one else "ones"
+    layers: Dict[str, Any] = {
+        "attn_norm": ParamDef((L, d), ("layers", None), init=norm_init),
+        "ffn_norm": ParamDef((L, d), ("layers", None), init=norm_init),
+    }
+    layers.update(attn_schema(cfg, L))
+    if cfg.family == "moe":
+        layers.update(moe_mod.moe_schema(cfg, L))
+    else:
+        layers["w1"] = ParamDef((L, d, f), ("layers", "embed", "ff"))
+        layers["w3"] = ParamDef((L, d, f), ("layers", "embed", "ff"))
+        layers["w2"] = ParamDef((L, f, d), ("layers", "ff", "embed"))
+    sch = {
+        "embed": ParamDef((v, d), ("vocab", "embed"), init="small_normal"),
+        "final_norm": ParamDef((d,), (None,), init=norm_init),
+        "layers": layers,
+    }
+    if not cfg.tie_embeddings:
+        sch["lm_head"] = ParamDef((v, d), ("vocab", "embed"), init="small_normal")
+    return sch
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _project_qkv(x, p, cfg, prefix=""):
+    q = jnp.einsum("bsd,dhk->bshk", x, p[prefix + "wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p[prefix + "wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p[prefix + "wv"])
+    if "bq" in p and not prefix:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    return q, k, v
+
+
+def _expand_kv(k, v, cfg):
+    """(B,S,KVp,D) → (B,S,Hp,D) by repeating each kv head g_pad times."""
+    gp = cfg.g_pad
+    if gp > 1:
+        k = jnp.repeat(k, gp, axis=2)
+        v = jnp.repeat(v, gp, axis=2)
+    return k, v
+
+
+def attn_block(x, p, cfg, opts: ExecOptions, *, positions,
+               mode: str, cache: Optional[dict] = None):
+    """Self-attention. Returns (out, new_cache_entry).
+
+    mode: 'train' / 'prefill' (full attention over S positions; 'train' skips
+    cache emission so the layer scan carries nothing dead) or 'decode' (one
+    position; cache holds (B, Smax, KV, D) K/V; positions (B,1) write index).
+    """
+    c = opts.constrain
+    q, k, v = _project_qkv(x, p, cfg)
+    q = apply_rope(q, positions, fraction=cfg.rope_fraction, theta=cfg.rope_theta)
+    k = apply_rope(k, positions, fraction=cfg.rope_fraction, theta=cfg.rope_theta)
+    scale = cfg.head_dim ** -0.5
+
+    if mode in ("train", "prefill"):
+        kx, vx = _expand_kv(k, v, cfg)
+        qp = c(q[:, :, :, None, :], "batchlike", None, "heads_flat", None, None)
+        kx = c(kx, "batchlike", None, "heads_flat", None)
+        vx = c(vx, "batchlike", None, "heads_flat", None)
+        o = attn_mod.attention(
+            qp, kx, vx, causal=True, window=cfg.window, scale=scale,
+            impl=opts.attn_impl, q_chunk=opts.q_chunk, kv_chunk=opts.kv_chunk,
+            unroll=opts.unroll_scans)
+        o = o[:, :, :, 0, :]
+        new_cache = {"k": k, "v": v} if mode == "prefill" else None
+    else:  # decode
+        assert cache is not None
+        b = x.shape[0]
+        pos_b = positions.reshape(-1)             # (B,)
+        # write this step's k/v at each sequence position `pos_b`
+        k_cache = _write_cache(cache["k"], k, pos_b)
+        v_cache = _write_cache(cache["v"], v, pos_b)
+        kvp, gp = cfg.padded_kv_group
+        qg = q.reshape(b, 1, kvp, gp, cfg.head_dim)
+        o = attn_mod.decode_attention(
+            qg, k_cache, v_cache, pos_b + 1,
+            window=cfg.window, scale=scale)
+        o = o.reshape(b, 1, cfg.n_heads_padded, cfg.head_dim)
+        new_cache = {"k": k_cache, "v": v_cache}
+
+    o = o * head_mask(cfg, o.dtype)[None, None, :, None]
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, new_cache
+
+
+def _write_cache(cache, kv_new, positions):
+    """cache: (B, Smax, KV, D); kv_new: (B, 1, KV, D); positions: (B,).
+
+    One-hot masked update — GSPMD-friendly on a sequence-sharded cache (no
+    dynamic-slice cross-shard traffic; each shard updates only its slice)."""
+    smax = cache.shape[1]
+    onehot = (jnp.arange(smax)[None, :] == positions[:, None])  # (B, Smax)
+    oh = onehot[:, :, None, None].astype(cache.dtype)
+    return cache * (1 - oh) + oh * kv_new.astype(cache.dtype)
+
+
+def dense_ffn(x, p, cfg, opts: ExecOptions):
+    c = opts.constrain
+    act = act_fn(glu_act(cfg.activation))
+    h = act(jnp.einsum("bsd,df->bsf", x, p["w1"])) \
+        * jnp.einsum("bsd,df->bsf", x, p["w3"])
+    h = c(h, "batchlike", None, "ff")
+    return jnp.einsum("bsf,fd->bsd", h, p["w2"])
+
+
+def layer_fn(x, lp, cfg, opts: ExecOptions, *, positions, mode,
+             cache: Optional[dict] = None):
+    c = opts.constrain
+    x = c(x, "batchlike", opts.seq_axis, None)
+    a, new_cache = attn_block(
+        rms_norm(x, lp["attn_norm"], plus_one=cfg.norm_plus_one),
+        lp, cfg, opts, positions=positions, mode=mode, cache=cache)
+    x = x + a
+    h = rms_norm(x, lp["ffn_norm"], plus_one=cfg.norm_plus_one)
+    if cfg.family == "moe":
+        f = moe_mod.moe_ffn(h, lp, _maybe_group(cfg, opts), constrain=c)
+    else:
+        f = dense_ffn(h, lp, cfg, opts)
+    return x + f, new_cache
+
+
+def _maybe_group(cfg, opts):
+    if opts.moe_group and opts.moe_group != cfg.moe_group:
+        return dataclasses.replace(cfg, moe_group=opts.moe_group)
+    return cfg
+
+
+# ---------------------------------------------------------------------------
+# Embedding / loss
+# ---------------------------------------------------------------------------
+
+def embed_tokens(params, tokens, cfg, opts, patch_embeds=None):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.embed_scale:
+        x = (x.astype(jnp.float32) * (cfg.d_model ** 0.5)).astype(x.dtype)
+    if patch_embeds is not None:  # vlm stub: overwrite leading image positions
+        p = patch_embeds.shape[1]
+        x = jnp.concatenate([patch_embeds.astype(x.dtype), x[:, p:]], axis=1)
+    return opts.constrain(x, "batchlike", None, None)
+
+
+def lm_head_weights(params, cfg):
+    return params.get("lm_head", params["embed"])
+
+
+def chunked_ce_loss(hidden, emb, labels, cfg, opts: ExecOptions):
+    """Σ CE over sequence chunks; vocab stays sharded; fp32 logsumexp."""
+    hidden = opts.constrain(hidden, "batchlike", None, None)
+    b, s, d = hidden.shape
+    chunk = min(opts.ce_chunk, s)
+    assert s % chunk == 0
+    n = s // chunk
+    hc = hidden.reshape(b, n, chunk, d).transpose(1, 0, 2, 3)
+    yc = labels.reshape(b, n, chunk).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        h, y = xs
+        logits = jnp.einsum("bsd,vd->bsv", h, emb).astype(jnp.float32)
+        logits = softcap(logits, cfg.logit_softcap)
+        logits = opts.constrain(logits, "batchlike", None, "vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        oh = jax.nn.one_hot(jnp.maximum(y, 0), logits.shape[-1],
+                            dtype=logits.dtype)
+        ll = jnp.sum(logits * oh, axis=-1)
+        w = (y >= 0).astype(jnp.float32)
+        loss, cnt = carry
+        return (loss + jnp.sum(w * (lse - ll)), cnt + jnp.sum(w)), None
+
+    from repro.models.common import scan_or_unroll
+    (loss, cnt), _ = scan_or_unroll(
+        remat_wrap(body, "full" if opts.remat != "none" else "none"),
+        (jnp.float32(0.0), jnp.float32(0.0)), (hc, yc),
+        unroll=opts.unroll_scans)
+    return loss / jnp.maximum(cnt, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Model entry points
+# ---------------------------------------------------------------------------
+
+def _stack_scan(params, x, cfg, opts, *, positions, mode, cache=None):
+    """lax.scan over stacked layers. cache (if given) is stacked on axis 0."""
+    lp = params["layers"]
+
+    def body(h, xs):
+        layer_params, layer_cache = xs
+        h, new_cache = layer_fn(h, layer_params, cfg, opts,
+                                positions=positions, mode=mode,
+                                cache=layer_cache)
+        return h, new_cache
+
+    from repro.models.common import scan_or_unroll
+    body = remat_wrap(body, opts.remat)
+    x, new_cache = scan_or_unroll(body, x, (lp, cache),
+                                  unroll=opts.unroll_scans)
+    return x, new_cache
+
+
+def forward_hidden(params, tokens, cfg, opts, *, patch_embeds=None,
+                   mode="train"):
+    b, s = tokens.shape
+    x = embed_tokens(params, tokens, cfg, opts, patch_embeds)
+    positions = jnp.arange(s)[None, :]
+    x, cache = _stack_scan(params, x, cfg, opts, positions=positions, mode=mode)
+    return rms_norm(x, params["final_norm"], plus_one=cfg.norm_plus_one), cache
+
+
+def train_loss(params, batch, cfg, opts: ExecOptions):
+    hidden, _ = forward_hidden(params, batch["tokens"], cfg, opts,
+                               patch_embeds=batch.get("patch_embeds"),
+                               mode="train")
+    labels = batch["labels"]
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        p = batch["patch_embeds"].shape[1]
+        mask = jnp.arange(labels.shape[1])[None, :] >= p
+        labels = jnp.where(mask, labels, -1)
+    loss = chunked_ce_loss(hidden, lm_head_weights(params, cfg), labels, cfg, opts)
+    return loss, {"loss": loss}
+
+
+def prefill(params, batch, cfg, opts: ExecOptions):
+    """Returns (last-position logits, cache dict)."""
+    hidden, kv = forward_hidden(params, batch["tokens"], cfg, opts,
+                                patch_embeds=batch.get("patch_embeds"),
+                                mode="prefill")
+    last = hidden[:, -1:, :]
+    logits = jnp.einsum("bsd,vd->bsv", last, lm_head_weights(params, cfg))
+    logits = softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+    b, s = batch["tokens"].shape
+    cache = {"k": kv["k"], "v": kv["v"],
+             "pos": jnp.full((b,), s, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(params, batch, cache, cfg, opts: ExecOptions):
+    """One token step. batch: {'tokens': (B,1)}; cache from prefill/init.
+
+    The layer-stacked KV cache rides the scan CARRY and is updated in place
+    with dynamic-update-slice — streaming it through scan xs/ys instead
+    double-buffers the whole cache as temps (measured +14 GiB/device on
+    gemma-7b × decode_32k; EXPERIMENTS.md §Perf P0c)."""
+    tokens = batch["tokens"]
+    positions = cache["pos"]                      # (B,) next position to write
+    x = embed_tokens(params, tokens, cfg, opts)
+
+    def body(carry, xs):
+        h, kc, vc = carry
+        lp, i = xs
+        layer_cache = {
+            "k": jax.lax.dynamic_index_in_dim(kc, i, 0, keepdims=False),
+            "v": jax.lax.dynamic_index_in_dim(vc, i, 0, keepdims=False),
+        }
+        h, new_cache = layer_fn(h, lp, cfg, opts,
+                                positions=positions[:, None], mode="decode",
+                                cache=layer_cache)
+        kc = jax.lax.dynamic_update_index_in_dim(kc, new_cache["k"], i, 0)
+        vc = jax.lax.dynamic_update_index_in_dim(vc, new_cache["v"], i, 0)
+        return (h, kc, vc), None
+
+    from repro.models.common import scan_or_unroll
+    (x, kc, vc), _ = scan_or_unroll(
+        body, (x, cache["k"], cache["v"]),
+        (params["layers"], jnp.arange(cfg.n_layers)),
+        unroll=opts.unroll_scans)
+    x = rms_norm(x, params["final_norm"], plus_one=cfg.norm_plus_one)
+    logits = jnp.einsum("bsd,vd->bsv", x, lm_head_weights(params, cfg))
+    logits = softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+    new_cache = {"k": kc, "v": vc, "pos": positions + 1}
+    return logits, new_cache
+
+
+def cache_shape(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Abstract KV-cache pytree (stacked over layers; kv_pad heads)."""
+    L, kv, hd = cfg.n_layers, cfg.kv_pad, cfg.head_dim
+    return {
+        "k": jax.ShapeDtypeStruct((L, batch, max_len, kv, hd), dtype),
+        "v": jax.ShapeDtypeStruct((L, batch, max_len, kv, hd), dtype),
+        "pos": jax.ShapeDtypeStruct((batch,), jnp.int32),
+    }

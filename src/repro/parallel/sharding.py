@@ -1,0 +1,256 @@
+"""Logical-axis → mesh-axis sharding rules (DP/FSDP/TP/EP/SP).
+
+The rule table maps logical names used in model schemas to mesh axes; the
+divisibility rule shards a dim only when the axis size divides it, otherwise
+it backs off (tuple rules try progressively smaller axis subsets, then
+replicate). This handles the awkward head/expert counts (15, 40, 10, 60)
+without GSPMD padding surprises — the affected tensor replicates on that
+axis and TP comes from a different dim (DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ParamDef, is_schema_leaf
+
+Axis = Union[str, Tuple[str, ...], None]
+
+# Logical-axis vocabulary. 'batchlike' folds pod-DP and data-DP together.
+DEFAULT_RULES: Dict[str, Tuple[Axis, ...]] = {
+    # name: candidates tried in order (first divisible wins)
+    "batchlike": (("pod", "data"), "data", None),
+    "embed": ("data", None),          # FSDP / ZeRO-3 on the feature dim
+    "vocab": ("model", None),
+    "heads": ("model", None),
+    "heads_flat": ("model", None),    # expanded+padded flat attention heads
+    "kv_or_seq": ("model", None),     # decode caches: kv heads if divisible
+    "seq": ("model", None),           # sequence parallelism (decode caches)
+    "ff": ("model", None),
+    "experts": ("model", None),
+    "layers": (None,),
+}
+
+# Alternative execution plans (the hillclimb/planner lever). 'dp_heavy'
+# retires the TP axis and spends the whole mesh on data parallelism — right
+# when the model is far too small for 16-way TP (e.g. smollm-360m: TP-sharded
+# layers leave <1.5 M params/chip and the per-layer TP collectives dwarf the
+# compute). Params FSDP over data; batch over every axis.
+PLAN_RULES: Dict[str, Dict[str, Tuple[Axis, ...]]] = {
+    "tp16": DEFAULT_RULES,
+    "dp_heavy": {
+        "batchlike": (("pod", "data", "model"), ("data", "model"),
+                      ("pod", "data"), "data", None),
+        "embed": ("data", None),
+        "vocab": ("model", None),     # CE logits still shard the vocab
+        "heads": (None,),
+        "heads_flat": (None,),
+        "kv_or_seq": (None,),
+        "seq": (None,),
+        "ff": (None,),
+        "experts": (None,),
+        "layers": (None,),
+    },
+    # Weight-stationary decode: keep weights fully sharded (ff/expert dims
+    # over 'data' instead of FSDP on d_model) so decode steps move the tiny
+    # activations through psums instead of all-gathering GB-scale weights
+    # every step (measured 32.8 GB/step/dev of weight gathers on dbrx-132b ×
+    # decode_32k under the training layout).
+    "serve_ws": {
+        "batchlike": (("pod", "data"), "data", None),
+        "embed": (None,),
+        "vocab": ("model", None),
+        "heads": ("model", None),
+        "heads_flat": ("model", None),
+        "kv_or_seq": ("model", None),
+        "seq": ("model", None),
+        "ff": ("data", None),
+        "experts": ("model", None),
+        "layers": (None,),
+    },
+}
+
+
+def rules_for_plan(plan: str) -> Dict[str, Tuple[Axis, ...]]:
+    return PLAN_RULES[plan]
+
+
+def _axes_in_mesh(axis: Axis, mesh: Mesh) -> Optional[Axis]:
+    if axis is None:
+        return None
+    if isinstance(axis, str):
+        return axis if axis in mesh.shape else None
+    present = tuple(a for a in axis if a in mesh.shape)
+    return present if present else None
+
+
+def _axis_size(axis: Axis, mesh: Mesh) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, str):
+        return mesh.shape[axis]
+    size = 1
+    for a in axis:
+        size *= mesh.shape[a]
+    return size
+
+
+def resolve_dim(name: Optional[str], size: int, mesh: Mesh,
+                rules: Optional[Dict] = None) -> Axis:
+    """Pick the first rule candidate whose axis size divides `size`."""
+    if name is None:
+        return None
+    rules = rules or DEFAULT_RULES
+    for cand in rules[name]:
+        cand = _axes_in_mesh(cand, mesh)
+        if cand is None:
+            continue
+        if size % _axis_size(cand, mesh) == 0:
+            return cand
+    return None
+
+
+def spec_for(shape: Sequence[int], logical: Sequence[Optional[str]],
+             mesh: Mesh, rules: Optional[Dict] = None) -> P:
+    used = set()
+    parts = []
+    for size, name in zip(shape, logical):
+        ax = resolve_dim(name, size, mesh, rules)
+        # one mesh axis may shard only one dim of a tensor
+        flat = (ax,) if isinstance(ax, str) else (ax or ())
+        if any(a in used for a in flat):
+            ax = None
+        else:
+            used.update(flat)
+        parts.append(ax)
+    return P(*parts)
+
+
+def schema_pspecs(schema, mesh: Mesh, rules: Optional[Dict] = None):
+    """PartitionSpec pytree matching a param schema."""
+    return jax.tree.map(
+        lambda d: spec_for(d.shape, d.logical, mesh, rules),
+        schema, is_leaf=is_schema_leaf)
+
+
+def schema_shardings(schema, mesh: Mesh, rules: Optional[Dict] = None):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        schema_pspecs(schema, mesh, rules))
+
+
+def make_constrain(mesh: Mesh, rules: Optional[Dict] = None):
+    """Activation-sharding hook passed to models as ExecOptions.constrain."""
+
+    def constrain(x, *logical):
+        if len(logical) != x.ndim:
+            return x
+        spec = spec_for(x.shape, logical, mesh, rules)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return constrain
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache shardings
+# ---------------------------------------------------------------------------
+
+def batch_pspecs(batch_abstract, mesh: Mesh, rules=None) -> Any:
+    """Shard every input on its leading (batch) dim; rest replicated."""
+
+    def one(sds):
+        lead = resolve_dim("batchlike", sds.shape[0], mesh, rules) \
+            if sds.ndim else None
+        return P(lead, *([None] * (sds.ndim - 1)))
+
+    return jax.tree.map(one, batch_abstract)
+
+
+def cache_pspecs(cfg, cache_abstract, mesh: Mesh, rules=None) -> Any:
+    """Decode/prefill cache shardings.
+
+    KV tensors (L, B, S, KV, D): batch → ('pod','data'); KV-heads → 'model'
+    when divisible, else the sequence dim → 'model' (flash-decoding-style
+    split-K; GSPMD reduces the softmax over the sharded S with tiny
+    collectives). States (SSM/LRU) shard their width dims on 'model'.
+    """
+    model_size = mesh.shape.get("model", 1)
+
+    def _model_free(bax) -> bool:
+        flat = (bax,) if isinstance(bax, str) else (bax or ())
+        return "model" not in flat
+
+    def _kv_ax(bax, n: int, rule_name: str):
+        ax = resolve_dim(rule_name, n, mesh, rules)
+        return ax if (ax is not None and _model_free(bax)
+                      and n % model_size == 0) else None
+
+    def one(path, sds):
+        names = [p.key for p in path if hasattr(p, "key")]
+        nm = names[-1] if names else ""
+        shp = sds.shape
+        if nm == "pos":
+            return P(resolve_dim("batchlike", shp[0], mesh, rules))
+        if nm in ("k", "v", "ck", "cv"):
+            if len(shp) == 5:      # (L, B, S, KV, D) stacked over layers
+                b, s, kv = shp[1], shp[2], shp[3]
+                bax = resolve_dim("batchlike", b, mesh, rules)
+                if _kv_ax(bax, kv, "kv_or_seq"):
+                    return P(None, bax, None, "model", None)
+                if _kv_ax(bax, s, "seq"):
+                    return P(None, bax, "model", None, None)
+                return P(None, bax, None, None, None)
+            if len(shp) == 4:      # (B, W, KV, D) per-layer ring (hybrid)
+                b, w, kv = shp[0], shp[1], shp[2]
+                bax = resolve_dim("batchlike", b, mesh, rules)
+                if _kv_ax(bax, kv, "kv_or_seq"):
+                    return P(bax, None, "model", None)
+                if _kv_ax(bax, w, "seq"):
+                    return P(bax, "model", None, None)
+                return P(bax, None, None, None)
+        if nm == "h":
+            bax = resolve_dim("batchlike", shp[-4] if len(shp) > 3 else shp[0],
+                              mesh, rules)
+            if len(shp) == 5:      # ssm (L,B,H,P,N)
+                hax = "model" if (shp[2] % model_size == 0
+                                  and _model_free(bax)) else None
+                return P(None, bax, hax, None, None)
+            if len(shp) == 2:      # lru (B, width)
+                bax = resolve_dim("batchlike", shp[0], mesh, rules)
+                wax = "model" if (shp[1] % model_size == 0
+                                  and _model_free(bax)) else None
+                return P(bax, wax)
+        if nm in ("x", "b", "c") and len(shp) == 4:  # ssm conv (L,B,K-1,C)
+            bax = resolve_dim("batchlike", shp[1], mesh, rules)
+            cax = "model" if (shp[3] % model_size == 0
+                              and _model_free(bax)) else None
+            return P(None, bax, None, cax)
+        if len(shp) == 3 and nm == "conv":           # (B, K-1, C)
+            bax = resolve_dim("batchlike", shp[0], mesh, rules)
+            cax = "model" if (shp[2] % model_size == 0
+                              and _model_free(bax)) else None
+            return P(bax, None, cax)
+        # default: shard dim0 batch-like if divisible
+        bax = resolve_dim("batchlike", shp[0], mesh, rules) if sds.ndim else None
+        return P(bax, *([None] * (sds.ndim - 1)))
+
+    return jax.tree.map_with_path(one, cache_abstract)
+
+
+def logits_pspec(mesh: Mesh, batch: int, vocab: int, rules=None) -> P:
+    bax = resolve_dim("batchlike", batch, mesh, rules)
+    vax = resolve_dim("vocab", vocab, mesh, rules)
+    flat = (vax,) if isinstance(vax, str) else (vax or ())
+    used = (bax,) if isinstance(bax, str) else (bax or ())
+    if any(a in used for a in flat):
+        vax = None
+    return P(bax, None, vax)
+
+
+def named(mesh: Mesh, tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,168 @@
+"""Serving engine: prefill + continuous-batching decode.
+
+The "AI-optimized" configuration of the paper, as a serving runtime:
+  * slot-based continuous batching: a fixed decode batch of N slots; finished
+    requests free their slot, queued requests prefill into it (their KV/state
+    pasted into the slot's cache rows) while other slots keep decoding.
+  * int8 weight-only path (kernels/int8_matmul) — the 15 TOPS INT8 NPU
+    datapath — available to the serve example/benches via `quantize_params`.
+  * the faithful chiplet perf model (core/) prices batching decisions the way
+    the paper's CPU chiplet dispatches to its two NPUs (see benches).
+
+Pure-python orchestration over jitted model fns; runs on CPU for tests and
+examples, mesh-parameterized for pods.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                  # (prompt_len,) int32
+    max_new_tokens: int = 16
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    t_enqueue: float = 0.0
+    t_first_token: Optional[float] = None
+    t_done: Optional[float] = None
+
+
+@dataclasses.dataclass
+class EngineStats:
+    prefills: int = 0
+    decode_steps: int = 0
+    tokens_out: int = 0
+    occupancy_sum: float = 0.0
+
+    def summary(self) -> Dict[str, float]:
+        d = dataclasses.asdict(self)
+        if self.decode_steps:
+            d["mean_occupancy"] = self.occupancy_sum / self.decode_steps
+        return d
+
+
+class ServeEngine:
+    def __init__(self, model, *, n_slots: int = 4, max_len: int = 128,
+                 params=None):
+        self.model = model
+        self.cfg = model.cfg
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.params = params
+        self.stats = EngineStats()
+        self._queue: List[Request] = []
+        self._slots: List[Optional[Request]] = [None] * n_slots
+        self._next_rid = 0
+        self._prefill_jit = jax.jit(model.prefill)
+        self._decode_jit = jax.jit(model.decode)
+        self._next_tok = np.zeros((n_slots, 1), np.int32)
+        abs_cache = model.cache_shape(n_slots, max_len, jnp.float32)
+        self._cache = jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype), abs_cache)
+
+    # ------------------------------------------------------------- lifecycle
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16) -> Request:
+        self._next_rid += 1
+        req = Request(rid=self._next_rid, prompt=np.asarray(prompt, np.int32),
+                      max_new_tokens=max_new_tokens, t_enqueue=time.time())
+        self._queue.append(req)
+        return req
+
+    def _admit(self):
+        """Prefill queued requests into free slots."""
+        for slot in [i for i, r in enumerate(self._slots) if r is None]:
+            if not self._queue:
+                return
+            r = self._queue.pop(0)
+            toks = r.prompt[None, :]
+            logits, pf_cache = self._prefill_jit(self.params,
+                                                 {"tokens": toks})
+            self.stats.prefills += 1
+            first = int(np.argmax(np.asarray(
+                logits[0, -1, :self.cfg.vocab_size])))
+            self._paste_slot(slot, pf_cache, plen=toks.shape[1])
+            r.out_tokens.append(first)
+            r.t_first_token = time.time()
+            self._next_tok[slot, 0] = first
+            self._slots[slot] = r
+            self.stats.tokens_out += 1
+
+    # ------------------------------------------------------------ cache mgmt
+    def _paste_slot(self, slot: int, pf, plen: int):
+        """Copy request-0's prefill cache into engine cache slot (by family)."""
+        c = dict(self._cache) if isinstance(self._cache, dict) else self._cache
+        fam = self.cfg.family
+        if fam in ("dense", "moe", "vlm", "encdec"):
+            for key in ("k", "v"):
+                c[key] = c[key].at[:, slot, :plen].set(
+                    pf[key][:, 0, :plen].astype(c[key].dtype))
+            for key in ("ck", "cv"):
+                if key in c:
+                    c[key] = c[key].at[:, slot].set(
+                        pf[key][:, 0].astype(c[key].dtype))
+        elif fam == "ssm":
+            c["h"] = c["h"].at[:, slot].set(pf["h"][:, 0])
+            c["conv"] = {
+                k: c["conv"][k].at[:, slot].set(
+                    pf["conv"][k][:, 0].astype(c["conv"][k].dtype))
+                for k in c["conv"]}
+        elif fam == "hybrid":
+            new_layers = []
+            for dst, src in zip(c["layers"], pf["layers"]):
+                new_layers.append({
+                    k: dst[k].at[slot].set(src[k][0].astype(dst[k].dtype))
+                    for k in dst})
+            c["layers"] = new_layers
+        c["pos"] = c["pos"].at[slot].set(pf["pos"][0])
+        self._cache = c
+
+    # ----------------------------------------------------------------- decode
+    def step(self) -> bool:
+        """One engine tick: admit new work, then one batched decode step."""
+        self._admit()
+        active = [i for i, r in enumerate(self._slots) if r is not None]
+        if not active:
+            return False
+        logits, self._cache = self._decode_jit(
+            self.params, {"tokens": jnp.asarray(self._next_tok)}, self._cache)
+        self.stats.decode_steps += 1
+        self.stats.occupancy_sum += len(active) / self.n_slots
+        nxt = np.asarray(jnp.argmax(
+            logits[:, -1, :self.cfg.vocab_size], axis=-1), np.int32)
+        for slot in active:
+            r = self._slots[slot]
+            r.out_tokens.append(int(nxt[slot]))
+            self._next_tok[slot, 0] = nxt[slot]
+            self.stats.tokens_out += 1
+            if len(r.out_tokens) >= r.max_new_tokens \
+                    or int(self._cache["pos"][slot]) >= self.max_len - 1:
+                r.done = True
+                r.t_done = time.time()
+                self._slots[slot] = None
+        return True
+
+    def run_to_completion(self, max_ticks: int = 10_000) -> EngineStats:
+        ticks = 0
+        while (self._queue or any(r is not None for r in self._slots)) \
+                and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        return self.stats
+
+
+def generate_greedy(model, params, prompt: np.ndarray, n_tokens: int,
+                    max_len: int = 128) -> List[int]:
+    """Single-request reference path (the oracle for engine equivalence)."""
+    eng = ServeEngine(model, n_slots=1, max_len=max_len, params=params)
+    req = eng.submit(prompt, max_new_tokens=n_tokens)
+    eng.run_to_completion()
+    return req.out_tokens

@@ -1,0 +1,115 @@
+"""Chunked (flash-style) attention vs reference; rope properties; GQA; cache
+write paths. These are the oracles behind the big-shape execution paths."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.attention import (
+    chunked_attention, decode_attention, reference_attention,
+)
+from repro.models.common import apply_rope
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+def _qkv(key, b, s, kv, g, d, sk=None):
+    sk = sk or s
+    kq, kk, kv_ = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (b, s, kv, g, d), jnp.float32)
+    k = jax.random.normal(kk, (b, sk, kv, d), jnp.float32)
+    v = jax.random.normal(kv_, (b, sk, kv, d), jnp.float32)
+    return q, k, v
+
+
+@pytest.mark.parametrize("s,qc,kc", [(256, 64, 64), (256, 128, 32),
+                                     (512, 256, 128), (384, 128, 128)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_chunked_matches_reference(s, qc, kc, causal):
+    q, k, v = _qkv(jax.random.key(s + qc), 2, s, 2, 2, 32)
+    got = chunked_attention(q, k, v, causal=causal, q_chunk=qc, kv_chunk=kc)
+    want = reference_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("window", [32, 100, 256])
+def test_chunked_window_matches_reference(window):
+    q, k, v = _qkv(jax.random.key(window), 1, 512, 1, 4, 32)
+    got = chunked_attention(q, k, v, causal=True, window=window,
+                            q_chunk=128, kv_chunk=64)
+    want = reference_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_chunked_unrolled_identical():
+    """The dry-run probe path (unroll=True) must be numerically identical."""
+    q, k, v = _qkv(jax.random.key(0), 1, 256, 2, 1, 32)
+    a = chunked_attention(q, k, v, q_chunk=64, kv_chunk=64, unroll=False)
+    b = chunked_attention(q, k, v, q_chunk=64, kv_chunk=64, unroll=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6,
+                               atol=1e-6)
+
+
+def test_decode_matches_reference_last_row():
+    """decode_attention over a cache == last row of full reference attention."""
+    b, s, kv, g, d = 2, 64, 2, 3, 16
+    q, k, v = _qkv(jax.random.key(1), b, s, kv, g, d)
+    full = reference_attention(q, k, v, causal=True)
+    got = decode_attention(q[:, -1:], k, v,
+                           jnp.full((b,), s, jnp.int32))
+    np.testing.assert_allclose(np.asarray(got[:, 0]), np.asarray(full[:, -1]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_decode_respects_cur_len():
+    """Entries past cur_len must not影响 the result."""
+    b, s, kv, g, d = 1, 32, 1, 1, 16
+    q, k, v = _qkv(jax.random.key(2), b, s, kv, g, d)
+    short = decode_attention(q[:, :1], k, v, jnp.asarray([20]))
+    k_junk = k.at[:, 20:].set(999.0)
+    v_junk = v.at[:, 20:].set(-999.0)
+    with_junk = decode_attention(q[:, :1], k_junk, v_junk, jnp.asarray([20]))
+    np.testing.assert_allclose(np.asarray(short), np.asarray(with_junk),
+                               rtol=1e-6, atol=1e-6)
+
+
+# --- RoPE properties ----------------------------------------------------------
+
+@given(st.integers(2, 6), st.integers(0, 100))
+def test_rope_relative_position_invariance(shift_halved, offset):
+    """⟨rope(q,i), rope(k,j)⟩ depends only on i−j (the defining property)."""
+    d = 32
+    q = jax.random.normal(jax.random.key(3), (1, 1, 1, d))
+    k = jax.random.normal(jax.random.key(4), (1, 1, 1, d))
+    i, j = offset + 7, offset + 3
+
+    def dot(i, j):
+        qi = apply_rope(q, jnp.asarray([[i]]))
+        kj = apply_rope(k, jnp.asarray([[j]]))
+        return float(jnp.sum(qi * kj))
+
+    assert dot(i, j) == pytest.approx(dot(i + 11, j + 11), rel=1e-4, abs=1e-4)
+
+
+def test_rope_preserves_norm():
+    x = jax.random.normal(jax.random.key(5), (2, 8, 4, 64))
+    y = apply_rope(x, jnp.arange(8)[None, :])
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(y, axis=-1)),
+                               np.asarray(jnp.linalg.norm(x, axis=-1)),
+                               rtol=1e-5)
+
+
+def test_partial_rope_passthrough():
+    """ChatGLM 2D rope: the un-rotated half must pass through unchanged."""
+    d = 64
+    x = jax.random.normal(jax.random.key(6), (1, 4, 2, d))
+    y = apply_rope(x, jnp.arange(4)[None, :], fraction=0.5)
+    np.testing.assert_array_equal(np.asarray(y[..., d // 2:]),
+                                  np.asarray(x[..., d // 2:]))
+    assert not np.allclose(np.asarray(y[..., :d // 2]),
+                           np.asarray(x[..., :d // 2]))

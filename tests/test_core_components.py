@@ -1,0 +1,197 @@
+"""Unit tests for the paper's four innovation models (I1–I4) + time-stepped SoC."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import build_soc, simulate
+from repro.core import dvfs as dvfs_mod
+from repro.core import security as sec_mod
+from repro.core import thermal as thermal_mod
+from repro.core import ucie as ucie_mod
+from repro.core.scenarios import AI_OPTIMIZED, BASIC_CHIPLET, SCENARIOS
+from repro.core.workloads import WORKLOADS
+
+MNV2 = WORKLOADS["mobilenetv2"]
+
+
+# --- I1 DVFS -------------------------------------------------------------------
+
+def test_dvfs_tracks_demand():
+    cfg = dvfs_mod.DVFSConfig(power_budget_mw=1e9)  # budget not binding
+    st = dvfs_mod.init_state(2, cfg)
+    peak = jnp.asarray([300.0, 300.0])
+    static = jnp.asarray([50.0, 50.0])
+    for _ in range(50):
+        st, (freq, power, util) = dvfs_mod.step(
+            st, jnp.asarray([1.0, 0.1]), cfg, peak, static, 0.1)
+    assert float(freq[0]) > float(freq[1])  # loaded chiplet clocks higher
+    assert float(power[0]) > float(power[1])
+
+
+def test_dvfs_respects_power_budget():
+    cfg = dvfs_mod.DVFSConfig(power_budget_mw=400.0)
+    st = dvfs_mod.init_state(2, cfg)
+    peak = jnp.asarray([300.0, 300.0])
+    static = jnp.asarray([50.0, 50.0])
+    for _ in range(50):
+        st, (freq, power, util) = dvfs_mod.step(
+            st, jnp.asarray([1.0, 1.0]), cfg, peak, static, 0.1)
+    assert float(jnp.sum(power)) <= 400.0 * 1.02
+
+
+def test_dvfs_nonadaptive_stays_nominal():
+    cfg = dvfs_mod.DVFSConfig(adaptive=False)
+    st = dvfs_mod.init_state(3, cfg)
+    peak = jnp.full((3,), 200.0)
+    static = jnp.full((3,), 40.0)
+    st, (freq, _, _) = dvfs_mod.step(st, jnp.asarray([0.1, 0.5, 1.0]), cfg,
+                                     peak, static, 0.1)
+    assert jnp.allclose(freq, 1.0)
+
+
+# --- I2 UCIe --------------------------------------------------------------------
+
+def test_ucie_streaming_reduces_overhead():
+    base = ucie_mod.UCIeConfig(streaming=False, compression_ratio=1.0)
+    stream = ucie_mod.UCIeConfig(streaming=True, compression_ratio=1.0)
+    t_base, _, wire_base = ucie_mod.transfer(jnp.float32(1e6), base)
+    t_stream, _, wire_stream = ucie_mod.transfer(jnp.float32(1e6), stream)
+    assert float(wire_stream) < float(wire_base)
+    assert float(t_stream) < float(t_base)
+
+
+def test_ucie_compression_tradeoff():
+    """Compression shrinks wire time but adds engine time; for large payloads
+    on a slow link it must win."""
+    slow = ucie_mod.UCIeConfig(bandwidth_gbps=8.0, compression_ratio=1.0)
+    slow_c = ucie_mod.UCIeConfig(bandwidth_gbps=8.0, compression_ratio=0.5)
+    t_plain, _, _ = ucie_mod.transfer(jnp.float32(5e6), slow)
+    t_comp, _, _ = ucie_mod.transfer(jnp.float32(5e6), slow_c)
+    assert float(t_comp) < float(t_plain)
+
+
+def test_ucie_link_tick_conserves_bytes():
+    cfg = ucie_mod.UCIeConfig(bandwidth_gbps=16.0)
+    st = ucie_mod.init_link()
+    total_in = 0.0
+    drained_total = 0.0
+    for _ in range(100):
+        st, (drained, occ) = ucie_mod.link_tick(st, 5e4, cfg, 0.1)
+        total_in += 5e4
+        drained_total += float(drained)
+    assert drained_total <= total_in + 1e-3
+    assert drained_total > 0.5 * total_in  # link actually moves data
+
+
+# --- I3 security ----------------------------------------------------------------
+
+def test_attestation_scales_log():
+    cfg = sec_mod.SecurityConfig()
+    t4 = float(sec_mod.attestation_latency_us(4, cfg))
+    t64 = float(sec_mod.attestation_latency_us(64, cfg))
+    assert t64 == pytest.approx(3 * t4)  # log2(64)=6 vs log2(4)=2
+
+
+def test_merkle_attestation_detects_tamper():
+    payloads = {f"chiplet-{i}": f"fw-blob-{i}".encode() for i in range(5)}
+    key = b"interposer-session-key"
+    manifest = sec_mod.attest_manifest(payloads, key)
+    assert sec_mod.verify_manifest(payloads, key, manifest)
+    bad = dict(payloads, **{"chiplet-2": b"counterfeit"})
+    assert not sec_mod.verify_manifest(bad, key, manifest)
+    assert not sec_mod.verify_manifest(payloads, b"wrong-key", manifest)
+
+
+def test_merkle_proofs():
+    leaves = [sec_mod.leaf_digest(f"c{i}", bytes([i])) for i in range(7)]
+    root = sec_mod.merkle_root(leaves)
+    for i in (0, 3, 6):
+        proof = sec_mod.merkle_proof(leaves, i)
+        assert sec_mod.verify_proof(leaves[i], proof, root)
+    assert not sec_mod.verify_proof(leaves[0], sec_mod.merkle_proof(leaves, 1),
+                                    root)
+
+
+def test_tree_vs_centralized_scaling():
+    cfg = sec_mod.SecurityConfig()
+    n = 64
+    tree = float(sec_mod.attestation_latency_us(n, cfg))
+    central = float(sec_mod.centralized_attestation_latency_us(n, cfg))
+    assert tree < central  # the paper's scalability argument
+
+
+def test_aead_overhead_zero_when_disabled():
+    t, e = sec_mod.aead_overhead(1e6, sec_mod.SecurityConfig(enabled=False))
+    assert float(t) == 0.0 and float(e) == 0.0
+
+
+# --- I4 thermal -----------------------------------------------------------------
+
+def _thermal_cfg(predictive):
+    # small C → RC ≈ 16 ms so 400 ticks (40 ms) reach steady state
+    return thermal_mod.ThermalConfig(
+        r_k_per_w=(8.0, 8.0), c_j_per_k=(0.002, 0.002), predictive=predictive,
+        t_migrate_c=60.0, t_throttle_c=70.0)
+
+
+def test_thermal_heats_and_cools():
+    cfg = _thermal_cfg(False)
+    st = thermal_mod.init_state(cfg)
+    q = jnp.asarray([0.0, 0.0])
+    npu = jnp.asarray([True, True])
+    for _ in range(200):
+        st, (clock, q) = thermal_mod.step(st, jnp.asarray([5000.0, 0.0]),
+                                          npu, q, cfg, 0.1)
+    assert float(st.temp_c[0]) > float(st.temp_c[1]) > cfg.t_ambient_c - 1e-3
+
+
+def test_predictive_migration_moves_load():
+    cfg = _thermal_cfg(True)
+    st = thermal_mod.init_state(cfg)
+    q = jnp.asarray([50.0, 0.0])    # all work queued on NPU 0
+    npu = jnp.asarray([True, True])
+    migrated = False
+    for _ in range(400):
+        st, (clock, q) = thermal_mod.step(st, jnp.asarray([5000.0, 100.0]),
+                                          npu, q, cfg, 0.1)
+        if float(st.migrations) > 0:
+            migrated = True
+            break
+    assert migrated
+    assert float(q[1]) > 0.0        # load actually moved to the cool NPU
+
+
+def test_reactive_throttles_instead():
+    cfg = _thermal_cfg(False)
+    st = thermal_mod.init_state(cfg)
+    q = jnp.asarray([50.0, 0.0])
+    npu = jnp.asarray([True, True])
+    clock_min = 1.0
+    for _ in range(400):
+        st, (clock, q) = thermal_mod.step(st, jnp.asarray([5000.0, 100.0]),
+                                          npu, q, cfg, 0.1)
+        clock_min = min(clock_min, float(jnp.min(clock)))
+    assert float(st.migrations) == 0
+    assert clock_min < 1.0          # derated
+
+
+# --- time-stepped SoC ----------------------------------------------------------
+
+def test_soc_steady_state_matches_closed_form_ordering():
+    out = {}
+    for s in ("basic_chiplet", "ai_optimized"):
+        soc = build_soc(SCENARIOS[s])
+        out[s] = simulate(soc, MNV2, arrival_rate_ips=150.0, duration_ms=100.0)
+    assert float(out["ai_optimized"]["energy_mj_per_inf"]) \
+        < float(out["basic_chiplet"]["energy_mj_per_inf"])
+    assert float(out["ai_optimized"]["latency_ms"]) \
+        < float(out["basic_chiplet"]["latency_ms"])
+
+
+def test_soc_overload_saturates_not_explodes():
+    soc = build_soc(SCENARIOS["ai_optimized"])
+    out = simulate(soc, MNV2, arrival_rate_ips=5000.0, duration_ms=100.0)
+    assert float(out["throughput_ips"]) < 5000.0
+    assert float(out["peak_temp_c"]) < 120.0
+    assert float(out["npu_utilization"]) > 0.5

@@ -1,0 +1,67 @@
+"""Data pipeline: determinism (checkpoint-replay invariant), host sharding,
+prefetch correctness."""
+
+import numpy as np
+import pytest
+
+from repro.data.pipeline import DataConfig, PrefetchIterator, TokenSource
+
+
+def _cfg(**kw):
+    base = dict(vocab_size=1000, seq_len=32, global_batch=8)
+    base.update(kw)
+    return DataConfig(**base)
+
+
+def test_deterministic_across_instances():
+    a = TokenSource(_cfg()).batch_at(7)
+    b = TokenSource(_cfg()).batch_at(7)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    np.testing.assert_array_equal(a["labels"], b["labels"])
+
+
+def test_labels_are_shifted_tokens():
+    b = TokenSource(_cfg()).batch_at(3)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_distinct_steps_differ():
+    src = TokenSource(_cfg())
+    assert not np.array_equal(src.batch_at(0)["tokens"],
+                              src.batch_at(1)["tokens"])
+
+
+def test_host_sharding_partitions_global_batch():
+    full = TokenSource(_cfg(n_hosts=1)).batch_at(5)["tokens"]
+    h0 = TokenSource(_cfg(n_hosts=2, host_id=0)).batch_at(5)["tokens"]
+    h1 = TokenSource(_cfg(n_hosts=2, host_id=1)).batch_at(5)["tokens"]
+    np.testing.assert_array_equal(np.concatenate([h0, h1]), full)
+
+
+def test_tokens_in_vocab():
+    b = TokenSource(_cfg(vocab_size=257)).batch_at(0)
+    assert b["tokens"].min() >= 0 and b["tokens"].max() < 257
+
+
+def test_prefetch_matches_source_and_resumes():
+    src = TokenSource(_cfg())
+    it = PrefetchIterator(src, start_step=4)
+    try:
+        for want_step in (4, 5, 6):
+            step, batch = next(it)
+            assert step == want_step
+            np.testing.assert_array_equal(batch["tokens"],
+                                          src.batch_at(want_step)["tokens"])
+    finally:
+        it.close()
+
+
+def test_file_backed_source(tmp_path):
+    path = tmp_path / "toks.bin"
+    arr = (np.arange(10_000) % 500).astype(np.uint16)
+    arr.tofile(path)
+    src = TokenSource(_cfg(path=str(path), vocab_size=500))
+    b = src.batch_at(0)
+    assert b["tokens"].shape == (8, 32)
+    # window 0 must reproduce the file prefix
+    np.testing.assert_array_equal(b["tokens"][0], arr[:32].astype(np.int32))

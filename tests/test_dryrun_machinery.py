@@ -1,0 +1,76 @@
+"""Dry-run machinery: HLO collective parsing, probe extrapolation math,
+cell lowering on a small fake-device mesh (subprocess)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.launch.hlo_analysis import collective_bytes, _shape_bytes
+
+
+def test_shape_bytes():
+    assert _shape_bytes("bf16[128,1024]") == 128 * 1024 * 2
+    assert _shape_bytes("f32[16]{0}") == 64
+    assert _shape_bytes("(s8[256,128], f32[256])") == 256 * 128 + 1024
+    assert _shape_bytes("pred[]") == 1
+
+
+def test_collective_parsing():
+    hlo = """
+  %ag = bf16[64,512]{1,0} all-gather(%x), dimensions={0}
+  %ar.1 = f32[1024]{0} all-reduce(%y), to_apply=%add
+  %rs = (f32[32,32]{1,0}) reduce-scatter(%z), dimensions={0}
+  %cp = s8[2048]{0} collective-permute-start(%w), source_target_pairs={{0,1}}
+  %nn = f32[9999]{0} add(%a, %b)
+"""
+    cb = collective_bytes(hlo)
+    assert cb["all-gather"] == 64 * 512 * 2
+    assert cb["all-reduce"] == 4096
+    assert cb["reduce-scatter"] == 32 * 32 * 4
+    assert cb["collective-permute"] == 2048
+    assert cb["total"] == sum(
+        cb[k] for k in ("all-gather", "all-reduce", "reduce-scatter",
+                        "all-to-all", "collective-permute"))
+
+
+def test_probe_extrapolation_math():
+    """total(L) = a + (L-La)·(b-a)/(Lb-La) must recover a linear layer cost."""
+    outside, per_layer = 7.0, 3.0
+    la, lb, L = 1, 2, 64
+    pa = outside + la * per_layer
+    pb = outside + lb * per_layer
+    total = pa + (pb - pa) / (lb - la) * (L - la)
+    assert total == outside + L * per_layer
+
+
+@pytest.mark.slow
+def test_cell_machinery_small_mesh():
+    """run_cell-style lowering works end-to-end on 8 fake devices."""
+    script = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses, jax
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.launch.mesh import make_mesh
+from repro.launch import steps
+from repro.launch.hlo_analysis import analyze_compiled
+
+mesh = make_mesh((4, 2), ("data", "model"))
+cfg = dataclasses.replace(get_config("gemma-7b").smoke(), dtype="bfloat16")
+for kind, overrides in [("train", {"unroll_scans": True}),
+                        ("decode", None)]:
+    shape = ShapeConfig("t", kind, 64, 8)
+    jitted, abs_args = steps.build_cell(cfg, shape, mesh, overrides)
+    a = analyze_compiled(jitted.lower(*abs_args).compile())
+    assert a.flops_per_dev > 0
+    assert a.peak_bytes > 0
+print("MACHINERY_OK")
+"""
+    env = {**os.environ, "PYTHONPATH": "src"}
+    r = subprocess.run([sys.executable, "-c", script], env=env,
+                       capture_output=True, text=True, cwd="/root/repo")
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "MACHINERY_OK" in r.stdout

@@ -1,0 +1,84 @@
+"""Elastic runtime policies: failure detection, straggler mitigation (I4)."""
+
+import pytest
+
+from repro.train.elastic import (
+    ElasticPolicy, HeartbeatRegistry, MigrationDecision, detect_stragglers,
+    elastic_mesh_shape, plan_migration, rebalanced_batch_split,
+)
+
+
+def _registry(n=4, timeout=10.0):
+    return HeartbeatRegistry(n, ElasticPolicy(heartbeat_timeout_s=timeout,
+                                              straggler_patience=4))
+
+
+def test_dead_host_detected():
+    reg = _registry()
+    t0 = 1000.0
+    for h in range(4):
+        reg.beat(h, 1.0, now=t0)
+    # host 2 goes silent
+    for h in (0, 1, 3):
+        reg.beat(h, 1.0, now=t0 + 30)
+    dec = plan_migration(reg, now=t0 + 30)
+    assert dec.kind == "reshard"
+    assert dec.drop_hosts == (2,)
+
+
+def test_healthy_fleet_no_action():
+    reg = _registry()
+    t = 0.0
+    for step in range(6):
+        t += 1.0
+        for h in range(4):
+            reg.beat(h, 1.0, now=t)
+    assert plan_migration(reg, now=t).kind == "none"
+
+
+def test_straggler_detected_and_rebalanced():
+    reg = _registry()
+    t = 0.0
+    for step in range(8):
+        t += 1.0
+        for h in range(4):
+            reg.beat(h, 5.0 if h == 3 else 1.0, now=t)
+    slow = detect_stragglers(reg)
+    assert slow == [3]
+    dec = plan_migration(reg, now=t)
+    assert dec.kind == "rebalance" and dec.drop_hosts == (3,)
+
+
+def test_transient_slowness_tolerated():
+    """One slow step must not trigger migration (patience)."""
+    reg = _registry()
+    t = 0.0
+    for step in range(8):
+        t += 1.0
+        for h in range(4):
+            slow = (h == 3 and step == 5)
+            reg.beat(h, 9.0 if slow else 1.0, now=t)
+    assert detect_stragglers(reg) == []
+
+
+def test_min_hosts_guard():
+    reg = HeartbeatRegistry(2, ElasticPolicy(heartbeat_timeout_s=1.0,
+                                             min_hosts=2))
+    reg.beat(0, now=100.0)
+    reg.beat(1, now=0.0)  # dead
+    dec = plan_migration(reg, now=100.0)
+    assert dec.kind == "none" and "min_hosts" in dec.reason
+
+
+def test_elastic_mesh_shape():
+    assert elastic_mesh_shape(512, 16) == (32, 16)
+    assert elastic_mesh_shape(480, 16) == (30, 16)  # lost 2 hosts of 4 chips
+    with pytest.raises(AssertionError):
+        elastic_mesh_shape(8, 16)
+
+
+def test_rebalanced_batch_split_sums_and_orders():
+    split = rebalanced_batch_split(256, {0: 1.0, 1: 1.0, 2: 0.5})
+    assert sum(split.values()) == 256
+    assert split[2] < min(split[0], split[1])          # straggler gets less
+    assert abs(split[0] - split[1]) <= 1               # equals split evenly

@@ -1,0 +1,129 @@
+"""Per-kernel validation: shape/dtype sweeps, interpret=True vs pure-jnp ref."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+# --- int8 matmul -------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [(128, 512, 128), (256, 1024, 384),
+                                   (128, 2048, 256), (384, 512, 512)])
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+def test_int8_matmul_sweep(m, k, n, dtype):
+    kx, kw = jax.random.split(jax.random.key(m * k + n))
+    x = _rand(kx, (m, k), dtype)
+    w = _rand(kw, (k, n), jnp.float32)
+    w_q, scales = ops.quantize_weight(w)
+    got = ops.int8_matmul(x, w_q, scales, interpret=True)
+    want = ref.int8_matmul_ref(x, w_q, scales)
+    np.testing.assert_allclose(got.astype(np.float32), want.astype(np.float32),
+                               rtol=2e-2, atol=2e-2 * float(jnp.std(want)))
+
+
+def test_int8_matmul_block_shapes():
+    """Kernel must be invariant to the BlockSpec tiling."""
+    x = _rand(jax.random.key(0), (256, 1024), jnp.bfloat16)
+    w = _rand(jax.random.key(1), (1024, 256), jnp.float32)
+    w_q, s = ops.quantize_weight(w)
+    base = ops.int8_matmul(x, w_q, s, interpret=True)
+    for bm, bn, bk in [(128, 128, 512), (256, 128, 256), (128, 256, 1024)]:
+        got = ops.int8_matmul(x, w_q, s, bm=bm, bn=bn, bk=bk, interpret=True)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(base, np.float32),
+                                   rtol=1e-2, atol=1e-2)
+
+
+def test_int8_quantization_error_bounded():
+    w = _rand(jax.random.key(2), (512, 128), jnp.float32)
+    w_q, s = ops.quantize_weight(w)
+    w_back = w_q.astype(jnp.float32) * s[None, :]
+    err = jnp.max(jnp.abs(w - w_back))
+    assert float(err) <= float(jnp.max(s)) * 0.5 + 1e-6  # half-ULP of int8 grid
+
+
+# --- flash attention ---------------------------------------------------------
+
+@pytest.mark.parametrize("b,h,s,d", [(1, 2, 256, 64), (2, 1, 512, 128),
+                                     (1, 4, 384, 64)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(b, h, s, d, causal):
+    kq, kk, kv = jax.random.split(jax.random.key(b + s), 3)
+    q = _rand(kq, (b, h, s, d), jnp.float32)
+    k = _rand(kk, (b, h, s, d), jnp.float32)
+    v = _rand(kv, (b, h, s, d), jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=causal, block_q=128, block_k=128,
+                              interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("window", [64, 128, 256])
+def test_flash_attention_window(window):
+    q = _rand(jax.random.key(1), (1, 2, 512, 64), jnp.float32)
+    k = _rand(jax.random.key(2), (1, 2, 512, 64), jnp.float32)
+    v = _rand(jax.random.key(3), (1, 2, 512, 64), jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=True, window=window,
+                              block_q=128, block_k=64, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_bf16():
+    q = _rand(jax.random.key(4), (2, 2, 256, 128), jnp.bfloat16)
+    k = _rand(jax.random.key(5), (2, 2, 256, 128), jnp.bfloat16)
+    v = _rand(jax.random.key(6), (2, 2, 256, 128), jnp.bfloat16)
+    got = ops.flash_attention(q, k, v, interpret=True)
+    want = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_flash_matches_model_chunked_attention():
+    """Kernel ↔ the pure-JAX chunked attention used by the big shapes."""
+    from repro.models.attention import chunked_attention
+    q = _rand(jax.random.key(7), (2, 256, 4, 64), jnp.float32)
+    k = _rand(jax.random.key(8), (2, 256, 4, 64), jnp.float32)
+    v = _rand(jax.random.key(9), (2, 256, 4, 64), jnp.float32)
+    # model layout (B,S,KV,G=1,D) vs kernel layout (B,H,S,D)
+    got_model = chunked_attention(q[:, :, :, None, :], k, v, causal=True,
+                                  q_chunk=128, kv_chunk=128)[:, :, :, 0, :]
+    got_kernel = ops.flash_attention(
+        jnp.transpose(q, (0, 2, 1, 3)), jnp.transpose(k, (0, 2, 1, 3)),
+        jnp.transpose(v, (0, 2, 1, 3)), causal=True, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(jnp.transpose(got_kernel, (0, 2, 1, 3))),
+        np.asarray(got_model), rtol=2e-3, atol=2e-3)
+
+
+# --- quantize / dequantize ----------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(1024,), (333,), (64, 129), (7, 11, 13)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_quantize_roundtrip(shape, dtype):
+    x = _rand(jax.random.key(hash(shape) % 2**31), shape, dtype)
+    q, s, n = ops.quantize_blocks(x, block=256, interpret=True)
+    back = ops.dequantize_blocks(q, s, n, shape, dtype=jnp.float32,
+                                 interpret=True)
+    # per-block error ≤ scale/2
+    per_elem_bound = np.repeat(np.asarray(s), 256)[:n].reshape(shape) * 0.5
+    err = np.abs(np.asarray(x, np.float32) - np.asarray(back))
+    assert (err <= per_elem_bound + 1e-6).all()
+
+
+def test_quantize_matches_ref():
+    x = _rand(jax.random.key(11), (2048,), jnp.float32)
+    q, s, n = ops.quantize_blocks(x, block=256, interpret=True)
+    qr, sr, nr = ref.quantize_blocks_ref(x, block=256)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)

@@ -1,0 +1,102 @@
+"""Per-arch smoke tests: reduced same-family config, one forward/train step on
+CPU, asserting output shapes + finiteness (assignment deliverable f)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_ORDER, get_config
+from repro.configs.base import ShapeConfig
+from repro.models import ExecOptions, build_model, make_inputs
+
+SMOKE_TRAIN = ShapeConfig("smoke_train", "train", 64, 2)
+SMOKE_PREFILL = ShapeConfig("smoke_prefill", "prefill", 64, 2)
+
+
+def _model(arch, **opt_kw):
+    cfg = get_config(arch).smoke()
+    opts = ExecOptions(attn_impl="reference", ce_chunk=32, moe_group=32, **opt_kw)
+    return cfg, build_model(cfg, opts)
+
+
+@pytest.mark.parametrize("arch", ARCH_ORDER)
+def test_train_step_smoke(arch):
+    cfg, model = _model(arch)
+    params = model.init(jax.random.key(0))
+    batch = make_inputs(cfg, SMOKE_TRAIN, jax.random.key(1), dtype=jnp.float32)
+    (loss, metrics) = jax.jit(model.train_loss)(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), f"{arch}: loss={loss}"
+    # an untrained model on uniform-random labels should sit near ln(V)
+    import math
+    assert 0.2 * math.log(cfg.vocab_size) < float(loss) < 3.0 * math.log(
+        cfg.padded_vocab), f"{arch}: loss={float(loss)}"
+
+
+@pytest.mark.parametrize("arch", ARCH_ORDER)
+def test_train_grads_finite(arch):
+    cfg, model = _model(arch)
+    params = model.init(jax.random.key(0))
+    batch = make_inputs(cfg, SMOKE_TRAIN, jax.random.key(1), dtype=jnp.float32)
+
+    def loss_fn(p):
+        return model.train_loss(p, batch)[0]
+
+    grads = jax.jit(jax.grad(loss_fn))(params)
+    flat = jax.tree.leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in flat), arch
+    # something must actually flow
+    assert any(float(jnp.max(jnp.abs(g))) > 0 for g in flat), arch
+
+
+@pytest.mark.parametrize("arch", ARCH_ORDER)
+def test_prefill_decode_smoke(arch):
+    cfg, model = _model(arch)
+    params = model.init(jax.random.key(0))
+    batch = make_inputs(cfg, SMOKE_PREFILL, jax.random.key(1), dtype=jnp.float32)
+    logits, cache = jax.jit(model.prefill)(params, batch)
+    assert logits.shape == (2, 1, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits))), arch
+    # pad the kv cache out to a longer max_len before decoding
+    cache = _grow_cache(cfg, cache, max_len=96)
+    tok = jnp.argmax(logits[:, -1, :cfg.vocab_size], axis=-1)[:, None].astype(jnp.int32)
+    for _ in range(3):
+        logits, cache = jax.jit(model.decode)(params, {"tokens": tok}, cache)
+        assert logits.shape == (2, 1, cfg.padded_vocab)
+        assert bool(jnp.all(jnp.isfinite(logits))), arch
+        tok = jnp.argmax(logits[:, -1, :cfg.vocab_size], axis=-1)[:, None].astype(jnp.int32)
+
+
+def _grow_cache(cfg, cache, max_len):
+    """Pad prefill KV caches (seq axis) up to max_len where applicable."""
+    if cfg.family in ("dense", "moe", "vlm"):
+        pad = max_len - cache["k"].shape[2]
+        cache = dict(cache)
+        for k in ("k", "v"):
+            cache[k] = jnp.pad(cache[k], [(0, 0), (0, 0), (0, pad), (0, 0), (0, 0)])
+        return cache
+    if cfg.family == "encdec":
+        pad = max_len - cache["k"].shape[2]
+        cache = dict(cache)
+        for k in ("k", "v"):
+            cache[k] = jnp.pad(cache[k], [(0, 0), (0, 0), (0, pad), (0, 0), (0, 0)])
+        return cache
+    return cache  # ssm / hybrid state is O(1) in context
+
+
+@pytest.mark.parametrize("arch", ["smollm-360m", "mamba2-780m",
+                                  "recurrentgemma-2b"])
+def test_decode_matches_prefill(arch):
+    """Teacher-forced decode must reproduce prefill's last-position logits."""
+    cfg, model = _model(arch)
+    params = model.init(jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(2), (2, 16), 0, cfg.vocab_size,
+                              jnp.int32)
+    full_logits, _ = jax.jit(model.prefill)(params, {"tokens": toks})
+    # prefill the first 15 tokens, then decode token 15 and compare
+    _, cache = jax.jit(model.prefill)(params, {"tokens": toks[:, :15]})
+    cache = _grow_cache(cfg, cache, max_len=32)
+    step_logits, _ = jax.jit(model.decode)(
+        params, {"tokens": toks[:, 15:16]}, cache)
+    assert jnp.allclose(step_logits[:, 0], full_logits[:, -1], atol=2e-2,
+                        rtol=2e-2), arch

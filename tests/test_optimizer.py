@@ -1,0 +1,68 @@
+"""Optimizer unit tests: schedule shape, AdamW semantics, clipping."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train import optimizer as opt
+
+
+def test_lr_schedule_shape():
+    cfg = opt.OptimizerConfig(peak_lr=1e-3, warmup_steps=10, total_steps=100,
+                              end_lr_frac=0.1)
+    lrs = [float(opt.lr_at(cfg, jnp.int32(s))) for s in range(0, 101, 5)]
+    assert lrs[0] == 0.0
+    assert max(lrs) == pytest.approx(1e-3, rel=1e-3)
+    assert lrs[-1] == pytest.approx(1e-4, rel=0.05)      # cosine floor
+    # warmup is monotone up, decay monotone down
+    assert all(a <= b + 1e-12 for a, b in zip(lrs[:2], lrs[1:3]))
+    assert all(a >= b - 1e-12 for a, b in zip(lrs[4:-1], lrs[5:]))
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.ones((4,)) * 3.0, "b": jnp.ones((4,)) * 4.0}  # norm 10
+    clipped, norm = opt.clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(10.0, rel=1e-5)
+    assert float(opt.global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+    small, norm2 = opt.clip_by_global_norm(
+        {"a": jnp.ones((4,)) * 0.01}, 1.0)
+    assert float(opt.global_norm(small)) == pytest.approx(0.02, rel=1e-4)
+
+
+def test_adamw_reduces_quadratic():
+    cfg = opt.OptimizerConfig(peak_lr=0.05, warmup_steps=0, total_steps=200,
+                              weight_decay=0.0, clip_norm=1e9)
+    target = jnp.linspace(-1, 1, 16)
+    params = {"w": jnp.zeros((16,))}
+    state = opt.init_opt_state(params)
+
+    def loss(p):
+        return jnp.sum((p["w"] - target) ** 2)
+
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, state, lr = opt.adamw_update(params, g, state, cfg)
+    assert float(loss(params)) < 1e-2
+    assert int(state["step"]) == 200
+
+
+def test_weight_decay_pulls_to_zero():
+    cfg = opt.OptimizerConfig(peak_lr=0.01, warmup_steps=0, total_steps=100,
+                              weight_decay=1.0, clip_norm=1e9)
+    params = {"w": jnp.ones((8,))}
+    state = opt.init_opt_state(params)
+    zero_g = {"w": jnp.zeros((8,))}
+    for _ in range(100):
+        params, state, _ = opt.adamw_update(params, zero_g, state, cfg)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.7  # decayed, no grad signal
+
+
+def test_param_dtype_preserved():
+    cfg = opt.OptimizerConfig()
+    params = {"w": jnp.ones((4,), jnp.bfloat16)}
+    state = opt.init_opt_state(params)
+    g = {"w": jnp.ones((4,), jnp.float32)}
+    params, state, _ = opt.adamw_update(params, g, state, cfg)
+    assert params["w"].dtype == jnp.bfloat16
+    assert state["m"]["w"].dtype == jnp.float32

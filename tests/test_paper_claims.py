@@ -1,0 +1,155 @@
+"""Validation of the faithful reproduction against the paper's own claims.
+
+Every assertion cites the paper artifact it checks (Table III, Fig 2, abstract).
+Tolerances are the paper's own reported noise bars (±0.2–0.3 ms on ~4–6 ms,
+i.e. ~5 %); the paper used "a single simulation run per measurement point".
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import perf_model as pm
+from repro.core.scenarios import SCENARIOS, SCENARIO_ORDER
+from repro.core.workloads import WORKLOADS, WORKLOAD_ORDER
+
+MNV2 = WORKLOADS["mobilenetv2"]
+
+
+def _predict(scenario_name, batch=1, workload=MNV2):
+    return pm.predict(SCENARIOS[scenario_name], workload, batch)
+
+
+# --- Table III: mean latency / throughput / power, MobileNetV2 INT8 batch=1 ---
+
+TABLE3 = {
+    #                 latency_ms  thpt_ips  power_mw   (±0.2–0.3 ms reported)
+    "monolithic":       (4.7,      213.0,    1284.0),
+    "basic_chiplet":    (4.8,      208.0,    1026.0),
+    "ai_optimized":     (4.1,      244.0,     860.0),
+    "poor_integration": (6.2,      163.0,    1776.0),
+}
+
+
+@pytest.mark.parametrize("scenario", SCENARIO_ORDER)
+def test_table3_reproduction(scenario):
+    lat, thpt, power = TABLE3[scenario]
+    r = _predict(scenario)
+    assert float(r.latency_ms) == pytest.approx(lat, rel=0.06), scenario
+    assert float(r.throughput_ips) == pytest.approx(thpt, rel=0.06), scenario
+    assert float(r.power_mw) == pytest.approx(power, rel=0.06), scenario
+
+
+def test_table3_ordering():
+    """AI-optimized beats all; poor integration loses to all (Table III)."""
+    lats = {s: float(_predict(s).latency_ms) for s in SCENARIO_ORDER}
+    pows = {s: float(_predict(s).power_mw) for s in SCENARIO_ORDER}
+    assert lats["ai_optimized"] == min(lats.values())
+    assert lats["poor_integration"] == max(lats.values())
+    assert pows["ai_optimized"] == min(pows.values())
+    assert pows["poor_integration"] == max(pows.values())
+
+
+# --- Abstract / §V: headline improvement percentages (AI-opt vs basic) -------
+
+def test_headline_improvements():
+    basic = _predict("basic_chiplet")
+    ai = _predict("ai_optimized")
+    lat_drop = 100.0 * (1.0 - float(ai.latency_ms) / float(basic.latency_ms))
+    thpt_gain = 100.0 * (float(ai.throughput_ips) / float(basic.throughput_ips) - 1)
+    pow_drop = 100.0 * (1.0 - float(ai.power_mw) / float(basic.power_mw))
+    eff_gain = 100.0 * (float(ai.tops_per_w) / float(basic.tops_per_w) - 1)
+    assert lat_drop == pytest.approx(14.7, abs=2.0)    # paper: ~14.7 %
+    assert thpt_gain == pytest.approx(17.3, abs=2.0)   # paper: 17.3 %
+    assert pow_drop == pytest.approx(16.2, abs=3.0)    # paper: 16.2 %
+    assert eff_gain == pytest.approx(40.1, abs=5.0)    # paper: 40.1 %
+
+
+def test_tops_per_w_absolute():
+    """§V: 0.203 → 0.284 TOPS/W (paper normalizes MobileNetV2 to 1 GOP)."""
+    assert float(_predict("basic_chiplet").tops_per_w) == pytest.approx(0.203, abs=0.01)
+    assert float(_predict("ai_optimized").tops_per_w) == pytest.approx(0.284, abs=0.012)
+
+
+def test_energy_per_inference():
+    """Abstract: ≈3.5 mJ per MobileNetV2 inference (860 mW / 244 img/s)."""
+    r = _predict("ai_optimized")
+    assert float(r.energy_mj) == pytest.approx(3.5, abs=0.2)
+
+
+# --- Fig 2(b): throughput scaling with batch size ----------------------------
+
+def test_fig2b_batch_scaling():
+    batches = [1, 2, 4, 8, 16, 32]
+    grid = pm.predict_grid(
+        [SCENARIOS[s] for s in SCENARIO_ORDER], [MNV2], batches
+    )
+    thpt = grid.throughput_ips[:, 0, :]  # (scenario, batch)
+    # batching amortizes: batch-32 throughput beats batch-1 for every scenario
+    assert bool(jnp.all(thpt[:, -1] > thpt[:, 0]))
+    # AI-optimized scales monotonically (I4 migration defers the thermal derate
+    # that makes the reactive designs sag past their utilization sweet spot)
+    ai = SCENARIO_ORDER.index("ai_optimized")
+    assert bool(jnp.all(thpt[ai, 1:] >= thpt[ai, :-1]))
+    # AI-optimized consistently achieves the highest images/sec (paper Fig 2b)
+    for s in range(len(SCENARIO_ORDER)):
+        if s != ai:
+            assert bool(jnp.all(thpt[ai] >= thpt[s]))
+
+
+# --- Fig 2(d,f): workload comparison + sub-5 ms real-time capability ---------
+
+def test_fig2d_ai_opt_fastest_per_workload():
+    for w in WORKLOAD_ORDER:
+        lats = {
+            s: float(_predict(s, workload=WORKLOADS[w]).latency_ms)
+            for s in SCENARIO_ORDER
+        }
+        assert lats["ai_optimized"] == min(lats.values()), w
+
+
+def test_fig2f_realtime_capability():
+    """Sub-5 ms on AI-optimized for MobileNetV2 + video; ResNet-50's 12 ms base
+    compute (Table II) cannot meet 5 ms — Fig 2(f) 'shows WHICH workloads meet'
+    the requirement (the abstract's 'all workloads' refers to the sub-5 ms
+    capable set; see DESIGN.md §10)."""
+    assert bool(_predict("ai_optimized", workload=MNV2).realtime_ok)
+    assert bool(_predict("ai_optimized", workload=WORKLOADS["realtime_video"]).realtime_ok)
+    assert not bool(_predict("ai_optimized", workload=WORKLOADS["resnet50"]).realtime_ok)
+
+
+# --- model identities ---------------------------------------------------------
+
+def test_throughput_latency_identity():
+    for s in SCENARIO_ORDER:
+        for b in (1, 4, 32):
+            r = _predict(s, batch=b)
+            assert float(r.throughput_ips) == pytest.approx(
+                1000.0 * b / float(r.latency_ms), rel=1e-5
+            )
+
+
+def test_monolithic_has_no_comm():
+    r = _predict("monolithic")
+    assert float(r.t_comm_ms) < 1e-6  # '—' in Table I (inf bandwidth encoding)
+
+
+def test_prefetch_overlap_hides_comm():
+    """I2: AI-optimized overlaps transfers; latency == compute only."""
+    ai = _predict("ai_optimized")
+    assert float(ai.latency_ms) == pytest.approx(float(ai.t_compute_ms), rel=1e-5)
+    assert float(ai.t_comm_ms) > 0.0  # the transfer still happens (power accounts)
+
+
+def test_model_is_differentiable():
+    """Beyond-paper: the reconstructed simulator admits gradient-based co-design."""
+    sv = SCENARIOS["basic_chiplet"].as_vector()
+    wv = MNV2.as_vector()
+
+    def lat(v):
+        return pm.predict_vec(v, wv, jnp.float32(1.0)).latency_ms
+
+    g = jax.grad(lat)(sv)
+    assert bool(jnp.all(jnp.isfinite(g)))
+    # more link bandwidth must not increase latency
+    assert float(g[1]) <= 0.0

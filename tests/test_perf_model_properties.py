@@ -1,0 +1,124 @@
+"""Property-based tests (hypothesis) on the reconstructed simulator's
+invariants — the system-level contracts the paper's design arguments rest on."""
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import perf_model as pm
+from repro.core.scenarios import AI_OPTIMIZED, BASIC_CHIPLET, Scenario
+from repro.core.workloads import MOBILENET_V2, Workload
+
+settings.register_profile("ci", max_examples=40, deadline=None)
+settings.load_profile("ci")
+
+scenario_st = st.builds(
+    Scenario,
+    name=st.just("prop"),
+    link_latency_us=st.floats(0.0, 20.0),
+    link_bandwidth_gbps=st.floats(1.0, 128.0),
+    base_power_mw=st.floats(300.0, 3000.0),
+    comm_power_mw_per_ms=st.floats(0.0, 100.0),
+    efficiency_factor=st.floats(0.5, 1.5),
+    throttle_threshold=st.floats(0.5, 1.0),
+    static_power_ratio=st.floats(0.1, 0.8),
+    voltage_scale=st.floats(0.8, 1.2),
+    protocol_overhead=st.floats(1.0, 1.5),
+)
+
+workload_st = st.builds(
+    Workload,
+    name=st.just("w"),
+    base_compute_ms=st.floats(0.5, 20.0),
+    input_size_mb=st.floats(0.05, 5.0),
+    complexity_factor=st.floats(0.3, 2.0),
+    batch_efficiency=st.floats(0.5, 1.0),
+    gops_per_inference=st.floats(0.1, 10.0),
+)
+
+batch_st = st.sampled_from([1, 2, 4, 8, 16, 32])
+
+
+@given(scenario_st, workload_st, batch_st)
+def test_outputs_positive_and_finite(s, w, b):
+    r = pm.predict(s, w, b)
+    for f in ("latency_ms", "throughput_ips", "power_mw", "tops_per_w",
+              "energy_mj"):
+        v = float(getattr(r, f))
+        assert math.isfinite(v) and v > 0.0, (f, v)
+
+
+@given(scenario_st, workload_st, batch_st)
+def test_throughput_identity(s, w, b):
+    r = pm.predict(s, w, b)
+    assert float(r.throughput_ips) == pytest.approx(
+        1000.0 * b / float(r.latency_ms), rel=1e-4)
+
+
+@given(scenario_st, workload_st, batch_st)
+def test_more_bandwidth_never_hurts(s, w, b):
+    fast = dataclasses.replace(s, link_bandwidth_gbps=s.link_bandwidth_gbps * 2)
+    assert float(pm.predict(fast, w, b).latency_ms) \
+        <= float(pm.predict(s, w, b).latency_ms) + 1e-5
+
+
+@given(scenario_st, workload_st, batch_st)
+def test_lower_link_latency_never_hurts(s, w, b):
+    snappy = dataclasses.replace(s, link_latency_us=s.link_latency_us * 0.5)
+    assert float(pm.predict(snappy, w, b).latency_ms) \
+        <= float(pm.predict(s, w, b).latency_ms) + 1e-5
+
+
+@given(scenario_st, workload_st, batch_st)
+def test_prefetch_overlap_never_hurts(s, w, b):
+    ov = dataclasses.replace(s, prefetch_overlap=True)
+    assert float(pm.predict(ov, w, b).latency_ms) \
+        <= float(pm.predict(s, w, b).latency_ms) + 1e-5
+
+
+@given(scenario_st, workload_st, batch_st)
+def test_compression_reduces_comm_time(s, w, b):
+    comp = dataclasses.replace(s, compression_ratio=0.5)
+    assert float(pm.predict(comp, w, b).t_comm_ms) \
+        <= float(pm.predict(s, w, b).t_comm_ms) + 1e-6
+
+
+@given(scenario_st, workload_st)
+def test_batching_amortizes(s, w):
+    """Per-image latency at batch 32 ≤ at batch 1 when batching is efficient
+    and the design never throttles (throttle_threshold ≥ 1)."""
+    s = dataclasses.replace(s, throttle_threshold=1.0)
+    r1 = pm.predict(s, w, 1)
+    r32 = pm.predict(s, w, 32)
+    assert float(r32.latency_ms) / 32 <= float(r1.latency_ms) * 1.02
+
+
+@given(workload_st, batch_st)
+def test_paper_scenarios_ordering_robust_across_workloads(w, b):
+    """AI-optimized ≥ basic chiplet for any plausible workload (the paper's
+    central claim is not MobileNetV2-specific)."""
+    ai = pm.predict(AI_OPTIMIZED, w, b)
+    basic = pm.predict(BASIC_CHIPLET, w, b)
+    assert float(ai.latency_ms) <= float(basic.latency_ms) * 1.001
+    assert float(ai.power_mw) <= float(basic.power_mw) * 1.001
+
+
+@given(scenario_st, workload_st, batch_st)
+def test_grid_matches_pointwise(s, w, b):
+    grid = pm.predict_grid([s], [w], [b])
+    point = pm.predict(s, w, b)
+    assert float(grid.latency_ms[0, 0, 0]) == pytest.approx(
+        float(point.latency_ms), rel=1e-5)
+
+
+@given(scenario_st, workload_st)
+def test_gradients_finite_everywhere(s, w):
+    def lat(v):
+        return pm.predict_vec(v, w.as_vector(), jnp.float32(4.0)).latency_ms
+
+    g = jax.grad(lat)(s.as_vector())
+    assert bool(jnp.all(jnp.isfinite(g)))

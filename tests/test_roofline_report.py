@@ -1,0 +1,82 @@
+"""Roofline report logic: analytic MODEL_FLOPS, term math, plan suggestion."""
+
+import pytest
+
+from repro.configs import ARCH_ORDER, get_config
+from repro.configs.base import SHAPES
+from repro.core.planner import HBM_BW, ICI_BW, PEAK_FLOPS_BF16, RooflineTerms
+from repro.launch.roofline import cell_terms, model_flops
+from repro.launch.steps import suggest_plan
+
+
+class FakeMesh:
+    size = 256
+    shape = {"data": 16, "model": 16}
+
+
+def test_model_flops_scaling():
+    """6·N·D train vs 2·N·D prefill vs 2·N_active·B decode."""
+    t = model_flops("gemma-7b", "train_4k")
+    p = model_flops("gemma-7b", "prefill_32k")
+    d = model_flops("gemma-7b", "decode_32k")
+    tokens_t = 256 * 4096
+    tokens_p = 32 * 32768
+    assert t / p == pytest.approx(3.0 * tokens_t / tokens_p, rel=1e-6)
+    assert d / p == pytest.approx(128 / tokens_p, rel=1e-6)
+
+
+def test_moe_uses_active_params():
+    cfg = get_config("dbrx-132b")
+    assert cfg.active_param_count() < 0.4 * cfg.param_count_analytic()
+    t = model_flops("dbrx-132b", "train_4k")
+    assert t == pytest.approx(6.0 * cfg.active_param_count() * 256 * 4096,
+                              rel=1e-6)
+
+
+def test_param_counts_sane():
+    """Analytic N within ~25 % of the architecture's nameplate."""
+    expect = {"gemma-7b": 8.5e9, "qwen2.5-32b": 32.5e9, "smollm-360m": 3.6e8,
+              "chatglm3-6b": 6.2e9, "llava-next-mistral-7b": 7.2e9,
+              "mamba2-780m": 7.8e8, "dbrx-132b": 132e9,
+              "recurrentgemma-2b": 2.7e9}
+    for arch, n in expect.items():
+        got = get_config(arch).param_count_analytic()
+        assert 0.7 * n < got < 1.35 * n, (arch, got, n)
+
+
+def test_roofline_terms_math():
+    t = RooflineTerms(flops=197e12 * 256, hbm_bytes=819e9 * 256,
+                      collective_bytes=50e9 * 256 * 2, chips=256,
+                      model_flops=197e12 * 128)
+    assert t.compute_s == pytest.approx(1.0)
+    assert t.memory_s == pytest.approx(1.0)
+    assert t.collective_s == pytest.approx(2.0)
+    assert t.dominant == "collective"
+    assert t.useful_flops_ratio == pytest.approx(0.5)
+    assert t.roofline_fraction == pytest.approx(0.25)  # 0.5s ideal / 2s bound
+
+
+def test_cell_terms_from_record():
+    rec = {"status": "ok", "arch": "gemma-7b", "shape": "train_4k",
+           "single_pod": {"chips": 256, "memory": {}},
+           "totals_per_dev": {"flops": 1e12, "bytes": 1e10,
+                              "coll_bytes": 1e9, "coll_kinds": {}}}
+    t = cell_terms(rec)
+    assert t.flops == 1e12 * 256
+    assert t.compute_s == pytest.approx(1e12 / 197e12)
+
+
+def test_suggest_plan_matches_hillclimb_findings():
+    mesh = FakeMesh()
+    assert suggest_plan(get_config("smollm-360m"), SHAPES["train_4k"], mesh) \
+        == "dp_heavy"
+    assert suggest_plan(get_config("dbrx-132b"), SHAPES["train_4k"], mesh) \
+        == "tp16"
+    assert suggest_plan(get_config("dbrx-132b"), SHAPES["decode_32k"], mesh) \
+        == "serve_ws"
+    # replicated-expert MoE must NOT get weight-stationary decode (measured
+    # ×10.8 flops regression on qwen2-moe — EXPERIMENTS.md §Perf #3 control)
+    assert suggest_plan(get_config("qwen2-moe-a2.7b"), SHAPES["decode_32k"],
+                        mesh) == "tp16"
+    assert suggest_plan(get_config("gemma-7b"), SHAPES["prefill_32k"], mesh) \
+        == "tp16"

@@ -1,0 +1,107 @@
+"""Logical-axis sharding rules: divisibility back-off, schema specs, cache
+specs — pure logic, no devices needed (mesh built on 1 CPU device is fine
+for spec resolution since rules read mesh.shape)."""
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.launch import steps as steps_mod
+from repro.models import build_model
+from repro.parallel import sharding as sh
+
+
+class FakeMesh:
+    """Spec resolution only reads .shape / .size."""
+
+    def __init__(self, **axes):
+        self.shape = dict(axes)
+        self.size = 1
+        for v in axes.values():
+            self.size *= v
+
+
+MESH = FakeMesh(data=16, model=16)
+MESH3 = FakeMesh(pod=2, data=16, model=16)
+
+
+def test_divisible_dims_shard():
+    spec = sh.spec_for((256, 4096), ("batchlike", "embed"), MESH)
+    assert spec == P("data", None)  # embed falls back: data already used
+    spec = sh.spec_for((4096, 24576), ("embed", "ff"), MESH)
+    assert spec == P("data", "model")
+
+
+def test_indivisible_dims_replicate():
+    # 15 heads don't divide 16 → replicated
+    assert sh.spec_for((15, 64), ("heads", None), MESH) == P(None, None)
+    # 60 experts don't divide 16 → replicated, ff picks up model
+    assert sh.spec_for((60, 2048, 1408), ("experts", "embed", "ff"), MESH) \
+        == P(None, "data", "model")
+
+
+def test_batchlike_uses_pod_and_data():
+    assert sh.spec_for((256, 128), ("batchlike", None), MESH3) \
+        == P(("pod", "data"), None)
+    # batch=8 divides data(16)? no → falls through to None? 8 % 32 != 0,
+    # 8 % 16 != 0 → replicate
+    assert sh.spec_for((8, 128), ("batchlike", None), MESH3) == P(None, None)
+
+
+def test_axis_used_once_per_tensor():
+    # both dims want 'model' → second one must back off
+    spec = sh.spec_for((256, 512), ("ff", "vocab"), MESH)
+    assert spec == P("model", None)
+
+
+def test_schema_pspecs_match_structure():
+    cfg = steps_mod.arch_for_mesh(get_config("gemma-7b"), MESH)
+    model = build_model(cfg)
+    specs = sh.schema_pspecs(model.schema, MESH)
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    from repro.models.common import is_schema_leaf
+    flat_d = jax.tree.leaves(model.schema, is_leaf=is_schema_leaf)
+    assert len(flat_s) == len(flat_d)
+    # embed (V, d): vocab→model, embed→data
+    assert specs["embed"] == P("model", "data")
+    # stacked FFN weight (L, d, f)
+    assert specs["layers"]["w1"] == P(None, "data", "model")
+    # gemma heads = 16 → sharded
+    assert specs["layers"]["wq"] == P(None, "data", "model", None)
+
+
+def test_padded_heads_shard_for_awkward_archs():
+    for arch in ("qwen2.5-32b", "smollm-360m", "recurrentgemma-2b"):
+        cfg = steps_mod.arch_for_mesh(get_config(arch), MESH)
+        assert cfg.n_heads_padded % 16 == 0
+        model = build_model(cfg)
+        specs = sh.schema_pspecs(model.schema, MESH)
+        wq = specs["layers"]["wq"] if "layers" in specs else specs["attn"]["wq"]
+        assert wq[2] == "model", (arch, wq)
+
+
+def test_cache_specs_kv_vs_seq():
+    # gemma kv=16 → kv-head sharding
+    cfg = steps_mod.arch_for_mesh(get_config("gemma-7b"), MESH)
+    model = build_model(cfg)
+    cache = model.cache_shape(128, 32768)
+    specs = sh.cache_pspecs(cfg, cache, MESH)
+    assert specs["k"] == P(None, "data", None, "model", None)
+    # mistral kv=8 → sequence sharding (flash-decoding split-K)
+    cfg = steps_mod.arch_for_mesh(get_config("llava-next-mistral-7b"), MESH)
+    model = build_model(cfg)
+    cache = model.cache_shape(128, 32768)
+    specs = sh.cache_pspecs(cfg, cache, MESH)
+    assert specs["k"] == P(None, "data", "model", None, None)
+    assert specs["pos"] == P("data")
+
+
+def test_suggest_n_micro_monotone_in_model_size():
+    shape = steps_mod.SHAPES["train_4k"] if hasattr(steps_mod, "SHAPES") else None
+    from repro.configs.base import SHAPES
+    small = steps_mod.suggest_n_micro(get_config("smollm-360m"),
+                                      SHAPES["train_4k"], MESH)
+    big = steps_mod.suggest_n_micro(get_config("dbrx-132b"),
+                                    SHAPES["train_4k"], MESH)
+    assert small == 1 and big >= 4
