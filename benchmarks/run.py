@@ -1,12 +1,18 @@
 """Benchmark harness — one section per paper table/figure + framework benches.
 
-Run: PYTHONPATH=src python -m benchmarks.run [--only table3,fig2,...]
+Run: PYTHONPATH=src python -m benchmarks.run [--only table3,fig2,...] [--json]
 Prints `name,value,unit` rows per section (CSV-ish, grep-friendly).
+
+`--json` additionally writes one BENCH_<section>.json per executed section
+(serve tokens/s, prefill compile counts, sweep wall-times, ...) so the perf
+trajectory is tracked across PRs — each file is a flat {metric: number} dict.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
 import time
 
 import jax
@@ -30,6 +36,7 @@ def bench_table1():
     from repro.core import ucie as ucie_mod
     from repro.core.scenarios import SCENARIOS, SCENARIO_ORDER
     print("\n## Table I — scenario parameters + derived link cost")
+    metrics = {}
     for name in SCENARIO_ORDER:
         s = SCENARIOS[name]
         if s.is_monolithic:
@@ -39,10 +46,12 @@ def bench_table1():
             bandwidth_gbps=s.link_bandwidth_gbps, latency_us=s.link_latency_us,
             streaming=s.prefetch_overlap, compression_ratio=s.compression_ratio)
         t_us, e_mj, wire = ucie_mod.transfer(jnp.float32(0.57e6), cfg)
+        metrics[f"{name}_transfer_ms"] = float(t_us) / 1e3
         print(f"table1,{name},latency_us={s.link_latency_us},"
               f"bw_gbps={s.link_bandwidth_gbps},transfer_ms="
               f"{float(t_us)/1e3:.3f},wire_MB={float(wire)/1e6:.2f},"
               f"energy_mJ={float(e_mj):.3f}")
+    return metrics
 
 
 # --------------------------------------------------------------------- table3
@@ -55,9 +64,12 @@ def bench_table3():
     paper = {"monolithic": (4.7, 213, 1284), "basic_chiplet": (4.8, 208, 1026),
              "ai_optimized": (4.1, 244, 860), "poor_integration": (6.2, 163, 1776)}
     us, _ = _timeit(lambda: pm.predict(SCENARIOS["ai_optimized"], mnv2, 1))
+    metrics = {"model_eval_us": us}
     for name in SCENARIO_ORDER:
         r = pm.predict(SCENARIOS[name], mnv2, 1)
         p = paper[name]
+        metrics[f"{name}_latency_ms"] = float(r.latency_ms)
+        metrics[f"{name}_throughput_ips"] = float(r.throughput_ips)
         print(f"table3,{name},lat_ms={float(r.latency_ms):.2f}(paper {p[0]}),"
               f"thpt={float(r.throughput_ips):.0f}(paper {p[1]}),"
               f"power_mW={float(r.power_mw):.0f}(paper {p[2]}),"
@@ -70,6 +82,7 @@ def bench_table3():
           f"(paper -16.2%),topsw=+{100*(float(a.tops_per_w)/float(b.tops_per_w)-1):.1f}%"
           f"(paper +40.1%)")
     print(f"table3,model_eval_us,{us:.1f}")
+    return metrics
 
 
 # ----------------------------------------------------------------------- fig2
@@ -107,21 +120,50 @@ def bench_fig2():
 
 # ------------------------------------------------------------------------ soc
 def bench_soc():
-    from repro.core import build_soc, simulate
-    from repro.core.scenarios import SCENARIOS
+    """Time-stepped simulator: per-scenario detail + the vmapped full sweep
+    (all scenarios × an arrival-rate grid in ONE jitted call)."""
+    from repro.core import build_soc, simulate, simulate_batch
+    from repro.core.scenarios import SCENARIOS, SCENARIO_ORDER
     from repro.core.workloads import WORKLOADS
+    mnv2 = WORKLOADS["mobilenetv2"]
+    metrics = {}
     print("\n## Time-stepped SoC simulator (I1+I2+I3+I4 composed)")
     for s in ("basic_chiplet", "ai_optimized"):
         soc = build_soc(SCENARIOS[s])
         t0 = time.perf_counter()
-        out = simulate(soc, WORKLOADS["mobilenetv2"], arrival_rate_ips=200.0,
-                       duration_ms=200.0)
+        out = simulate(soc, mnv2, arrival_rate_ips=200.0, duration_ms=200.0)
         jax.block_until_ready(out["throughput_ips"])
         dt = time.perf_counter() - t0
+        metrics[f"{s}_throughput_ips"] = float(out["throughput_ips"])
         print(f"soc,{s},thpt={float(out['throughput_ips']):.0f}ips,"
               f"E/inf={float(out['energy_mj_per_inf']):.2f}mJ,"
               f"peakT={float(out['peak_temp_c']):.1f}C,"
               f"migrations={int(out['migrations'])},sim_wall_s={dt:.2f}")
+
+    # --- vmapped sweep: scenarios × arrival rates, one compiled program -----
+    socs = [build_soc(SCENARIOS[s]) for s in SCENARIO_ORDER]
+    rates = jnp.asarray([25., 50., 100., 150., 200., 300., 500., 1000.])
+    t0 = time.perf_counter()
+    grid = simulate_batch(socs, mnv2, rates, duration_ms=200.0)
+    jax.block_until_ready(grid["throughput_ips"])
+    compile_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    grid = simulate_batch(socs, mnv2, rates, duration_ms=200.0)
+    jax.block_until_ready(grid["throughput_ips"])
+    sweep_s = time.perf_counter() - t0
+    metrics["sweep_points"] = int(len(socs) * rates.shape[0])
+    metrics["sweep_wall_s"] = sweep_s
+    metrics["sweep_compile_s"] = compile_s
+    print(f"soc,sweep,{len(socs)}x{rates.shape[0]}_points,"
+          f"wall_s={sweep_s:.2f}(first={compile_s:.2f}),one_jitted_call")
+    for i, s in enumerate(SCENARIO_ORDER):
+        # max sustainable load still meeting the paper's 5 ms deadline
+        lat = np.asarray(grid["latency_ms"][i])
+        ok = np.where(lat <= 5.0)[0]
+        knee = float(rates[ok[-1]]) if ok.size else 0.0
+        metrics[f"{s}_max_rate_5ms"] = knee
+        print(f"soc,sweep,{s},max_rate_sub5ms={knee:.0f}ips")
+    return metrics
 
 
 # ------------------------------------------------------------------------ dse
@@ -145,6 +187,8 @@ def bench_dse():
 
     us, eff = _timeit(sweep, cand)
     best = int(jnp.argmax(eff))
+    metrics = {"sweep_candidates": n, "sweep_wall_us": us,
+               "best_tops_w": float(eff[best])}
     print(f"dse,sweep,{n}_candidates,{us:.0f}us_total,"
           f"{us/n*1e3:.1f}ns_per_design,best_tops_w={float(eff[best]):.3f}")
 
@@ -167,14 +211,78 @@ def bench_dse():
     for _ in range(200):
         v = step(v)
     e1 = float(pm.predict_vec(v, wv, jnp.float32(1.0)).tops_per_w)
+    metrics["codesign_tops_w"] = e1
     print(f"dse,grad_codesign,tops_w {e0:.4f}->{e1:.4f} within +/-25% design"
           f" box (lat/bw/power/eff/compression tuned by gradient)")
+    return metrics
+
+
+# ---------------------------------------------------------------------- serve
+def bench_serve():
+    """Serving fast path: tokens/s and prefill compile count with pow2 prompt
+    bucketing on vs off.
+
+    NOTE: `no_bucketing` is not the seed engine — it keeps the donated
+    decode, jitted paste, cache-only prefill and one-sync step; the delta
+    isolates the bucketing win (the compile-count collapse) only."""
+    from repro.configs import get_config
+    from repro.models import ExecOptions, build_model
+    from repro.serve.engine import ServeEngine
+    print("\n## Serve engine (continuous batching, smollm smoke config)")
+    cfg = get_config("smollm-360m").smoke()
+    model = build_model(cfg, ExecOptions(attn_impl="reference", ce_chunk=32))
+    params = model.init(jax.random.key(0))
+
+    def prompts(n_req=12):
+        out = []
+        for i in range(n_req):
+            n = 5 + (i * 7) % 23          # many distinct lengths
+            out.append(np.asarray(jax.random.randint(
+                jax.random.key(i), (n,), 0, cfg.vocab_size), np.int32))
+        return out
+
+    metrics = {}
+    for tag, bucketed in (("fast", True), ("no_bucketing", False)):
+        eng = ServeEngine(model, n_slots=4, max_len=64, params=params,
+                          bucket_prompts=bucketed)
+        ps = prompts()
+        t0 = time.perf_counter()
+        for p in ps:
+            eng.submit(p, max_new_tokens=8)
+        stats = eng.run_to_completion()
+        dt = time.perf_counter() - t0
+        tps = stats.tokens_out / dt
+        metrics[f"{tag}_tokens_per_s"] = tps
+        metrics[f"{tag}_prefill_compiles"] = stats.prefill_compiles
+        print(f"serve,{tag},tokens_per_s={tps:.1f},"
+              f"prefill_compiles={stats.prefill_compiles},"
+              f"decode_steps={stats.decode_steps},"
+              f"mean_occupancy={stats.summary().get('mean_occupancy', 0):.2f}")
+
+    # steady-state decode throughput (slots full, compiles amortized)
+    eng = ServeEngine(model, n_slots=4, max_len=64, params=params)
+    for p in prompts(4):
+        eng.submit(p, max_new_tokens=40)
+    eng.step()                             # admit + warm the decode jit
+    tok0 = eng.stats.tokens_out
+    t0 = time.perf_counter()
+    steps = 0
+    while eng.step():
+        steps += 1
+    dt = time.perf_counter() - t0
+    tps = (eng.stats.tokens_out - tok0) / dt   # exact: counts emitted tokens
+    metrics["decode_tokens_per_s"] = tps
+    print(f"serve,decode_steady,tokens_per_s={tps:.1f},steps={steps}")
+    return metrics
 
 
 # -------------------------------------------------------------------- kernels
 def bench_kernels():
     from repro.kernels import ops, ref
+    from repro.kernels.decode_attention import decode_attention as dec_attn
+    from repro.models import attention as attn_mod
     print("\n## Pallas kernels (interpret mode on CPU; TPU is the target)")
+    metrics = {}
     x = jax.random.normal(jax.random.key(0), (256, 1024), jnp.float32)
     w = jax.random.normal(jax.random.key(1), (1024, 256), jnp.float32)
     wq, s = ops.quantize_weight(w)
@@ -183,16 +291,31 @@ def bench_kernels():
     want = ref.int8_matmul_ref(x, wq, s)
     rel = float(jnp.max(jnp.abs(out.astype(jnp.float32) - want))
                 / jnp.max(jnp.abs(want)))
+    metrics["int8_matmul_us"] = us
     print(f"kernels,int8_matmul,256x1024x256,{us:.0f}us,rel_err={rel:.4f}")
     q = jax.random.normal(jax.random.key(2), (1, 4, 256, 64), jnp.float32)
     us, out = _timeit(lambda: ops.flash_attention(q, q, q, causal=True),
                       n=3, warmup=1)
     err = float(jnp.max(jnp.abs(out - ref.flash_attention_ref(q, q, q))))
+    metrics["flash_attention_us"] = us
     print(f"kernels,flash_attention,B1H4S256D64,{us:.0f}us,err={err:.2e}")
-    g = jax.random.normal(jax.random.key(3), (1 << 16,), jnp.float32)
-    us, (qq, ss, nn) = _timeit(lambda: ops.quantize_blocks(g), n=3, warmup=1)
+    # decode attention: single query vs ragged cache (the serve hot loop)
+    b, kv, g, d, smax = 4, 2, 4, 64, 512
+    qd = jax.random.normal(jax.random.key(4), (b, 1, kv, g, d), jnp.float32)
+    kc = jax.random.normal(jax.random.key(5), (b, smax, kv, d), jnp.float32)
+    vc = jax.random.normal(jax.random.key(6), (b, smax, kv, d), jnp.float32)
+    kvl = jnp.asarray([37, 200, 350, 512], jnp.int32)
+    us, out = _timeit(
+        lambda: dec_attn(qd, kc, vc, kvl, interpret=True), n=3, warmup=1)
+    want = attn_mod.decode_attention(qd, kc, vc, kvl, impl="reference")
+    err = float(jnp.max(jnp.abs(out - want)))
+    metrics["decode_attention_us"] = us
+    print(f"kernels,decode_attention,B4KV2G4S512D64,{us:.0f}us,err={err:.2e}")
+    gx = jax.random.normal(jax.random.key(3), (1 << 16,), jnp.float32)
+    us, (qq, ss, nn) = _timeit(lambda: ops.quantize_blocks(gx), n=3, warmup=1)
     print(f"kernels,quantize_blocks,64Ktokens,{us:.0f}us,"
-          f"payload_ratio={float((qq.size + 4*ss.size)/(4*g.size)):.3f}")
+          f"payload_ratio={float((qq.size + 4*ss.size)/(4*gx.size)):.3f}")
+    return metrics
 
 
 # ------------------------------------------------------------------- roofline
@@ -217,31 +340,7 @@ def bench_roofline():
               f"fraction={row['roofline_fraction']:.2f},"
               f"peak_GiB={row['peak_gib']:.1f}")
     print(f"roofline,cells_ok,{ok}")
-
-
-SECTIONS = {
-    "table1": bench_table1,
-    "table3": bench_table3,
-    "fig2": bench_fig2,
-    "soc": bench_soc,
-    "dse": bench_dse,
-    "kernels": bench_kernels,
-    "roofline": bench_roofline,
-}
-
-
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None,
-                    help="comma-separated subset of " + ",".join(SECTIONS))
-    args = ap.parse_args()
-    names = args.only.split(",") if args.only else list(SECTIONS)
-    t0 = time.time()
-    for n in names:
-        SECTIONS[n]()
-    print(f"\nbenchmarks done in {time.time()-t0:.1f}s")
-
-
+    return {"cells_ok": ok}
 
 
 # -------------------------------------------------------------- ablations
@@ -276,8 +375,6 @@ def bench_ablations():
         print(f"ablation,{name},lat_ms={float(r.latency_ms):.2f},"
               f"vs_basic_lat=-{dlat:.1f}%,vs_basic_topsw=+{dtw:.1f}%")
     # thermal mechanism (I4) shows up at sustained batch, not batch-1
-    from repro.core.scenarios import SCENARIOS
-    import jax.numpy as jnp
     grid = pm.predict_grid([AI_OPTIMIZED,
                             dataclasses.replace(AI_OPTIMIZED, name="react",
                                                 dvfs_adaptive=False,
@@ -289,7 +386,36 @@ def bench_ablations():
           f"reactive={re32:.0f}ips,delta=+{100*(ai32/re32-1):.1f}%")
 
 
-SECTIONS["ablations"] = bench_ablations
+SECTIONS = {
+    "table1": bench_table1,
+    "table3": bench_table3,
+    "fig2": bench_fig2,
+    "soc": bench_soc,
+    "dse": bench_dse,
+    "serve": bench_serve,
+    "kernels": bench_kernels,
+    "roofline": bench_roofline,
+    "ablations": bench_ablations,
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of " + ",".join(SECTIONS))
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_<section>.json per executed section")
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(SECTIONS)
+    t0 = time.time()
+    for n in names:
+        metrics = SECTIONS[n]()
+        if args.json and metrics:
+            path = pathlib.Path(f"BENCH_{n}.json")
+            path.write_text(json.dumps(metrics, indent=2, sort_keys=True))
+            print(f"bench,json,{path}")
+    print(f"\nbenchmarks done in {time.time()-t0:.1f}s")
+
 
 if __name__ == "__main__":
     main()

@@ -22,7 +22,14 @@ from repro.core.scenarios import (
     Scenario,
     get_scenario,
 )
-from repro.core.soc import SoCConfig, build_soc, simulate
+from repro.core.soc import (
+    SoCConfig,
+    SoCParams,
+    build_soc,
+    simulate,
+    simulate_batch,
+    soc_params,
+)
 from repro.core.workloads import (
     MOBILENET_V2,
     REALTIME_VIDEO,
@@ -48,6 +55,7 @@ __all__ = [
     "SCENARIO_ORDER",
     "Scenario",
     "SoCConfig",
+    "SoCParams",
     "WORKLOADS",
     "WORKLOAD_ORDER",
     "Workload",
@@ -59,4 +67,6 @@ __all__ = [
     "predict_grid",
     "predict_noisy",
     "simulate",
+    "simulate_batch",
+    "soc_params",
 ]

@@ -71,7 +71,9 @@ class DVFSState:
 
 
 def init_state(n_chiplets: int, cfg: DVFSConfig) -> DVFSState:
-    nominal = int(jnp.argmin(jnp.abs(jnp.asarray(cfg.freqs) - 1.0)))
+    # pure-python argmin: the P-state table is static config, and staging it
+    # through jnp would make init_state unusable inside jit/vmap
+    nominal = min(range(len(cfg.freqs)), key=lambda i: abs(cfg.freqs[i] - 1.0))
     return DVFSState(
         level=jnp.full((n_chiplets,), nominal, jnp.int32),
         load_ema=jnp.zeros((n_chiplets,), jnp.float32),
@@ -110,52 +112,54 @@ def step(
     Returns (new_state, (freq_scale, power_mw, util)) each of shape (n_chiplets,).
     """
     volts, freqs = cfg.tables()
+    # `adaptive` may be a traced 0/1 array (vmapped design sweeps) or a plain
+    # bool; both P-state policies are computed branchlessly and selected.
+    adaptive = jnp.asarray(cfg.adaptive, bool)
     ema = cfg.ema_decay * state.load_ema + (1.0 - cfg.ema_decay) * load_demand
     predicted = ema * (1.0 + cfg.guard_band)
 
-    if cfg.adaptive:
-        # Minimal level whose frequency covers predicted demand: freqs is
-        # sorted ascending, so take argmax of the first True.
-        ok = freqs[None, :] >= jnp.minimum(predicted, freqs[-1])[:, None]
-        level = jnp.argmax(ok, axis=-1).astype(jnp.int32)
-    else:
-        level = state.level  # fixed nominal P-state
+    # Minimal level whose frequency covers predicted demand: freqs is
+    # sorted ascending, so take argmax of the first True. Non-adaptive
+    # controllers hold the fixed nominal P-state instead.
+    ok = freqs[None, :] >= jnp.minimum(predicted, freqs[-1])[:, None]
+    level = jnp.where(adaptive,
+                      jnp.argmax(ok, axis=-1).astype(jnp.int32), state.level)
 
     util = jnp.clip(load_demand / jnp.maximum(freqs[level], 1e-6), 0.0, 1.0)
     power = _chiplet_power(level, util, peak_dyn_mw, static_mw, volts, freqs)
 
-    if cfg.adaptive:
-        # --- cross-chiplet redistribution -----------------------------------
-        total = jnp.sum(power)
-        over = total > cfg.power_budget_mw
-        # Over budget: scale every chiplet's dynamic-power knob v²·f so the
-        # fleet lands on the budget, biased so idle chiplets give up levels
-        # first (idle_rank shrinks their target further). g-table is
-        # monotone in level, so the target picks a level directly — the
-        # ns-scale regulators (paper §II) make per-tick re-leveling realistic.
-        g = volts * volts * freqs                       # (n_levels,) ascending
-        static_total = jnp.sum(static_mw)
-        dyn_total = jnp.maximum(total - static_total, 1e-6)
-        scale_dyn = jnp.clip(
-            (cfg.power_budget_mw - static_total) / dyn_total, 0.05, 1.0)
-        idle_rank = 1.0 - jnp.clip(ema, 0.0, 1.0)
-        per_chip_scale = scale_dyn * (1.0 - 0.5 * idle_rank)
-        g_target = g[level] * per_chip_scale
-        ok_g = g[None, :] <= g_target[:, None]
-        level_budget = jnp.maximum(
-            jnp.sum(ok_g.astype(jnp.int32), axis=-1) - 1, 0)
-        # Boost: spend headroom on the busiest chiplets (paper's AI-optimized
-        # latency win). Budget fraction unused -> up to +1 level for loaded dies.
-        headroom = jnp.clip(1.0 - total / cfg.power_budget_mw, 0.0, 1.0)
-        up = jnp.where(
-            (~over) & (ema > 0.7) & (headroom > 0.08),
-            1,
-            0,
-        ).astype(jnp.int32)
-        level = jnp.where(over, jnp.minimum(level, level_budget), level + up)
-        level = jnp.clip(level, 0, cfg.n_levels - 1)
-        util = jnp.clip(load_demand / jnp.maximum(freqs[level], 1e-6), 0.0, 1.0)
-        power = _chiplet_power(level, util, peak_dyn_mw, static_mw, volts, freqs)
+    # --- cross-chiplet redistribution (adaptive controllers only) -----------
+    total = jnp.sum(power)
+    over = total > cfg.power_budget_mw
+    # Over budget: scale every chiplet's dynamic-power knob v²·f so the
+    # fleet lands on the budget, biased so idle chiplets give up levels
+    # first (idle_rank shrinks their target further). g-table is
+    # monotone in level, so the target picks a level directly — the
+    # ns-scale regulators (paper §II) make per-tick re-leveling realistic.
+    g = volts * volts * freqs                       # (n_levels,) ascending
+    static_total = jnp.sum(static_mw)
+    dyn_total = jnp.maximum(total - static_total, 1e-6)
+    scale_dyn = jnp.clip(
+        (cfg.power_budget_mw - static_total) / dyn_total, 0.05, 1.0)
+    idle_rank = 1.0 - jnp.clip(ema, 0.0, 1.0)
+    per_chip_scale = scale_dyn * (1.0 - 0.5 * idle_rank)
+    g_target = g[level] * per_chip_scale
+    ok_g = g[None, :] <= g_target[:, None]
+    level_budget = jnp.maximum(
+        jnp.sum(ok_g.astype(jnp.int32), axis=-1) - 1, 0)
+    # Boost: spend headroom on the busiest chiplets (paper's AI-optimized
+    # latency win). Budget fraction unused -> up to +1 level for loaded dies.
+    headroom = jnp.clip(1.0 - total / cfg.power_budget_mw, 0.0, 1.0)
+    up = jnp.where(
+        (~over) & (ema > 0.7) & (headroom > 0.08),
+        1,
+        0,
+    ).astype(jnp.int32)
+    redist = jnp.where(over, jnp.minimum(level, level_budget), level + up)
+    redist = jnp.clip(redist, 0, cfg.n_levels - 1)
+    level = jnp.where(adaptive, redist, level)
+    util = jnp.clip(load_demand / jnp.maximum(freqs[level], 1e-6), 0.0, 1.0)
+    power = _chiplet_power(level, util, peak_dyn_mw, static_mw, volts, freqs)
 
     new_state = DVFSState(
         level=level,

@@ -43,31 +43,33 @@ def attestation_latency_us(n_chiplets: int, cfg: SecurityConfig) -> jnp.ndarray:
 
     AuthenTree's tree topology gives O(log n) rounds vs O(n) for a centralized
     root-of-trust chain — the paper's scalability argument.
+
+    `cfg.enabled` may be a traced 0/1 array (vmapped sweeps) or a plain bool;
+    the cost is gated branchlessly.
     """
-    if not cfg.enabled:
-        return jnp.zeros((), jnp.float32)
     depth = max(1, math.ceil(math.log2(max(n_chiplets, 2))))
-    return jnp.asarray(depth * cfg.mpc_round_us, jnp.float32)
+    en = jnp.asarray(cfg.enabled, jnp.float32)
+    return en * jnp.asarray(depth * cfg.mpc_round_us, jnp.float32)
 
 
 def centralized_attestation_latency_us(
     n_chiplets: int, cfg: SecurityConfig
 ) -> jnp.ndarray:
     """The baseline the paper argues against: serial chain through one RoT."""
-    if not cfg.enabled:
-        return jnp.zeros((), jnp.float32)
-    return jnp.asarray(n_chiplets * cfg.mpc_round_us, jnp.float32)
+    en = jnp.asarray(cfg.enabled, jnp.float32)
+    return en * jnp.asarray(n_chiplets * cfg.mpc_round_us, jnp.float32)
 
 
 def aead_overhead(
     payload_bytes: jnp.ndarray, cfg: SecurityConfig
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """(time_us, energy_mj) for authenticated encryption of one transfer."""
-    if not cfg.enabled:
-        z = jnp.zeros_like(jnp.asarray(payload_bytes, jnp.float32))
-        return z, z
-    t = payload_bytes / 1024.0 * cfg.aead_us_per_kb
-    e = payload_bytes * cfg.aead_pj_per_byte * 1e-9
+    """(time_us, energy_mj) for authenticated encryption of one transfer.
+
+    Branchless in `cfg.enabled` so the whole cost model vmaps over designs."""
+    en = jnp.asarray(cfg.enabled, jnp.float32)
+    p = jnp.asarray(payload_bytes, jnp.float32)
+    t = en * p / 1024.0 * cfg.aead_us_per_kb
+    e = en * p * cfg.aead_pj_per_byte * 1e-9
     return t, e
 
 

@@ -20,7 +20,8 @@ machine; tests assert the two agree on steady-state throughput.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
+import functools
+from typing import Dict, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -132,58 +133,163 @@ class SimState:
         return cls(*children)
 
 
-def _init_state(soc: SoCConfig) -> SimState:
-    n = len(soc.chiplets)
-    z = jnp.zeros((), jnp.float32)
-    return SimState(
-        dvfs=dvfs_mod.init_state(n, soc.dvfs),
-        thermal=thermal_mod.init_state(soc.thermal),
-        link=ucie_mod.init_link(),
-        npu_queue_ms=jnp.zeros((n,), jnp.float32),
-        staged_images=z,
-        completed=z,
-        busy_ms=z,
-        energy_mj=z,
-        queue_integral=z,
+# ---------------------------------------------------------------------------
+# Vmappable parameter encoding
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SoCParams:
+    """The numeric leaves of one SoC design point.
+
+    Everything `simulate` reads from Python objects (ChipletSpec fields,
+    scenario scalars, I1–I4 feature flags) lifted into arrays, so the
+    time-stepped simulator becomes a pure function of (SoCParams, arrival
+    rate) and `jax.vmap` sweeps whole design spaces in one compiled program
+    (the Chiplet-Gym / Chiplet Actuary use case). Boolean mechanisms are
+    0/1 floats consumed branchlessly downstream.
+    """
+
+    peak_dyn_mw: jnp.ndarray        # (n_chiplets,)
+    static_mw: jnp.ndarray          # (n_chiplets,)
+    r_k_per_w: jnp.ndarray          # (n_chiplets,)
+    c_j_per_k: jnp.ndarray          # (n_chiplets,)
+    ucie_bandwidth_gbps: jnp.ndarray
+    ucie_latency_us: jnp.ndarray
+    ucie_streaming: jnp.ndarray     # 0/1
+    ucie_compression_ratio: jnp.ndarray
+    dvfs_budget_mw: jnp.ndarray
+    dvfs_adaptive: jnp.ndarray      # 0/1
+    thermal_predictive: jnp.ndarray  # 0/1
+    sec_enabled: jnp.ndarray        # 0/1
+    efficiency_factor: jnp.ndarray
+    protocol_overhead: jnp.ndarray
+    prefetch_overlap: jnp.ndarray   # 0/1
+
+    def tree_flatten(self):
+        return (
+            tuple(getattr(self, f.name) for f in dataclasses.fields(self)),
+            None,
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+
+def soc_params(soc: SoCConfig) -> SoCParams:
+    """Lift a SoCConfig's Python-side reads into the array encoding."""
+    f32 = lambda x: jnp.asarray(x, jnp.float32)  # noqa: E731
+    sc = soc.scenario
+    return SoCParams(
+        peak_dyn_mw=f32([c.peak_dyn_mw for c in soc.chiplets]),
+        static_mw=f32([c.static_mw for c in soc.chiplets]),
+        r_k_per_w=f32([c.r_k_per_w for c in soc.chiplets]),
+        c_j_per_k=f32([c.c_j_per_k for c in soc.chiplets]),
+        ucie_bandwidth_gbps=f32(soc.ucie.bandwidth_gbps),
+        ucie_latency_us=f32(soc.ucie.latency_us),
+        ucie_streaming=f32(soc.ucie.streaming),
+        ucie_compression_ratio=f32(soc.ucie.compression_ratio),
+        dvfs_budget_mw=f32(soc.dvfs.power_budget_mw),
+        dvfs_adaptive=f32(soc.dvfs.adaptive),
+        thermal_predictive=f32(soc.thermal.predictive),
+        sec_enabled=f32(soc.security.enabled),
+        efficiency_factor=f32(sc.efficiency_factor),
+        protocol_overhead=f32(sc.protocol_overhead),
+        prefetch_overlap=f32(sc.prefetch_overlap),
     )
 
 
-def simulate(
-    soc: SoCConfig,
-    workload: Workload,
+StaticConfigs = Tuple[ucie_mod.UCIeConfig, dvfs_mod.DVFSConfig,
+                      thermal_mod.ThermalConfig, SecurityConfig]
+
+
+def _static_residual(soc: SoCConfig) -> StaticConfigs:
+    """The sub-config fields `soc_params` does NOT lift (P-state tables,
+    link energy constants, thermal trip points, AEAD costs, ...), with the
+    lifted fields normalized out. Hashable — keys the sweep jit cache and
+    re-seeds `_configs_from_params` so custom configs are honored."""
+    return (
+        dataclasses.replace(soc.ucie, bandwidth_gbps=0.0, latency_us=0.0,
+                            streaming=False, compression_ratio=0.0),
+        dataclasses.replace(soc.dvfs, power_budget_mw=0.0, adaptive=False),
+        dataclasses.replace(soc.thermal, r_k_per_w=(), c_j_per_k=(),
+                            predictive=False),
+        dataclasses.replace(soc.security, enabled=False),
+    )
+
+
+def _configs_from_params(p: SoCParams, static: StaticConfigs):
+    """Reconstruct the I1–I4 config objects: (possibly traced) lifted leaves
+    over the static residual's remaining fields."""
+    ucie_s, dvfs_s, thermal_s, sec_s = static
+    ucie = dataclasses.replace(
+        ucie_s,
+        bandwidth_gbps=p.ucie_bandwidth_gbps,
+        latency_us=p.ucie_latency_us,
+        streaming=p.ucie_streaming > 0.5,
+        compression_ratio=p.ucie_compression_ratio,
+    )
+    dvfs = dataclasses.replace(
+        dvfs_s,
+        power_budget_mw=p.dvfs_budget_mw,
+        adaptive=p.dvfs_adaptive > 0.5,
+    )
+    thermal = dataclasses.replace(
+        thermal_s,
+        r_k_per_w=p.r_k_per_w,
+        c_j_per_k=p.c_j_per_k,
+        predictive=p.thermal_predictive > 0.5,
+    )
+    security = dataclasses.replace(sec_s, enabled=p.sec_enabled > 0.5)
+    return ucie, dvfs, thermal, security
+
+
+def _simulate_params(
+    p: SoCParams,
+    arrival_rate_ips: jnp.ndarray,
     *,
-    arrival_rate_ips: float,
-    duration_ms: float = 200.0,
+    workload: Workload,
+    npu_mask: Tuple[bool, ...],
+    static: StaticConfigs,
+    ticks: int,
+    tick_ms: float,
 ) -> Dict[str, jnp.ndarray]:
-    """Run the SoC against a steady request stream; return summary metrics."""
-    sc = soc.scenario
-    n = len(soc.chiplets)
-    npu_mask = jnp.asarray([c.kind == "npu" for c in soc.chiplets])
-    n_npu = int(npu_mask.sum())
-    peak_dyn = jnp.asarray([c.peak_dyn_mw for c in soc.chiplets], jnp.float32)
-    static = jnp.asarray([c.static_mw for c in soc.chiplets], jnp.float32)
+    """Pure-array core of `simulate` — safe under jit/vmap/grad.
+
+    One design point, one arrival rate; `simulate` wraps it for the
+    SoCConfig API and `simulate_batch` vmaps it over stacked SoCParams ×
+    arrival-rate grids. `npu_mask` and `static` (the non-lifted config
+    fields) are static — floorplan topology and e.g. P-state tables are
+    structural, not swept.
+    """
+    ucie_cfg, dvfs_cfg, thermal_cfg, sec_cfg = _configs_from_params(p, static)
+    n = p.peak_dyn_mw.shape[0]
+    n_npu = sum(npu_mask)
+    npu_mask = jnp.asarray(npu_mask)
+    duration_ms = ticks * tick_ms
 
     # Per-image NPU compute cost at nominal clock (same calibration as the
     # closed-form model; ALPHA folds ISA/runtime overheads into NPU-ms).
     img_ms = ALPHA * workload.base_compute_ms * workload.complexity_factor \
-        * sc.efficiency_factor
+        * p.efficiency_factor
     img_bytes = workload.input_size_mb * 1e6
-    ticks = int(round(duration_ms / soc.tick_ms))
-    arrivals_per_tick = arrival_rate_ips * soc.tick_ms / 1e3
+    arrivals_per_tick = arrival_rate_ips * tick_ms / 1e3
 
     def tick_fn(state: SimState, _):
         # --- I2/I3: activations cross the UCIe link (AEAD-sealed) ------------
         payload = arrivals_per_tick * img_bytes
         link, (drained, occupancy) = ucie_mod.link_tick(
-            state.link, payload, soc.ucie, soc.tick_ms
+            state.link, payload, ucie_cfg, tick_ms
         )
-        aead_t, aead_e = aead_overhead(payload, soc.security)
+        aead_t, aead_e = aead_overhead(payload, sec_cfg)
         # protocol overhead stretches effective service (Table I column)
         staged = state.staged_images + drained / jnp.maximum(
-            img_bytes * soc.ucie.compression_ratio
-            / ucie_mod.protocol_efficiency(jnp.asarray(1.0 if soc.ucie.streaming else 0.0)),
+            img_bytes * p.ucie_compression_ratio
+            / ucie_mod.protocol_efficiency(p.ucie_streaming),
             1.0,
-        ) / sc.protocol_overhead
+        ) / p.protocol_overhead
 
         # --- CPU dispatch: stage ready images onto the shorter NPU queue -----
         ready = staged - state.completed - (
@@ -204,16 +310,16 @@ def simulate(
             occupancy * (~npu_mask),
         )
         dvfs_state, (freq, power_mw, util) = dvfs_mod.step(
-            state.dvfs, demand, soc.dvfs, peak_dyn, static, soc.tick_ms
+            state.dvfs, demand, dvfs_cfg, p.peak_dyn_mw, p.static_mw, tick_ms
         )
 
         # --- I4: thermal integrate + predictive migration ---------------------
         thermal_state, (clock, npu_q) = thermal_mod.step(
-            state.thermal, power_mw, npu_mask, npu_q, soc.thermal, soc.tick_ms
+            state.thermal, power_mw, npu_mask, npu_q, thermal_cfg, tick_ms
         )
 
         # --- service ----------------------------------------------------------
-        service = jnp.where(npu_mask, soc.tick_ms * freq * clock, 0.0)
+        service = jnp.where(npu_mask, tick_ms * freq * clock, 0.0)
         done_ms = jnp.minimum(npu_q, service)
         npu_q = npu_q - done_ms
         completed = state.completed + jnp.sum(done_ms) / img_ms
@@ -221,7 +327,7 @@ def simulate(
 
         energy = (
             state.energy_mj
-            + jnp.sum(power_mw) * soc.tick_ms / 1e3
+            + jnp.sum(power_mw) * tick_ms / 1e3
             + aead_e
         )
         queue_integral = state.queue_integral + jnp.sum(npu_q) / img_ms
@@ -240,18 +346,32 @@ def simulate(
         obs = (jnp.max(thermal_state.temp_c), jnp.sum(power_mw))
         return new_state, obs
 
-    state0 = _init_state(soc)
+    state0 = SimState(
+        dvfs=dvfs_mod.init_state(n, dvfs_cfg),
+        thermal=thermal_mod.init_state(thermal_cfg),
+        link=ucie_mod.init_link(),
+        npu_queue_ms=jnp.zeros((n,), jnp.float32),
+        staged_images=jnp.zeros((), jnp.float32),
+        completed=jnp.zeros((), jnp.float32),
+        busy_ms=jnp.zeros((), jnp.float32),
+        energy_mj=jnp.zeros((), jnp.float32),
+        queue_integral=jnp.zeros((), jnp.float32),
+    )
     final, (temps, powers) = jax.lax.scan(tick_fn, state0, None, length=ticks)
 
     dur_s = duration_ms / 1e3
     throughput = final.completed / dur_s
     avg_queue = final.queue_integral / ticks
-    # Little's law + link/attestation offsets for end-to-end latency.
+    # Little's law + link/attestation offsets for end-to-end latency. A
+    # stalled design (zero throughput) reports inf, not 0 — sweeps must never
+    # rank it best.
     latency_ms = (
-        jnp.where(throughput > 0, avg_queue / (throughput / 1e3), 0.0)
+        jnp.where(throughput > 0,
+                  avg_queue * 1e3 / jnp.maximum(throughput, 1e-30),
+                  jnp.inf)
         + img_ms
-        + (0.0 if sc.prefetch_overlap else ucie_mod.transfer(
-            jnp.asarray(img_bytes, jnp.float32), soc.ucie)[0] / 1e3)
+        + jnp.where(p.prefetch_overlap > 0.5, 0.0, ucie_mod.transfer(
+            jnp.asarray(img_bytes, jnp.float32), ucie_cfg)[0] / 1e3)
     )
     return {
         "throughput_ips": throughput,
@@ -262,7 +382,92 @@ def simulate(
         "energy_mj_per_inf": final.energy_mj / jnp.maximum(final.completed, 1.0),
         "migrations": final.thermal.migrations,
         "throttle_ticks": final.thermal.throttle_ticks,
-        "attestation_us": attestation_latency_us(n, soc.security),
+        "attestation_us": attestation_latency_us(n, sec_cfg),
         "completed": final.completed,
         "npu_utilization": final.busy_ms / (n_npu * duration_ms),
     }
+
+
+def _npu_mask(soc: SoCConfig) -> Tuple[bool, ...]:
+    return tuple(c.kind == "npu" for c in soc.chiplets)
+
+
+def simulate(
+    soc: SoCConfig,
+    workload: Workload,
+    *,
+    arrival_rate_ips: float,
+    duration_ms: float = 200.0,
+) -> Dict[str, jnp.ndarray]:
+    """Run the SoC against a steady request stream; return summary metrics."""
+    ticks = int(round(duration_ms / soc.tick_ms))
+    return _simulate_params(
+        soc_params(soc),
+        jnp.asarray(arrival_rate_ips, jnp.float32),
+        workload=workload,
+        npu_mask=_npu_mask(soc),
+        static=_static_residual(soc),
+        ticks=ticks,
+        tick_ms=soc.tick_ms,
+    )
+
+
+def simulate_batch(
+    socs: Sequence[SoCConfig],
+    workload: Workload,
+    arrival_rates_ips,
+    *,
+    duration_ms: float = 200.0,
+) -> Dict[str, jnp.ndarray]:
+    """Sweep scenarios × arrival rates as ONE compiled program.
+
+    vmaps `_simulate_params` over stacked `SoCParams` (outer axis) and the
+    arrival-rate grid (inner axis): the full design-space evaluation — every
+    integration scenario at every load point — lowers to a single jitted
+    call instead of a Python loop of per-point `lax.scan` compilations.
+
+    Args:
+      socs: SoC design points; must share floorplan topology (chiplet kinds)
+        and tick size — parameters may differ arbitrarily.
+      workload: the (static) workload model applied at every grid point.
+      arrival_rates_ips: (R,) request rates to sweep.
+
+    Returns the `simulate` metrics dict with every leaf shaped
+    (len(socs), R). `latency_ms` is inf wherever a design stalls.
+    """
+    socs = list(socs)
+    assert socs, "simulate_batch needs at least one SoCConfig"
+    kinds = tuple(c.kind for c in socs[0].chiplets)
+    static = _static_residual(socs[0])
+    for s in socs[1:]:
+        assert tuple(c.kind for c in s.chiplets) == kinds, \
+            "simulate_batch requires a shared floorplan topology"
+        assert s.tick_ms == socs[0].tick_ms
+        assert _static_residual(s) == static, \
+            "simulate_batch sweeps only the lifted SoCParams fields; " \
+            "non-lifted config fields (P-state tables, trip points, link " \
+            "energy, AEAD costs) must match across designs"
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs),
+                           *[soc_params(s) for s in socs])
+    rates = jnp.asarray(arrival_rates_ips, jnp.float32).reshape(-1)
+    ticks = int(round(duration_ms / socs[0].tick_ms))
+    fn = _batch_fn(workload, _npu_mask(socs[0]), static, ticks,
+                   socs[0].tick_ms)
+    return fn(stacked, rates)
+
+
+@functools.lru_cache(maxsize=None)
+def _batch_fn(workload: Workload, npu_mask: Tuple[bool, ...],
+              static: StaticConfigs, ticks: int, tick_ms: float):
+    """Compile the scenario×rate sweep once per static configuration —
+    repeat `simulate_batch` calls (search loops, benches) hit the jit cache."""
+    core = functools.partial(
+        _simulate_params,
+        workload=workload,
+        npu_mask=npu_mask,
+        static=static,
+        ticks=ticks,
+        tick_ms=tick_ms,
+    )
+    return jax.jit(jax.vmap(jax.vmap(core, in_axes=(None, 0)),
+                            in_axes=(0, None)))

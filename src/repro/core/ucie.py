@@ -37,17 +37,16 @@ class UCIeConfig:
     pj_per_bit: float = 0.5           # link energy
 
     def as_vector(self) -> jnp.ndarray:
-        return jnp.array(
-            [
-                self.bandwidth_gbps,
-                self.latency_us,
-                1.0 if self.streaming else 0.0,
-                self.compression_ratio,
-                self.compression_us_per_kb,
-                self.pj_per_bit,
-            ],
-            jnp.float32,
-        )
+        # jnp.stack (not jnp.array) so fields may be traced scalars — the
+        # vmapped design sweeps hold per-candidate link parameters.
+        return jnp.stack([
+            jnp.asarray(self.bandwidth_gbps, jnp.float32),
+            jnp.asarray(self.latency_us, jnp.float32),
+            jnp.asarray(self.streaming, jnp.float32),
+            jnp.asarray(self.compression_ratio, jnp.float32),
+            jnp.asarray(self.compression_us_per_kb, jnp.float32),
+            jnp.asarray(self.pj_per_bit, jnp.float32),
+        ])
 
 
 def protocol_efficiency(streaming: jnp.ndarray) -> jnp.ndarray:

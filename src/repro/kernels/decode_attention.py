@@ -1,0 +1,139 @@
+"""Pallas TPU kernel: single-query (decode) attention against a KV cache.
+
+The decode hot loop issues one query per sequence against a (B, Smax, KV, D)
+cache where only the first `kv_len[b]` rows are valid. This kernel streams the
+cache through VMEM in (block_k × D) tiles with FlashAttention-style online
+softmax, so the cache is read once from HBM and never materialized, copied, or
+cast wholesale (the failure mode the pure-jnp path risks on long contexts).
+
+GQA is native: the query tile is the (G, D) group of query heads that shares
+one KV head, so both matmuls per tile are (G×D)·(D×block_k) and
+(G×block_k)·(block_k×D) — MXU work proportional to real heads only.
+
+Grid: (B, KV, n_k) — batch and kv-head are embarrassingly parallel; the
+k-block sweep is innermost ('arbitrary') so the m/l/acc running statistics
+live in VMEM scratch across it. `kv_len` rides scalar prefetch (SMEM), which
+lets `pl.when` skip tiles that lie entirely beyond the valid prefix (or, with
+a sliding window, before it): a 4k-deep cache at kv_len=300 runs 3 tiles, not
+32.
+
+`interpret=True` runs the same kernel on CPU — the tests' numerics oracle is
+`models.attention`'s reference path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.pltpu_compat import NEG_INF, CompilerParams
+
+
+def _kernel(kvlen_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, window: int, block_k: int, n_k: int):
+    b = pl.program_id(0)
+    ik = pl.program_id(2)
+    kvlen = kvlen_ref[b]
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # tile liveness: any k position in [ik·bk, ik·bk+bk) ∩ valid range?
+    live = ik * block_k < kvlen
+    if window > 0:
+        live = jnp.logical_and(live,
+                               ik * block_k + block_k - 1 >= kvlen - window)
+
+    @pl.when(live)
+    def _tile():
+        q = q_ref[0, 0].astype(jnp.float32)             # (G, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)       # (block_k, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (G, block_k)
+        k_pos = ik * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        ok = k_pos < kvlen
+        if window > 0:
+            ok = jnp.logical_and(ok, k_pos >= kvlen - window)
+        s = jnp.where(ok, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        m_ref[...] = m_new
+        v = v_ref[0, :, 0, :].astype(jnp.float32)       # (block_k, D)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+
+    @pl.when(ik == n_k - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "window", "scale", "block_k", "interpret"))
+def decode_attention(q, k_cache, v_cache, kv_len, *, window: int = 0,
+                     scale=None, block_k: int = 128,
+                     interpret: bool = False):
+    """Single-position attention against a ragged-valid KV cache.
+
+    Args:
+      q:        (B, 1, KV, G, D) — one query position, grouped query heads.
+      k_cache:  (B, Smax, KV, D) storage-dtype cache (never upcast wholesale).
+      v_cache:  (B, Smax, KV, D).
+      kv_len:   () or (B,) int — number of valid cache rows per sequence
+                (this step's k/v must already be written).
+      window:   sliding-window size (0 = full attention over the valid prefix).
+      scale:    logit scale; defaults to D**-0.5.
+
+    Returns (B, 1, KV, G, D) in q.dtype, fp32 accumulation throughout.
+    """
+    b, sq, nkv, g, d = q.shape
+    assert sq == 1, f"decode kernel takes one query position, got {sq}"
+    smax = k_cache.shape[1]
+    scale = float(scale if scale is not None else d ** -0.5)
+    block_k = min(block_k, smax)
+    assert smax % block_k == 0, (smax, block_k)
+    n_k = smax // block_k
+    kv_len = jnp.broadcast_to(
+        jnp.asarray(kv_len, jnp.int32).reshape(-1), (b,))
+    qf = q.reshape(b, nkv, g, d)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, nkv, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda ib, ih, ik, *_: (ib, ih, 0, 0)),
+            pl.BlockSpec((1, block_k, 1, d),
+                         lambda ib, ih, ik, *_: (ib, ik, ih, 0)),
+            pl.BlockSpec((1, block_k, 1, d),
+                         lambda ib, ih, ik, *_: (ib, ik, ih, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda ib, ih, ik, *_: (ib, ih, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),   # m
+            pltpu.VMEM((g, 1), jnp.float32),   # l
+            pltpu.VMEM((g, d), jnp.float32),   # acc
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, window=window,
+                          block_k=block_k, n_k=n_k),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, nkv, g, d), q.dtype),
+        interpret=interpret,
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(kv_len, qf, k_cache, v_cache)
+    return out.reshape(b, 1, nkv, g, d)

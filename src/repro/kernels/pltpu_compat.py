@@ -1,0 +1,14 @@
+"""Shared Pallas-TPU version shims + kernel constants.
+
+jax renamed `pltpu.TPUCompilerParams` → `pltpu.CompilerParams`; every kernel
+imports the alias from here so a future rename is a one-line fix.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams
+
+NEG_INF = -1e30

@@ -87,6 +87,8 @@ class CellAnalysis:
 
 def analyze_compiled(compiled) -> CellAnalysis:
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # older jax: one dict per device
+        ca = ca[0] if ca else {}
     ma = compiled.memory_analysis()
     txt = compiled.as_text()
     coll = collective_bytes(txt)

@@ -8,20 +8,27 @@ XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax import.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5: explicit axis types on make_mesh
+    from jax.sharding import AxisType
+
+    def _mk(shape, axes):
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+except ImportError:  # older jax: every axis is Auto already
+    def _mk(shape, axes):
+        return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _mk(shape, axes)
 
 
 def make_mesh(shape, axes) -> jax.sharding.Mesh:
     """Arbitrary mesh (tests / small-host runs / elastic re-shard)."""
-    return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _mk(tuple(shape), tuple(axes))
 
 
 def make_host_mesh(model: int = 1) -> jax.sharding.Mesh:

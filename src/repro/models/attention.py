@@ -124,17 +124,42 @@ def chunked_attention(q, k, v, *, causal=True, window=0, scale=None,
     return jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
 
 
-def decode_attention(q, k_cache, v_cache, cur_len, *, window=0, scale=None):
+def _pallas_decode_ok(q, k_cache) -> bool:
+    """The Pallas decode kernel needs a TPU backend and a cache depth that
+    tiles evenly; everything else falls back to the pure-jnp path."""
+    if jax.default_backend() != "tpu":
+        return False
+    smax = k_cache.shape[1]
+    return smax % min(128, smax) == 0 and smax >= 128
+
+
+def decode_attention(q, k_cache, v_cache, cur_len, *, window=0, scale=None,
+                     impl: str = "auto"):
     """Single-position attention against a cache.
 
     q: (B,1,KV,G,D); caches: (B,Smax,KV,D); cur_len: () or (B,) int — number of
     valid cache positions (the new token's k/v must already be written).
+
+    impl: 'auto' dispatches to the Pallas decode kernel
+    (kernels/decode_attention) on TPU — the engine's decode step streams the
+    cache through VMEM tiles instead of materializing masked scores over the
+    whole Smax. 'pallas' forces the kernel (interpret mode off-TPU, used by
+    the numerics tests); 'reference' forces the jnp path below.
 
     The caches stay in their storage dtype: fp32 accumulation happens inside
     the einsums (preferred_element_type), never as a materialized cast — a
     whole-cache fp32 copy would double the decode footprint (measured +15 GiB
     on gemma-7b × decode_32k; EXPERIMENTS.md §Perf).
     """
+    if impl == "auto" and _pallas_decode_ok(q, k_cache):
+        impl = "pallas"
+    if impl == "pallas":
+        from repro.kernels.decode_attention import (
+            decode_attention as pallas_decode)
+        return pallas_decode(
+            q, k_cache, v_cache, cur_len, window=window,
+            scale=None if scale is None else float(scale),
+            interpret=jax.default_backend() != "tpu")
     b, _, nkv, g, d = q.shape
     smax = k_cache.shape[1]
     scale = scale if scale is not None else d ** -0.5
@@ -146,6 +171,9 @@ def decode_attention(q, k_cache, v_cache, cur_len, *, window=0, scale=None):
         valid &= pos[None, :] >= (jnp.reshape(cur_len, (-1, 1)) - window)
     s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
+    # kv_len == 0 means "no valid keys": emit zeros (matching the Pallas
+    # kernel) instead of softmax's uniform mean over masked positions
+    p = p * (jnp.reshape(cur_len, (-1, 1, 1, 1, 1)) > 0)
     o = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v_cache.dtype), v_cache,
                    preferred_element_type=jnp.float32)
     return o.astype(q.dtype)

@@ -184,6 +184,15 @@ def train_loss(params, batch, cfg, opts: ExecOptions):
     return loss, {"loss": loss}
 
 
+def prefill_cache(params, batch, cfg, opts: ExecOptions):
+    """Cache-only prefill (no LM-head) for the serve engine's replay path."""
+    enc_out = encode(params, batch["frames"], cfg, opts)
+    _, cache = decode_stack(params, batch["tokens"], cfg, opts, enc_out,
+                            mode="prefill")
+    b, s = batch["tokens"].shape
+    return dict(cache, pos=jnp.full((b,), s, jnp.int32))
+
+
 def prefill(params, batch, cfg, opts: ExecOptions):
     enc_out = encode(params, batch["frames"], cfg, opts)
     hidden, cache = decode_stack(params, batch["tokens"], cfg, opts, enc_out,

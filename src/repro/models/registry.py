@@ -31,6 +31,9 @@ class ModelApi:
     prefill: Callable      # (params, batch) -> (logits, cache)
     decode: Callable       # (params, batch, cache) -> (logits, cache)
     cache_shape: Callable  # (batch, max_len, dtype) -> abstract cache pytree
+    # Cache-only prefill (no LM-head) — serve-engine replay admissions
+    # discard prefill logits; None for families without one.
+    prefill_cache: Optional[Callable] = None
 
     def init(self, key: jax.Array, dtype=None):
         return init_params(self.schema, key, dtype or _dt(self.cfg))
@@ -55,6 +58,8 @@ def build_model(cfg: ArchConfig, opts: Optional[ExecOptions] = None) -> ModelApi
             prefill=functools.partial(mod.prefill, cfg=cfg, opts=opts),
             decode=functools.partial(mod.decode_step, cfg=cfg, opts=opts),
             cache_shape=functools.partial(mod.cache_shape, cfg),
+            prefill_cache=functools.partial(mod.prefill_cache, cfg=cfg,
+                                            opts=opts),
         )
     if fam == "ssm":
         sch = ssm.schema(cfg)
@@ -114,6 +119,8 @@ def build_model(cfg: ArchConfig, opts: Optional[ExecOptions] = None) -> ModelApi
             prefill=functools.partial(encdec.prefill, cfg=cfg, opts=opts),
             decode=functools.partial(encdec.decode_step, cfg=cfg, opts=opts),
             cache_shape=functools.partial(encdec.cache_shape, cfg),
+            prefill_cache=functools.partial(encdec.prefill_cache, cfg=cfg,
+                                            opts=opts),
         )
     raise ValueError(f"unknown family {fam!r}")
 

@@ -322,6 +322,20 @@ def train_loss(params, batch, cfg, opts: ExecOptions):
     return loss, {"loss": loss}
 
 
+def prefill_cache(params, batch, cfg, opts: ExecOptions):
+    """Cache-only prefill: skips the LM-head projection.
+
+    The serve engine's replay admission discards prefill logits (the first
+    output token comes from replaying the last prompt token through the
+    decode step), so this variant avoids a d_model×vocab matmul per admitted
+    request on the serving hot path."""
+    _, kv = forward_hidden(params, batch["tokens"], cfg, opts,
+                           patch_embeds=batch.get("patch_embeds"),
+                           mode="prefill")
+    b, s = batch["tokens"].shape
+    return {"k": kv["k"], "v": kv["v"], "pos": jnp.full((b,), s, jnp.int32)}
+
+
 def prefill(params, batch, cfg, opts: ExecOptions):
     """Returns (last-position logits, cache dict)."""
     hidden, kv = forward_hidden(params, batch["tokens"], cfg, opts,

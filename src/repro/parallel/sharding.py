@@ -86,7 +86,11 @@ def _axes_in_mesh(axis: Axis, mesh: Mesh) -> Optional[Axis]:
     if isinstance(axis, str):
         return axis if axis in mesh.shape else None
     present = tuple(a for a in axis if a in mesh.shape)
-    return present if present else None
+    if not present:
+        return None
+    # single-axis tuples normalize to the bare name: P(("data",),) and
+    # P("data") are semantically equal but compare unequal on older jax
+    return present[0] if len(present) == 1 else present
 
 
 def _axis_size(axis: Axis, mesh: Mesh) -> int:
@@ -238,7 +242,7 @@ def cache_pspecs(cfg, cache_abstract, mesh: Mesh, rules=None) -> Any:
         bax = resolve_dim("batchlike", shp[0], mesh, rules) if sds.ndim else None
         return P(bax, *([None] * (sds.ndim - 1)))
 
-    return jax.tree.map_with_path(one, cache_abstract)
+    return jax.tree_util.tree_map_with_path(one, cache_abstract)
 
 
 def logits_pspec(mesh: Mesh, batch: int, vocab: int, rules=None) -> P:

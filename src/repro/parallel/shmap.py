@@ -1,0 +1,24 @@
+"""shard_map across jax versions: `jax.shard_map(..., check_vma=)` on new
+jax, `jax.experimental.shard_map.shard_map(..., check_rep=)` on older."""
+
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_vma)
+
+
+def axis_size(axis_name) -> int:
+    """Static mapped-axis size inside shard_map, across jax versions."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.core.axis_frame(axis_name)

@@ -9,6 +9,22 @@ The "AI-optimized" configuration of the paper, as a serving runtime:
   * the faithful chiplet perf model (core/) prices batching decisions the way
     the paper's CPU chiplet dispatches to its two NPUs (see benches).
 
+Fast-path design (PR 1):
+  * power-of-two prompt bucketing — prefill compiles once per bucket, not once
+    per distinct prompt length, so compile count is O(log max_len) in steady
+    state. Padded prefills are made exact by *replaying* the last prompt token
+    through the decode step (causal attention leaves rows [0, plen) untouched
+    by trailing pads; the replay recomputes position plen-1 and yields the
+    first output token from the shared decode path). Recurrent families
+    (ssm/hybrid) carry their state through padding, so they keep exact-length
+    prefill.
+  * the KV cache is donated through the decode jit (in-place update instead of
+    a full-cache copy per step) and through the jitted slot-paste program.
+  * slot pastes run as ONE jitted scatter program per family instead of a
+    Python chain of `.at[].set()` dispatches.
+  * `pos` is fetched from device once per step (one host sync), not once per
+    active slot.
+
 Pure-python orchestration over jitted model fns; runs on CPU for tests and
 examples, mesh-parameterized for pods.
 """
@@ -22,6 +38,16 @@ from typing import Dict, List, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+_ATTN_FAMILIES = ("dense", "moe", "vlm", "encdec")
+
+
+def bucket_length(plen: int, max_len: int) -> int:
+    """Next power of two ≥ plen, clipped to max_len."""
+    b = 1
+    while b < plen:
+        b <<= 1
+    return min(b, max_len)
 
 
 @dataclasses.dataclass
@@ -42,6 +68,9 @@ class EngineStats:
     decode_steps: int = 0
     tokens_out: int = 0
     occupancy_sum: float = 0.0
+    prefill_compiles: int = 0   # actual jit traces (bucketing keeps this flat)
+    decode_compiles: int = 0
+    paste_compiles: int = 0
 
     def summary(self) -> Dict[str, float]:
         d = dataclasses.asdict(self)
@@ -50,58 +79,19 @@ class EngineStats:
         return d
 
 
-class ServeEngine:
-    def __init__(self, model, *, n_slots: int = 4, max_len: int = 128,
-                 params=None):
-        self.model = model
-        self.cfg = model.cfg
-        self.n_slots = n_slots
-        self.max_len = max_len
-        self.params = params
-        self.stats = EngineStats()
-        self._queue: List[Request] = []
-        self._slots: List[Optional[Request]] = [None] * n_slots
-        self._next_rid = 0
-        self._prefill_jit = jax.jit(model.prefill)
-        self._decode_jit = jax.jit(model.decode)
-        self._next_tok = np.zeros((n_slots, 1), np.int32)
-        abs_cache = model.cache_shape(n_slots, max_len, jnp.float32)
-        self._cache = jax.tree.map(
-            lambda s: jnp.zeros(s.shape, s.dtype), abs_cache)
+def _make_paste(fam: str):
+    """One jitted scatter program per family: copy request-0's prefill cache
+    into engine-cache slot `slot` and stamp the slot's stream position `pos`.
 
-    # ------------------------------------------------------------- lifecycle
-    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16) -> Request:
-        self._next_rid += 1
-        req = Request(rid=self._next_rid, prompt=np.asarray(prompt, np.int32),
-                      max_new_tokens=max_new_tokens, t_enqueue=time.time())
-        self._queue.append(req)
-        return req
+    Row counts come from the prefill cache's static shapes, so the program
+    retraces once per prefill bucket, not per request. The engine cache is
+    donated — the paste updates in place instead of copying every tensor.
+    """
 
-    def _admit(self):
-        """Prefill queued requests into free slots."""
-        for slot in [i for i, r in enumerate(self._slots) if r is None]:
-            if not self._queue:
-                return
-            r = self._queue.pop(0)
-            toks = r.prompt[None, :]
-            logits, pf_cache = self._prefill_jit(self.params,
-                                                 {"tokens": toks})
-            self.stats.prefills += 1
-            first = int(np.argmax(np.asarray(
-                logits[0, -1, :self.cfg.vocab_size])))
-            self._paste_slot(slot, pf_cache, plen=toks.shape[1])
-            r.out_tokens.append(first)
-            r.t_first_token = time.time()
-            self._next_tok[slot, 0] = first
-            self._slots[slot] = r
-            self.stats.tokens_out += 1
-
-    # ------------------------------------------------------------ cache mgmt
-    def _paste_slot(self, slot: int, pf, plen: int):
-        """Copy request-0's prefill cache into engine cache slot (by family)."""
-        c = dict(self._cache) if isinstance(self._cache, dict) else self._cache
-        fam = self.cfg.family
-        if fam in ("dense", "moe", "vlm", "encdec"):
+    def paste(cache, pf, slot, pos):
+        c = dict(cache)
+        if fam in _ATTN_FAMILIES:
+            plen = pf["k"].shape[2]
             for key in ("k", "v"):
                 c[key] = c[key].at[:, slot, :plen].set(
                     pf[key][:, 0, :plen].astype(c[key].dtype))
@@ -122,8 +112,108 @@ class ServeEngine:
                     k: dst[k].at[slot].set(src[k][0].astype(dst[k].dtype))
                     for k in dst})
             c["layers"] = new_layers
-        c["pos"] = c["pos"].at[slot].set(pf["pos"][0])
-        self._cache = c
+        else:
+            raise ValueError(f"unknown family {fam!r}")
+        c["pos"] = c["pos"].at[slot].set(pos)
+        return c
+
+    return paste
+
+
+class ServeEngine:
+    def __init__(self, model, *, n_slots: int = 4, max_len: int = 128,
+                 params=None, bucket_prompts: bool = True):
+        self.model = model
+        self.cfg = model.cfg
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.params = params
+        self.stats = EngineStats()
+        self._queue: List[Request] = []
+        self._slots: List[Optional[Request]] = [None] * n_slots
+        self._fresh: List[bool] = [False] * n_slots  # replaying last prompt tok
+        self._next_rid = 0
+        # Padded prefill + replay is only exact when trailing pads cannot
+        # reach earlier positions — true for causal-attention KV caches, false
+        # for recurrent state (ssm/hybrid), which keeps exact-length prefill.
+        self._replay = self.cfg.family in _ATTN_FAMILIES
+        self.bucket_prompts = bucket_prompts and self._replay
+        # donation is unimplemented on CPU (harmless but warns per compile)
+        donate = {} if jax.default_backend() == "cpu" else \
+            {"donate_argnums": (2,)}
+        paste_donate = {} if jax.default_backend() == "cpu" else \
+            {"donate_argnums": (0,)}
+
+        # Replay admissions discard prefill logits — use the cache-only
+        # prefill (no LM-head matmul) when the family provides one.
+        cache_only = self._replay and model.prefill_cache is not None
+
+        def _prefill(params, batch):
+            self.stats.prefill_compiles += 1   # runs at trace time only
+            if cache_only:
+                return None, model.prefill_cache(params, batch)
+            return model.prefill(params, batch)
+
+        def _decode(params, batch, cache):
+            self.stats.decode_compiles += 1
+            return model.decode(params, batch, cache)
+
+        def _paste(cache, pf, slot, pos):
+            self.stats.paste_compiles += 1
+            return _make_paste(self.cfg.family)(cache, pf, slot, pos)
+
+        self._prefill_jit = jax.jit(_prefill)
+        self._decode_jit = jax.jit(_decode, **donate)
+        self._paste_jit = jax.jit(_paste, **paste_donate)
+        self._next_tok = np.zeros((n_slots, 1), np.int32)
+        abs_cache = model.cache_shape(n_slots, max_len, jnp.float32)
+        self._cache = jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype), abs_cache)
+
+    # ------------------------------------------------------------- lifecycle
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16) -> Request:
+        prompt = np.asarray(prompt, np.int32)
+        assert 1 <= prompt.shape[0] <= self.max_len, prompt.shape
+        self._next_rid += 1
+        req = Request(rid=self._next_rid, prompt=prompt,
+                      max_new_tokens=max_new_tokens, t_enqueue=time.time())
+        self._queue.append(req)
+        return req
+
+    def _admit(self):
+        """Prefill queued requests into free slots."""
+        for slot in [i for i, r in enumerate(self._slots) if r is None]:
+            if not self._queue:
+                return
+            r = self._queue.pop(0)
+            plen = r.prompt.shape[0]
+            blen = bucket_length(plen, self.max_len) if self.bucket_prompts \
+                else plen
+            toks = np.zeros((1, blen), np.int32)
+            toks[0, :plen] = r.prompt
+            logits, pf_cache = self._prefill_jit(self.params,
+                                                 {"tokens": jnp.asarray(toks)})
+            self.stats.prefills += 1
+            if self._replay:
+                # Cache rows [0, plen) are exact under trailing padding; the
+                # next decode step replays prompt[-1] at position plen-1,
+                # producing the first output token through the decode path
+                # (pad rows ≥ plen are masked by kv_len until overwritten).
+                self._cache = self._paste_jit(
+                    self._cache, pf_cache, jnp.int32(slot),
+                    jnp.int32(plen - 1))
+                self._next_tok[slot, 0] = int(r.prompt[-1])
+            else:
+                first = int(np.argmax(np.asarray(
+                    logits[0, -1, :self.cfg.vocab_size])))
+                self._cache = self._paste_jit(
+                    self._cache, pf_cache, jnp.int32(slot), jnp.int32(plen))
+                r.out_tokens.append(first)
+                r.t_first_token = time.time()
+                self._next_tok[slot, 0] = first
+                self.stats.tokens_out += 1
+            self._fresh[slot] = self._replay
+            self._slots[slot] = r
 
     # ----------------------------------------------------------------- decode
     def step(self) -> bool:
@@ -138,13 +228,17 @@ class ServeEngine:
         self.stats.occupancy_sum += len(active) / self.n_slots
         nxt = np.asarray(jnp.argmax(
             logits[:, -1, :self.cfg.vocab_size], axis=-1), np.int32)
+        pos = np.asarray(self._cache["pos"])   # ONE host sync per step
         for slot in active:
             r = self._slots[slot]
             r.out_tokens.append(int(nxt[slot]))
             self._next_tok[slot, 0] = nxt[slot]
             self.stats.tokens_out += 1
+            if self._fresh[slot]:
+                r.t_first_token = time.time()
+                self._fresh[slot] = False
             if len(r.out_tokens) >= r.max_new_tokens \
-                    or int(self._cache["pos"][slot]) >= self.max_len - 1:
+                    or int(pos[slot]) >= self.max_len - 1:
                 r.done = True
                 r.t_done = time.time()
                 self._slots[slot] = None
@@ -161,8 +255,13 @@ class ServeEngine:
 
 def generate_greedy(model, params, prompt: np.ndarray, n_tokens: int,
                     max_len: int = 128) -> List[int]:
-    """Single-request reference path (the oracle for engine equivalence)."""
-    eng = ServeEngine(model, n_slots=1, max_len=max_len, params=params)
+    """Single-request reference path (the oracle for engine equivalence).
+
+    Runs with bucketing OFF — exact-length prefill — so equivalence tests
+    against a bucketed engine actually exercise the padded-prefill + replay
+    path instead of comparing it to itself."""
+    eng = ServeEngine(model, n_slots=1, max_len=max_len, params=params,
+                      bucket_prompts=False)
     req = eng.submit(prompt, max_new_tokens=n_tokens)
     eng.run_to_completion()
     return req.out_tokens

@@ -1,0 +1,86 @@
+"""Pallas decode-attention kernel vs the pure-jnp reference (interpret mode):
+GQA grouping, ragged per-sequence kv_len, sliding windows, storage dtypes."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.decode_attention import decode_attention as pallas_decode
+from repro.models.attention import decode_attention
+
+
+def _inputs(seed, b, kv, g, d, smax, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.key(seed), 4)
+    q = jax.random.normal(ks[0], (b, 1, kv, g, d), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (b, smax, kv, d), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (b, smax, kv, d), jnp.float32).astype(dtype)
+    kv_len = jax.random.randint(ks[3], (b,), 1, smax + 1)
+    return q, k, v, kv_len
+
+
+@pytest.mark.parametrize("b,kv,g,d,smax", [
+    (2, 2, 4, 64, 256),     # GQA, multi-block sweep
+    (3, 1, 1, 64, 128),     # MQA single head, one block
+    (1, 4, 2, 32, 512),     # many kv heads, deep cache
+])
+def test_matches_reference(b, kv, g, d, smax):
+    q, k, v, kv_len = _inputs(b * smax + d, b, kv, g, d, smax)
+    want = decode_attention(q, k, v, kv_len, impl="reference")
+    got = pallas_decode(q, k, v, kv_len, interpret=True)
+    assert jnp.max(jnp.abs(want - got)) < 2e-5
+
+
+@pytest.mark.parametrize("window", [32, 128])
+def test_sliding_window(window):
+    q, k, v, kv_len = _inputs(7, 2, 2, 2, 64, 256)
+    want = decode_attention(q, k, v, kv_len, window=window, impl="reference")
+    got = pallas_decode(q, k, v, kv_len, window=window, interpret=True)
+    assert jnp.max(jnp.abs(want - got)) < 2e-5
+
+
+def test_scalar_kv_len_broadcasts():
+    q, k, v, _ = _inputs(3, 2, 2, 2, 64, 256)
+    want = decode_attention(q, k, v, jnp.int32(100), impl="reference")
+    got = pallas_decode(q, k, v, jnp.int32(100), interpret=True)
+    assert jnp.max(jnp.abs(want - got)) < 2e-5
+
+
+def test_bf16_cache_stays_in_storage_dtype():
+    q, k, v, kv_len = _inputs(11, 2, 2, 4, 64, 256, dtype=jnp.bfloat16)
+    want = decode_attention(q, k, v, kv_len, impl="reference")
+    got = pallas_decode(q, k, v, kv_len, interpret=True)
+    assert got.dtype == jnp.bfloat16
+    assert jnp.max(jnp.abs(want.astype(jnp.float32)
+                           - got.astype(jnp.float32))) < 2e-2
+
+
+def test_partial_tail_block_masked():
+    """kv_len one past / one short of a block edge must flip exactly the
+    edge position's contribution."""
+    q, k, v, _ = _inputs(5, 1, 1, 1, 32, 256)
+    for kv_len in (127, 128, 129):
+        want = decode_attention(q, k, v, jnp.asarray([kv_len]),
+                                impl="reference")
+        got = pallas_decode(q, k, v, jnp.asarray([kv_len]), interpret=True)
+        assert jnp.max(jnp.abs(want - got)) < 2e-5, kv_len
+
+
+def test_empty_sequence_yields_zeros():
+    """kv_len == 0 ("no valid keys") must produce zeros from BOTH impls —
+    not softmax's uniform mean over masked positions."""
+    q, k, v, _ = _inputs(9, 2, 1, 2, 32, 128)
+    kv_len = jnp.asarray([0, 64], jnp.int32)
+    ref = decode_attention(q, k, v, kv_len, impl="reference")
+    pal = pallas_decode(q, k, v, kv_len, interpret=True)
+    assert jnp.all(ref[0] == 0.0) and jnp.all(pal[0] == 0.0)
+    assert jnp.max(jnp.abs(ref[1] - pal[1])) < 2e-5
+
+
+def test_dispatch_stays_reference_off_tpu():
+    """On CPU/GPU the model-level entry point keeps the jnp path (the kernel
+    is opt-in via impl='pallas' with interpret)."""
+    assert jax.default_backend() != "tpu" or True
+    q, k, v, kv_len = _inputs(1, 1, 2, 2, 64, 128)
+    a = decode_attention(q, k, v, kv_len)            # impl='auto'
+    b = decode_attention(q, k, v, kv_len, impl="reference")
+    assert jnp.array_equal(a, b) or jax.default_backend() == "tpu"

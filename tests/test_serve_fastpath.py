@@ -1,0 +1,99 @@
+"""Serving fast path: prompt bucketing keeps prefill compiles O(log max_len)
+while staying token-exact with the single-request oracle at lengths that
+straddle bucket boundaries — across cache (dense) and state (ssm/hybrid)
+model families."""
+
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import ExecOptions, build_model
+from repro.serve.engine import ServeEngine, bucket_length, generate_greedy
+
+
+@pytest.fixture(scope="module")
+def smol():
+    cfg = get_config("smollm-360m").smoke()
+    model = build_model(cfg, ExecOptions(attn_impl="reference", ce_chunk=32))
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _prompt(seed, n, vocab=512):
+    return np.asarray(
+        jax.random.randint(jax.random.key(seed), (n,), 0, vocab), np.int32)
+
+
+def test_bucket_length():
+    assert [bucket_length(n, 64) for n in (1, 2, 3, 8, 9, 33, 64)] \
+        == [1, 2, 4, 8, 16, 64, 64]
+    assert bucket_length(100, 64) == 64   # clipped at max_len
+
+
+def test_prefill_compiles_log_in_max_len(smol):
+    """N requests of distinct prompt lengths must trigger at most
+    ceil(log2(max_len)) prefill traces (one per power-of-two bucket)."""
+    cfg, model, params = smol
+    max_len = 64
+    eng = ServeEngine(model, n_slots=2, max_len=max_len, params=params)
+    lengths = list(range(3, 21))          # 18 distinct lengths
+    for i, n in enumerate(lengths):
+        eng.submit(_prompt(i, n), max_new_tokens=2)
+    eng.run_to_completion()
+    budget = math.ceil(math.log2(max_len))
+    assert eng.stats.prefill_compiles <= budget, eng.stats.summary()
+    assert eng.stats.prefills == len(lengths)
+    # the seed path retraces per length
+    eng0 = ServeEngine(model, n_slots=2, max_len=max_len, params=params,
+                       bucket_prompts=False)
+    for i, n in enumerate(lengths):
+        eng0.submit(_prompt(i, n), max_new_tokens=2)
+    eng0.run_to_completion()
+    assert eng0.stats.prefill_compiles == len(lengths)
+
+
+def test_decode_compiles_once(smol):
+    cfg, model, params = smol
+    eng = ServeEngine(model, n_slots=2, max_len=64, params=params)
+    for i, n in enumerate((5, 9, 13, 17)):
+        eng.submit(_prompt(i, n), max_new_tokens=4)
+    eng.run_to_completion()
+    assert eng.stats.decode_compiles == 1
+
+
+def test_bucketed_engine_matches_oracle_at_boundaries(smol):
+    """Padded prefill + last-token replay must be token-exact at prompt
+    lengths straddling power-of-two bucket boundaries."""
+    cfg, model, params = smol
+    lengths = (7, 8, 9, 15, 16, 17)
+    solo = {n: generate_greedy(model, params, _prompt(n, n), n_tokens=4,
+                               max_len=64)
+            for n in lengths}
+    eng = ServeEngine(model, n_slots=2, max_len=64, params=params)
+    reqs = {n: eng.submit(_prompt(n, n), max_new_tokens=4) for n in lengths}
+    eng.run_to_completion()
+    for n in lengths:
+        assert reqs[n].done
+        assert reqs[n].out_tokens == solo[n], (n, reqs[n].out_tokens, solo[n])
+
+
+@pytest.mark.parametrize("arch", ["mamba2-780m", "recurrentgemma-2b"])
+def test_state_families_stay_exact(arch):
+    """Recurrent families skip bucketing (state carries through pads) but
+    share the jitted-paste/one-sync step machinery; tokens must still match
+    the isolated oracle."""
+    cfg = get_config(arch).smoke()
+    model = build_model(cfg, ExecOptions(attn_impl="reference", ce_chunk=32))
+    params = model.init(jax.random.key(0))
+    eng = ServeEngine(model, n_slots=2, max_len=64, params=params)
+    assert not eng.bucket_prompts
+    solo = {n: generate_greedy(model, params, _prompt(n, n), n_tokens=3,
+                               max_len=64)
+            for n in (7, 12)}
+    reqs = {n: eng.submit(_prompt(n, n), max_new_tokens=3) for n in (7, 12)}
+    eng.run_to_completion()
+    for n, r in reqs.items():
+        assert r.out_tokens == solo[n], (n, r.out_tokens, solo[n])

@@ -1,0 +1,71 @@
+"""Vmapped time-stepped sweeps: `simulate_batch` must agree with per-scenario
+`simulate`, run as one compiled program, and never rank a stalled design
+best (inf latency at zero throughput)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import build_soc, simulate, simulate_batch
+from repro.core.scenarios import SCENARIO_ORDER, SCENARIOS
+from repro.core.soc import _batch_fn, soc_params
+from repro.core.workloads import WORKLOADS
+
+MNV2 = WORKLOADS["mobilenetv2"]
+RATES = jnp.asarray([25., 50., 100., 150., 200., 300., 500., 1000.])
+DUR = 50.0
+
+
+@pytest.fixture(scope="module")
+def grid():
+    socs = [build_soc(SCENARIOS[s]) for s in SCENARIO_ORDER]
+    return simulate_batch(socs, MNV2, RATES, duration_ms=DUR)
+
+
+def test_shapes_cover_full_grid(grid):
+    for key in ("throughput_ips", "latency_ms", "energy_mj", "peak_temp_c"):
+        assert grid[key].shape == (len(SCENARIO_ORDER), RATES.shape[0]), key
+
+
+@pytest.mark.parametrize("i_scen,i_rate", [(0, 0), (1, 3), (2, 4), (3, 7)])
+def test_matches_per_scenario_simulate(grid, i_scen, i_rate):
+    soc = build_soc(SCENARIOS[SCENARIO_ORDER[i_scen]])
+    one = simulate(soc, MNV2, arrival_rate_ips=float(RATES[i_rate]),
+                   duration_ms=DUR)
+    for key in ("throughput_ips", "latency_ms", "avg_power_mw",
+                "peak_temp_c", "energy_mj", "npu_utilization"):
+        a = float(one[key])
+        b = float(grid[key][i_scen, i_rate])
+        assert a == pytest.approx(b, rel=1e-4, abs=1e-6), (key, a, b)
+
+
+def test_single_compiled_program():
+    """The whole scenario×rate grid lowers through ONE cached jit — repeat
+    sweeps with the same static config must not re-lower."""
+    socs = [build_soc(SCENARIOS[s]) for s in SCENARIO_ORDER]
+    _batch_fn.cache_clear()
+    simulate_batch(socs, MNV2, RATES, duration_ms=DUR)
+    simulate_batch(socs, MNV2, RATES * 1.1, duration_ms=DUR)
+    info = _batch_fn.cache_info()
+    assert info.misses == 1 and info.hits == 1, info
+
+
+def test_stalled_config_reports_inf_latency():
+    soc = build_soc(SCENARIOS["ai_optimized"])
+    out = simulate(soc, MNV2, arrival_rate_ips=0.0, duration_ms=20.0)
+    assert float(out["throughput_ips"]) == 0.0
+    assert float(out["latency_ms"]) == float("inf")
+    # and a sweep containing it never ranks it best
+    grid = simulate_batch([soc], MNV2, jnp.asarray([0.0, 100.0]),
+                          duration_ms=20.0)
+    best = int(jnp.argmin(grid["latency_ms"][0]))
+    assert best == 1
+
+
+def test_params_roundtrip_pytree():
+    p = soc_params(build_soc(SCENARIOS["ai_optimized"]))
+    leaves, treedef = jax.tree.flatten(p)
+    assert all(isinstance(l, jnp.ndarray) for l in leaves)
+    p2 = jax.tree.unflatten(treedef, leaves)
+    assert float(p2.efficiency_factor) == pytest.approx(0.90)
+    assert float(p2.dvfs_adaptive) == 1.0
