@@ -1,0 +1,112 @@
+"""Benchmark regression gate: fresh BENCH_*.json vs committed baselines.
+
+Run: python -m benchmarks.compare --baseline <dir> --new <dir> [--tol 0.10]
+
+Each BENCH_<section>.json is a flat {metric: number} dict (benchmarks/run.py
+--json). Only metrics named in GATES are gated — everything else is
+informational (absolute latencies wobble on shared CI runners; throughputs
+and wall-times are what the roadmap tracks PR-over-PR). A gated metric fails
+when it regresses by more than --tol in its bad direction:
+
+    higher-is-better (tokens/s)  : new < (1 - tol) * baseline
+    lower-is-better  (wall-time) : new > (1 + tol) * baseline
+
+Metrics present only in the new snapshot pass (they become the next
+baseline); gated metrics missing from the new snapshot fail — a deleted
+number is a silent regression.
+
+Absolute metrics (tokens/s, wall-seconds) only compare meaningfully when the
+baseline was captured on the same runner class as the new run, so they are
+enforced only when the snapshots' `env_id` fingerprints match (they report
+informationally otherwise) — refresh the committed BENCH_*.json from a CI
+run's bench-json artifact to arm them in CI. Same-run ratios
+(bucketing_speedup, paged_kv_shrink) cancel machine speed and are enforced
+unconditionally.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+# section -> {metric: 'higher' | 'lower'}
+GATES = {
+    "serve": {
+        "fast_tokens_per_s": "higher",
+        "decode_tokens_per_s": "higher",
+        "paged_longctx_tokens_per_s": "higher",
+        "paged_kv_shrink": "lower",          # pool / dense memory ratio
+        "bucketing_speedup": "higher",       # same-run ratio, machine-free
+    },
+    "soc": {
+        "sweep_wall_s": "lower",
+    },
+    "kernels": {
+        "decode_attention_us": "lower",
+    },
+}
+
+# machine-speed-free metrics: enforced even across runner classes
+RATIO_METRICS = {"paged_kv_shrink", "bucketing_speedup"}
+
+
+def load(d: pathlib.Path, section: str):
+    p = d / f"BENCH_{section}.json"
+    return json.loads(p.read_text()) if p.exists() else None
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True, type=pathlib.Path)
+    ap.add_argument("--new", required=True, type=pathlib.Path)
+    ap.add_argument("--tol", type=float, default=0.10,
+                    help="allowed fractional regression (default 10%%)")
+    args = ap.parse_args()
+
+    failures = []
+    for section, gates in GATES.items():
+        base = load(args.baseline, section)
+        new = load(args.new, section)
+        if base is None:
+            print(f"compare,{section},no_baseline,skipped")
+            continue
+        if new is None:
+            failures.append(f"{section}: BENCH_{section}.json not produced")
+            continue
+        same_env = base.get("env_id") is not None \
+            and base.get("env_id") == new.get("env_id")
+        for metric, direction in gates.items():
+            if metric not in base:
+                print(f"compare,{section},{metric},new_metric,pass")
+                continue
+            if metric not in new:
+                failures.append(f"{section}.{metric}: missing from new run")
+                continue
+            b, n = float(base[metric]), float(new[metric])
+            if direction == "higher":
+                ok = n >= (1.0 - args.tol) * b
+                delta = (n / b - 1.0) if b else 0.0
+            else:
+                ok = n <= (1.0 + args.tol) * b
+                delta = (n / b - 1.0) if b else 0.0
+            enforced = same_env or metric in RATIO_METRICS
+            status = "pass" if ok else (
+                "FAIL" if enforced else "env_mismatch_info")
+            print(f"compare,{section},{metric},base={b:.4g},new={n:.4g},"
+                  f"delta={delta:+.1%},{status}")
+            if not ok and enforced:
+                failures.append(
+                    f"{section}.{metric}: {b:.4g} -> {n:.4g} "
+                    f"({delta:+.1%}, {direction}-is-better, tol {args.tol:.0%})")
+
+    if failures:
+        print("\nREGRESSIONS:\n  " + "\n  ".join(failures))
+        return 1
+    print("\nall gated benchmarks within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -12,12 +12,24 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import pathlib
+import platform
 import time
+import zlib
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+def env_fingerprint() -> float:
+    """Stable numeric id of the benchmarking machine class (kept numeric so
+    BENCH_*.json stays a flat {metric: number} dict). benchmarks.compare
+    enforces absolute (machine-dependent) gates only when the baseline and
+    the fresh run share this id; same-run ratio metrics gate regardless."""
+    tag = f"{platform.machine()}|{platform.processor()}|{os.cpu_count()}"
+    return float(zlib.crc32(tag.encode()) & 0xFFFFFF)
 
 
 def _timeit(fn, *args, n=5, warmup=2):
@@ -147,10 +159,14 @@ def bench_soc():
     grid = simulate_batch(socs, mnv2, rates, duration_ms=200.0)
     jax.block_until_ready(grid["throughput_ips"])
     compile_s = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    grid = simulate_batch(socs, mnv2, rates, duration_ms=200.0)
-    jax.block_until_ready(grid["throughput_ips"])
-    sweep_s = time.perf_counter() - t0
+    # best-of-5: a single ~40 ms sweep sits on the scheduler-noise floor,
+    # which would flake the CI regression gate
+    sweep_s = float("inf")
+    for _ in range(5):
+        t0 = time.perf_counter()
+        grid = simulate_batch(socs, mnv2, rates, duration_ms=200.0)
+        jax.block_until_ready(grid["throughput_ips"])
+        sweep_s = min(sweep_s, time.perf_counter() - t0)
     metrics["sweep_points"] = int(len(socs) * rates.shape[0])
     metrics["sweep_wall_s"] = sweep_s
     metrics["sweep_compile_s"] = compile_s
@@ -259,20 +275,65 @@ def bench_serve():
               f"decode_steps={stats.decode_steps},"
               f"mean_occupancy={stats.summary().get('mean_occupancy', 0):.2f}")
 
-    # steady-state decode throughput (slots full, compiles amortized)
-    eng = ServeEngine(model, n_slots=4, max_len=64, params=params)
+    # steady-state decode throughput (slots full, compiles amortized);
+    # max_new is sized so the timed window is several seconds — short windows
+    # put this metric at the mercy of scheduler noise and flake the CI gate
+    eng = ServeEngine(model, n_slots=4, max_len=160, params=params)
     for p in prompts(4):
-        eng.submit(p, max_new_tokens=40)
+        eng.submit(p, max_new_tokens=120)
     eng.step()                             # admit + warm the decode jit
-    tok0 = eng.stats.tokens_out
-    t0 = time.perf_counter()
-    steps = 0
-    while eng.step():
-        steps += 1
-    dt = time.perf_counter() - t0
-    tps = (eng.stats.tokens_out - tok0) / dt   # exact: counts emitted tokens
+    # best 25-step window (exact: counts emitted tokens): whole-run means
+    # inherit scheduler-noise spikes and flake the CI regression gate
+    tps, steps = 0.0, 0
+    while True:
+        tok0 = eng.stats.tokens_out
+        t0 = time.perf_counter()
+        ran = 0
+        while ran < 25 and eng.step():
+            ran += 1
+        steps += ran
+        if ran:
+            tps = max(tps, (eng.stats.tokens_out - tok0)
+                      / (time.perf_counter() - t0))
+        if ran < 25:
+            break
     metrics["decode_tokens_per_s"] = tps
     print(f"serve,decode_steady,tokens_per_s={tps:.1f},steps={steps}")
+
+    # ---- paged KV pool vs dense worst-case rows (PR 2) --------------------
+    # Long-context engine (max_len=512) over short-prompt traffic: the dense
+    # engine reserves n_slots × max_len rows; the paged pool is sized to the
+    # workload's live tokens (pages reserved at admission) and must stay
+    # token-exact while holding a fraction of the memory.
+    max_len, ps = 512, 16
+    for tag, kw in (("dense_longctx", dict(paged=False)),
+                    ("paged_longctx", dict(page_size=ps, n_pages=1 + 4 * 3))):
+        eng = ServeEngine(model, n_slots=4, max_len=max_len, params=params,
+                          **kw)
+        ps_list = prompts()
+        t0 = time.perf_counter()
+        for p in ps_list:
+            eng.submit(p, max_new_tokens=8)
+        stats = eng.run_to_completion()
+        dt = time.perf_counter() - t0
+        kv_mib = eng.kv_cache_bytes() / 2**20
+        metrics[f"{tag}_tokens_per_s"] = stats.tokens_out / dt
+        metrics[f"{tag}_kv_mib"] = kv_mib
+        if eng.paged:
+            metrics["paged_peak_kv_rows"] = stats.peak_pages_in_use * ps
+            metrics["dense_equiv_kv_rows"] = 4 * max_len
+        print(f"serve,{tag},tokens_per_s={stats.tokens_out / dt:.1f},"
+              f"kv_mib={kv_mib:.2f},"
+              + (f"peak_rows={stats.peak_pages_in_use * ps},"
+                 f"dense_rows={4 * max_len}" if eng.paged else ""))
+    shrink = metrics["paged_longctx_kv_mib"] / metrics["dense_longctx_kv_mib"]
+    metrics["paged_kv_shrink"] = shrink
+    print(f"serve,paged_vs_dense,kv_mem_ratio={shrink:.3f}"
+          f" (pool scales with live tokens, not n_slots*max_len)")
+    # same-run ratio: machine-speed cancels, so the regression gate can hold
+    # this tight even across runner generations
+    metrics["bucketing_speedup"] = (metrics["fast_tokens_per_s"]
+                                    / metrics["no_bucketing_tokens_per_s"])
     return metrics
 
 
@@ -405,13 +466,19 @@ def main():
                     help="comma-separated subset of " + ",".join(SECTIONS))
     ap.add_argument("--json", action="store_true",
                     help="write BENCH_<section>.json per executed section")
+    ap.add_argument("--outdir", default=".", type=pathlib.Path,
+                    help="where --json snapshots land (CI writes fresh runs "
+                         "to a scratch dir and gates them against the "
+                         "committed ones via benchmarks.compare)")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else list(SECTIONS)
     t0 = time.time()
     for n in names:
         metrics = SECTIONS[n]()
         if args.json and metrics:
-            path = pathlib.Path(f"BENCH_{n}.json")
+            metrics["env_id"] = env_fingerprint()
+            args.outdir.mkdir(parents=True, exist_ok=True)
+            path = args.outdir / f"BENCH_{n}.json"
             path.write_text(json.dumps(metrics, indent=2, sort_keys=True))
             print(f"bench,json,{path}")
     print(f"\nbenchmarks done in {time.time()-t0:.1f}s")

@@ -17,6 +17,17 @@ lets `pl.when` skip tiles that lie entirely beyond the valid prefix (or, with
 a sliding window, before it): a 4k-deep cache at kv_len=300 runs 3 tiles, not
 32.
 
+Paged mode (`page_table=`): the caches are shared page POOLS of shape
+(n_pages, page_size, KV, D) — no batch dim — and a (B, pages_per_seq) int32
+page table maps each sequence's logical k-blocks to physical pages. The table
+rides scalar prefetch alongside `kv_len`, so the K/V BlockSpec index_maps
+gather tiles *through* it: tile ik of sequence ib streams from physical page
+`page_table[ib, ik // blocks_per_page]`. Logical positions (and therefore the
+kv_len / sliding-window masks and the `pl.when` tile-liveness skip) are
+unchanged — a dead logical page costs one skipped `pl.when` body, and the
+serving engine points unmapped table entries at a reserved null page so the
+prefetch DMA always has a valid source.
+
 `interpret=True` runs the same kernel on CPU — the tests' numerics oracle is
 `models.attention`'s reference path.
 """
@@ -80,19 +91,32 @@ def _kernel(kvlen_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
                        / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
 
 
+def _kernel_paged(kvlen_ref, pt_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref, **kw):
+    # The page table is consumed by the K/V index_maps (the gather happens in
+    # the prefetch DMA); the online-softmax body is position-based and
+    # layout-blind, so it is shared with the dense kernel verbatim.
+    _kernel(kvlen_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            **kw)
+
+
 @functools.partial(jax.jit, static_argnames=(
     "window", "scale", "block_k", "interpret"))
-def decode_attention(q, k_cache, v_cache, kv_len, *, window: int = 0,
-                     scale=None, block_k: int = 128,
+def decode_attention(q, k_cache, v_cache, kv_len, *, page_table=None,
+                     window: int = 0, scale=None, block_k: int = 128,
                      interpret: bool = False):
     """Single-position attention against a ragged-valid KV cache.
 
     Args:
       q:        (B, 1, KV, G, D) — one query position, grouped query heads.
-      k_cache:  (B, Smax, KV, D) storage-dtype cache (never upcast wholesale).
-      v_cache:  (B, Smax, KV, D).
+      k_cache:  (B, Smax, KV, D) storage-dtype cache (never upcast wholesale);
+                with `page_table`, a shared (n_pages, page_size, KV, D) pool.
+      v_cache:  same layout as k_cache.
       kv_len:   () or (B,) int — number of valid cache rows per sequence
                 (this step's k/v must already be written).
+      page_table: optional (B, pages_per_seq) int32 — physical page of each
+                sequence's logical page; logical depth is pages_per_seq ×
+                page_size. Unmapped entries must point at a valid (null) page.
       window:   sliding-window size (0 = full attention over the valid prefix).
       scale:    logit scale; defaults to D**-0.5.
 
@@ -100,40 +124,72 @@ def decode_attention(q, k_cache, v_cache, kv_len, *, window: int = 0,
     """
     b, sq, nkv, g, d = q.shape
     assert sq == 1, f"decode kernel takes one query position, got {sq}"
-    smax = k_cache.shape[1]
     scale = float(scale if scale is not None else d ** -0.5)
-    block_k = min(block_k, smax)
-    assert smax % block_k == 0, (smax, block_k)
-    n_k = smax // block_k
     kv_len = jnp.broadcast_to(
         jnp.asarray(kv_len, jnp.int32).reshape(-1), (b,))
     qf = q.reshape(b, nkv, g, d)
+    scratch_shapes = [
+        pltpu.VMEM((g, 1), jnp.float32),   # m
+        pltpu.VMEM((g, 1), jnp.float32),   # l
+        pltpu.VMEM((g, d), jnp.float32),   # acc
+    ]
+    q_spec = pl.BlockSpec((1, 1, g, d), lambda ib, ih, ik, *_: (ib, ih, 0, 0))
+    out_spec = pl.BlockSpec((1, 1, g, d), lambda ib, ih, ik, *_: (ib, ih, 0, 0))
 
+    if page_table is None:
+        smax = k_cache.shape[1]
+        block_k = min(block_k, smax)
+        assert smax % block_k == 0, (smax, block_k)
+        n_k = smax // block_k
+        kv_spec = pl.BlockSpec((1, block_k, 1, d),
+                               lambda ib, ih, ik, *_: (ib, ik, ih, 0))
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b, nkv, n_k),
+            in_specs=[q_spec, kv_spec, kv_spec],
+            out_specs=out_spec,
+            scratch_shapes=scratch_shapes,
+        )
+        out = pl.pallas_call(
+            functools.partial(_kernel, scale=scale, window=window,
+                              block_k=block_k, n_k=n_k),
+            grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((b, nkv, g, d), q.dtype),
+            interpret=interpret,
+            compiler_params=CompilerParams(
+                dimension_semantics=("parallel", "parallel", "arbitrary")),
+        )(kv_len, qf, k_cache, v_cache)
+        return out.reshape(b, 1, nkv, g, d)
+
+    # ------------------------------------------------------------- paged path
+    page_size = k_cache.shape[1]
+    pages_per_seq = page_table.shape[1]
+    assert page_table.shape[0] == b, (page_table.shape, b)
+    block_k = min(block_k, page_size)
+    assert page_size % block_k == 0, (page_size, block_k)
+    bpp = page_size // block_k              # k-blocks per page
+    n_k = pages_per_seq * bpp               # logical k-block sweep
+    page_table = jnp.asarray(page_table, jnp.int32)
+
+    def kv_map(ib, ih, ik, kvlen_ref, pt_ref):
+        # physical page of this tile's logical page; row offset in block units
+        return pt_ref[ib, ik // bpp], ik % bpp, ih, 0
+
+    kv_spec = pl.BlockSpec((1, block_k, 1, d), kv_map)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2,
         grid=(b, nkv, n_k),
-        in_specs=[
-            pl.BlockSpec((1, 1, g, d), lambda ib, ih, ik, *_: (ib, ih, 0, 0)),
-            pl.BlockSpec((1, block_k, 1, d),
-                         lambda ib, ih, ik, *_: (ib, ik, ih, 0)),
-            pl.BlockSpec((1, block_k, 1, d),
-                         lambda ib, ih, ik, *_: (ib, ik, ih, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, 1, g, d),
-                               lambda ib, ih, ik, *_: (ib, ih, 0, 0)),
-        scratch_shapes=[
-            pltpu.VMEM((g, 1), jnp.float32),   # m
-            pltpu.VMEM((g, 1), jnp.float32),   # l
-            pltpu.VMEM((g, d), jnp.float32),   # acc
-        ],
+        in_specs=[q_spec, kv_spec, kv_spec],
+        out_specs=out_spec,
+        scratch_shapes=scratch_shapes,
     )
     out = pl.pallas_call(
-        functools.partial(_kernel, scale=scale, window=window,
+        functools.partial(_kernel_paged, scale=scale, window=window,
                           block_k=block_k, n_k=n_k),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, nkv, g, d), q.dtype),
         interpret=interpret,
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
-    )(kv_len, qf, k_cache, v_cache)
+    )(kv_len, page_table, qf, k_cache, v_cache)
     return out.reshape(b, 1, nkv, g, d)

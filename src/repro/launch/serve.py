@@ -44,6 +44,10 @@ def main():
     ap.add_argument("--max-len", type=int, default=96)
     ap.add_argument("--new-tokens", type=int, default=8)
     ap.add_argument("--int8", action="store_true")
+    ap.add_argument("--page-size", type=int, default=32,
+                    help="KV page size (0 = dense per-slot cache)")
+    ap.add_argument("--pages", type=int, default=0,
+                    help="pool pages incl. the null page (0 = worst case)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -54,8 +58,12 @@ def main():
     params = model.init(jax.random.key(args.seed))
     if args.int8:
         params = quantize_params_int8(params)
+    paged_kw = {"paged": False} if args.page_size == 0 else {
+        "page_size": args.page_size,
+        "n_pages": args.pages or None,
+    }
     eng = ServeEngine(model, n_slots=args.slots, max_len=args.max_len,
-                      params=params)
+                      params=params, **paged_kw)
     rng = np.random.default_rng(args.seed)
     reqs = []
     for _ in range(args.requests):

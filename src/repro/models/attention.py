@@ -124,21 +124,36 @@ def chunked_attention(q, k, v, *, causal=True, window=0, scale=None,
     return jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
 
 
-def _pallas_decode_ok(q, k_cache) -> bool:
+def _pallas_decode_ok(q, k_cache, page_table=None) -> bool:
     """The Pallas decode kernel needs a TPU backend and a cache depth that
     tiles evenly; everything else falls back to the pure-jnp path."""
     if jax.default_backend() != "tpu":
         return False
+    if page_table is not None:
+        # auto-dispatch whenever a page is sublane-tileable for every storage
+        # dtype (16 rows covers bf16); the serving default (32) qualifies —
+        # falling back to the jnp path would densify the whole logical view
+        # per step, re-buying the dense cache the pool exists to avoid.
+        # Sub-16-row pages (tests) still run via impl='pallas'.
+        page_size = k_cache.shape[1]
+        return page_size >= 16 and page_size % 16 == 0
     smax = k_cache.shape[1]
     return smax % min(128, smax) == 0 and smax >= 128
 
 
 def decode_attention(q, k_cache, v_cache, cur_len, *, window=0, scale=None,
-                     impl: str = "auto"):
+                     page_table=None, impl: str = "auto"):
     """Single-position attention against a cache.
 
     q: (B,1,KV,G,D); caches: (B,Smax,KV,D); cur_len: () or (B,) int — number of
     valid cache positions (the new token's k/v must already be written).
+
+    Paged layout (`page_table=` (B, pages_per_seq) int32): the caches are
+    shared (n_pages, page_size, KV, D) page pools and each sequence's rows
+    live at pool[page_table[b, j]] for logical page j. The jnp path below
+    gathers the table back to a dense per-sequence view — exact, and the CPU
+    oracle for the kernel — while the Pallas kernel gathers tile-by-tile
+    through scalar prefetch and never materializes the dense view.
 
     impl: 'auto' dispatches to the Pallas decode kernel
     (kernels/decode_attention) on TPU — the engine's decode step streams the
@@ -151,16 +166,23 @@ def decode_attention(q, k_cache, v_cache, cur_len, *, window=0, scale=None,
     whole-cache fp32 copy would double the decode footprint (measured +15 GiB
     on gemma-7b × decode_32k; EXPERIMENTS.md §Perf).
     """
-    if impl == "auto" and _pallas_decode_ok(q, k_cache):
+    if impl == "auto" and _pallas_decode_ok(q, k_cache, page_table):
         impl = "pallas"
     if impl == "pallas":
         from repro.kernels.decode_attention import (
             decode_attention as pallas_decode)
         return pallas_decode(
             q, k_cache, v_cache, cur_len, window=window,
+            page_table=page_table,
             scale=None if scale is None else float(scale),
             interpret=jax.default_backend() != "tpu")
     b, _, nkv, g, d = q.shape
+    if page_table is not None:
+        # (n_pages, ps, KV, D)[(B, pp)] → (B, pp·ps, KV, D) dense view.
+        # Null-page entries gather garbage rows, but they sit at logical
+        # positions ≥ cur_len and are masked below like any dead row.
+        k_cache = k_cache[page_table].reshape(b, -1, nkv, d)
+        v_cache = v_cache[page_table].reshape(b, -1, nkv, d)
     smax = k_cache.shape[1]
     scale = scale if scale is not None else d ** -0.5
     s = jnp.einsum("bqkgd,bskd->bkgqs", q, k_cache,

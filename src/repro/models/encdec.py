@@ -18,7 +18,8 @@ from repro.models import attention as attn_mod
 from repro.models.common import ParamDef, act_fn, apply_rope, glu_act, rms_norm
 from repro.models.transformer import (
     ExecOptions, _expand_kv, attn_schema, chunked_ce_loss, embed_tokens,
-    head_mask, lm_head_weights, remat_wrap, _write_cache,
+    head_mask, lm_head_weights, paged_kv_shapes, remat_wrap, _write_cache,
+    _write_cache_paged,
 )
 
 
@@ -132,13 +133,19 @@ def _dec_layer(h, lp, cfg, opts, positions, enc_out, mode, cache):
         v = jnp.einsum("bsd,dhk->bshk", xn, lp["wv"])
         q = apply_rope(q, positions, theta=cfg.rope_theta)
         k = apply_rope(k, positions, theta=cfg.rope_theta)
-        k_cache = _write_cache(cache["k"], k, pos_b)
-        v_cache = _write_cache(cache["v"], v, pos_b)
+        page_table = cache.get("page_table")
+        if page_table is None:
+            k_cache = _write_cache(cache["k"], k, pos_b)
+            v_cache = _write_cache(cache["v"], v, pos_b)
+        else:
+            k_cache = _write_cache_paged(cache["k"], k, pos_b, page_table)
+            v_cache = _write_cache_paged(cache["v"], v, pos_b, page_table)
         kvp, gp = cfg.padded_kv_group
         hm = head_mask(cfg, h.dtype)[None, None, :, None]
         qg = q.reshape(b, 1, kvp, gp, cfg.head_dim)
         o = attn_mod.decode_attention(qg, k_cache, v_cache, pos_b + 1,
-                                      scale=cfg.head_dim ** -0.5)
+                                      scale=cfg.head_dim ** -0.5,
+                                      page_table=page_table)
         o = o.reshape(b, 1, cfg.n_heads_padded, cfg.head_dim) * hm
         h = h + jnp.einsum("bshk,hkd->bsd", o, lp["wo"])
         xn = rms_norm(h, lp["cross_norm"])
@@ -208,6 +215,7 @@ def decode_step(params, batch, cache, cfg, opts: ExecOptions):
     """Self KV rides the scan carry (in-place DUS); cross K/V are read-only
     xs (no ys re-emission) — avoids double-buffering either cache."""
     positions = cache["pos"]
+    page_table = cache.get("page_table")
     x = embed_tokens(params, batch["tokens"], cfg, opts)
 
     def body(carry, xs):
@@ -218,6 +226,8 @@ def decode_step(params, batch, cache, cfg, opts: ExecOptions):
             "v": jax.lax.dynamic_index_in_dim(vc, i, 0, keepdims=False),
             "ck": ck, "cv": cv,
         }
+        if page_table is not None:
+            layer_cache["page_table"] = page_table
         h, new_cache = _dec_layer(h, lp, cfg, opts, positions[:, None],
                                   None, "decode", layer_cache)
         kc = jax.lax.dynamic_update_index_in_dim(kc, new_cache["k"], i, 0)
@@ -235,15 +245,29 @@ def decode_step(params, batch, cache, cfg, opts: ExecOptions):
                         lm_head_weights(params, cfg)).astype(jnp.float32)
     new_cache = {"k": kc, "v": vc, "ck": cache["ck"], "cv": cache["cv"],
                  "pos": positions + 1}
+    if page_table is not None:
+        new_cache["page_table"] = page_table
     return logits, new_cache
 
 
-def cache_shape(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+def cache_shape(cfg, batch: int, max_len: int, dtype=jnp.bfloat16, *,
+                page_size=None, n_pages=None):
+    """Self-attention K/V go paged when `page_size` is given (shared sizing
+    contract: transformer.paged_kv_shapes); cross K/V stay dense per slot —
+    they are written once at prefill at a fixed (cross_len) depth, so paging
+    would buy nothing and cost a second table."""
     L, kv, hd, se = cfg.n_dec_layers, cfg.kv_pad, cfg.head_dim, cfg.cross_len
-    return {
-        "k": jax.ShapeDtypeStruct((L, batch, max_len, kv, hd), dtype),
-        "v": jax.ShapeDtypeStruct((L, batch, max_len, kv, hd), dtype),
+    cross = {
         "ck": jax.ShapeDtypeStruct((L, batch, se, kv, hd), dtype),
         "cv": jax.ShapeDtypeStruct((L, batch, se, kv, hd), dtype),
-        "pos": jax.ShapeDtypeStruct((batch,), jnp.int32),
     }
+    if page_size is None:
+        self_kv = {
+            "k": jax.ShapeDtypeStruct((L, batch, max_len, kv, hd), dtype),
+            "v": jax.ShapeDtypeStruct((L, batch, max_len, kv, hd), dtype),
+            "pos": jax.ShapeDtypeStruct((batch,), jnp.int32),
+        }
+    else:
+        self_kv = paged_kv_shapes(L, batch, max_len, kv, hd, dtype,
+                                  page_size, n_pages)
+    return {**self_kv, **cross}

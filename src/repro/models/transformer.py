@@ -171,14 +171,19 @@ def attn_block(x, p, cfg, opts: ExecOptions, *, positions,
         assert cache is not None
         b = x.shape[0]
         pos_b = positions.reshape(-1)             # (B,)
+        page_table = cache.get("page_table")
         # write this step's k/v at each sequence position `pos_b`
-        k_cache = _write_cache(cache["k"], k, pos_b)
-        v_cache = _write_cache(cache["v"], v, pos_b)
+        if page_table is None:
+            k_cache = _write_cache(cache["k"], k, pos_b)
+            v_cache = _write_cache(cache["v"], v, pos_b)
+        else:
+            k_cache = _write_cache_paged(cache["k"], k, pos_b, page_table)
+            v_cache = _write_cache_paged(cache["v"], v, pos_b, page_table)
         kvp, gp = cfg.padded_kv_group
         qg = q.reshape(b, 1, kvp, gp, cfg.head_dim)
         o = attn_mod.decode_attention(
             qg, k_cache, v_cache, pos_b + 1,
-            window=cfg.window, scale=scale)
+            window=cfg.window, scale=scale, page_table=page_table)
         o = o.reshape(b, 1, cfg.n_heads_padded, cfg.head_dim)
         new_cache = {"k": k_cache, "v": v_cache}
 
@@ -196,6 +201,25 @@ def _write_cache(cache, kv_new, positions):
     onehot = (jnp.arange(smax)[None, :] == positions[:, None])  # (B, Smax)
     oh = onehot[:, :, None, None].astype(cache.dtype)
     return cache * (1 - oh) + oh * kv_new.astype(cache.dtype)
+
+
+def _write_cache_paged(pool, kv_new, positions, page_table):
+    """pool: (n_pages, ps, KV, D); kv_new: (B, 1, KV, D); positions: (B,);
+    page_table: (B, pages_per_seq).
+
+    Scatter each sequence's new row into pool[table[b, pos//ps], pos%ps].
+    Live sequences own disjoint pages, so the scatter indices never collide;
+    retired slots all point at the null page, whose rows are never attended
+    to. Positions past the table's logical depth clamp (jnp gather semantics)
+    onto the slot's last entry — the engine zeroes retired rows, so drift
+    lands on the null page too. Single-host layout; the paged pool trades the
+    one-hot update's GSPMD-friendliness for O(live tokens) memory."""
+    ps = pool.shape[1]
+    b = positions.shape[0]
+    logical = jnp.minimum(positions // ps, page_table.shape[1] - 1)
+    page = jnp.take_along_axis(page_table, logical[:, None], axis=1)[:, 0]
+    return pool.at[page, positions % ps].set(
+        kv_new[:, 0].astype(pool.dtype))
 
 
 def dense_ffn(x, p, cfg, opts: ExecOptions):
@@ -359,6 +383,7 @@ def decode_step(params, batch, cache, cfg, opts: ExecOptions):
     gemma-7b × decode_32k; EXPERIMENTS.md §Perf P0c)."""
     tokens = batch["tokens"]
     positions = cache["pos"]                      # (B,) next position to write
+    page_table = cache.get("page_table")          # read-only within the step
     x = embed_tokens(params, tokens, cfg, opts)
 
     def body(carry, xs):
@@ -368,6 +393,8 @@ def decode_step(params, batch, cache, cfg, opts: ExecOptions):
             "k": jax.lax.dynamic_index_in_dim(kc, i, 0, keepdims=False),
             "v": jax.lax.dynamic_index_in_dim(vc, i, 0, keepdims=False),
         }
+        if page_table is not None:
+            layer_cache["page_table"] = page_table
         h, new_cache = layer_fn(h, lp, cfg, opts,
                                 positions=positions[:, None], mode="decode",
                                 cache=layer_cache)
@@ -384,14 +411,43 @@ def decode_step(params, batch, cache, cfg, opts: ExecOptions):
     logits = jnp.einsum("bsd,vd->bsv", x, lm_head_weights(params, cfg))
     logits = softcap(logits.astype(jnp.float32), cfg.logit_softcap)
     new_cache = {"k": kc, "v": vc, "pos": positions + 1}
+    if page_table is not None:
+        new_cache["page_table"] = page_table
     return logits, new_cache
 
 
-def cache_shape(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
-    """Abstract KV-cache pytree (stacked over layers; kv_pad heads)."""
-    L, kv, hd = cfg.n_layers, cfg.kv_pad, cfg.head_dim
+def paged_kv_shapes(L: int, batch: int, max_len: int, kv: int, hd: int,
+                    dtype, page_size: int, n_pages: Optional[int]):
+    """Shared paged-pool sizing contract (transformer + encdec cache_shape):
+    (L, n_pages, page_size, KV, D) K/V pools + a (B, max_len // page_size)
+    page table. Physical page 0 is reserved by the serving engine as the null
+    page, so `n_pages` defaults to one more than the dense worst case
+    (callers size it down to expected live tokens)."""
+    assert max_len % page_size == 0, (max_len, page_size)
+    pages_per_seq = max_len // page_size
+    if n_pages is None:
+        n_pages = 1 + batch * pages_per_seq
     return {
-        "k": jax.ShapeDtypeStruct((L, batch, max_len, kv, hd), dtype),
-        "v": jax.ShapeDtypeStruct((L, batch, max_len, kv, hd), dtype),
+        "k": jax.ShapeDtypeStruct((L, n_pages, page_size, kv, hd), dtype),
+        "v": jax.ShapeDtypeStruct((L, n_pages, page_size, kv, hd), dtype),
+        "page_table": jax.ShapeDtypeStruct((batch, pages_per_seq), jnp.int32),
         "pos": jax.ShapeDtypeStruct((batch,), jnp.int32),
     }
+
+
+def cache_shape(cfg, batch: int, max_len: int, dtype=jnp.bfloat16, *,
+                page_size: Optional[int] = None,
+                n_pages: Optional[int] = None):
+    """Abstract KV-cache pytree (stacked over layers; kv_pad heads).
+
+    Dense (default): per-slot (L, B, max_len, KV, D) K/V rows.
+    Paged (`page_size=`): shared page pools — see `paged_kv_shapes`."""
+    L, kv, hd = cfg.n_layers, cfg.kv_pad, cfg.head_dim
+    if page_size is None:
+        return {
+            "k": jax.ShapeDtypeStruct((L, batch, max_len, kv, hd), dtype),
+            "v": jax.ShapeDtypeStruct((L, batch, max_len, kv, hd), dtype),
+            "pos": jax.ShapeDtypeStruct((batch,), jnp.int32),
+        }
+    return paged_kv_shapes(L, batch, max_len, kv, hd, dtype, page_size,
+                           n_pages)

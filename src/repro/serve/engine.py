@@ -9,6 +9,25 @@ The "AI-optimized" configuration of the paper, as a serving runtime:
   * the faithful chiplet perf model (core/) prices batching decisions the way
     the paper's CPU chiplet dispatches to its two NPUs (see benches).
 
+Cache layout (PR 2 — paged KV):
+  * Attention families default to a PAGED KV cache: one shared page pool of
+    (n_layers, n_pages, page_size, KV, D) K/V blocks plus a per-slot
+    (n_slots, max_len // page_size) page table. Physical page 0 is the NULL
+    page — never allocated, it absorbs writes from retired slots and backs
+    unmapped table entries so every gather/DMA has a valid source. Admission
+    reserves ceil(min(max_len, prompt + max_new) / page_size) pages up front
+    (so a request can never starve mid-decode) and retirement returns them to
+    the free list and re-points the slot's table row at the null page. When
+    the free list can't cover the queue head, admission waits — the pool is
+    the admission controller. Peak KV memory therefore scales with LIVE
+    tokens, not n_slots × max_len: long-context engines no longer reserve the
+    worst case per slot (paper §serving: 16 GB HBM3 + streaming block-granular
+    UCIe transfers — a page is one FLIT-sized stream unit).
+  * `paged=False` keeps the dense per-slot (n_slots, max_len) rows — the
+    oracle configuration for equivalence tests (`generate_greedy` runs it).
+  * ssm/hybrid families keep their O(1) dense recurrent state; paging does
+    not apply.
+
 Fast-path design (PR 1):
   * power-of-two prompt bucketing — prefill compiles once per bucket, not once
     per distinct prompt length, so compile count is O(log max_len) in steady
@@ -24,6 +43,10 @@ Fast-path design (PR 1):
     Python chain of `.at[].set()` dispatches.
   * `pos` is fetched from device once per step (one host sync), not once per
     active slot.
+  * freed slots are masked out of the batched decode step: an `active` mask
+    freezes their stream position, so an idle tick is a no-op per freed slot
+    (their stale-token writes land on the null page / an overwritten dense
+    row, and `pos` cannot drift past the cache).
 
 Pure-python orchestration over jitted model fns; runs on CPU for tests and
 examples, mesh-parameterized for pods.
@@ -32,6 +55,7 @@ examples, mesh-parameterized for pods.
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Dict, List, Optional
 
@@ -55,6 +79,9 @@ class Request:
     rid: int
     prompt: np.ndarray                  # (prompt_len,) int32
     max_new_tokens: int = 16
+    # extra prefill inputs (e.g. encdec 'frames': (S_enc, d_model)); batched
+    # with a leading axis of 1 at admission
+    extras: Optional[Dict[str, np.ndarray]] = None
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     t_enqueue: float = 0.0
@@ -71,11 +98,15 @@ class EngineStats:
     prefill_compiles: int = 0   # actual jit traces (bucketing keeps this flat)
     decode_compiles: int = 0
     paste_compiles: int = 0
+    pages_in_use: int = 0       # paged engines: currently reserved pages
+    peak_pages_in_use: int = 0
 
     def summary(self) -> Dict[str, float]:
         d = dataclasses.asdict(self)
-        if self.decode_steps:
-            d["mean_occupancy"] = self.occupancy_sum / self.decode_steps
+        # always emitted: an engine that only prefilled has no decode steps,
+        # and bench/report consumers index this key unconditionally
+        d["mean_occupancy"] = (self.occupancy_sum / self.decode_steps
+                               if self.decode_steps else 0.0)
         return d
 
 
@@ -120,9 +151,45 @@ def _make_paste(fam: str):
     return paste
 
 
+def _make_paste_paged(fam: str):
+    """Paged paste: scatter the dense prefill rows page-by-page into the
+    shared pool and stamp the slot's page-table row.
+
+    `page_row` is the slot's full (pages_per_seq,) table row — reserved
+    physical pages first, null page (0) for the rest. Prefill-bucket pad rows
+    that spill past the reservation land on the null page; pad rows inside it
+    sit at logical positions ≥ kv_len, masked until decode overwrites them —
+    the same invariant the dense replay path relies on."""
+    assert fam in _ATTN_FAMILIES, fam
+
+    def paste(cache, pf, slot, pos, page_row):
+        c = dict(cache)
+        ps = c["k"].shape[2]
+        blen = pf["k"].shape[2]
+        n_prompt_pages = -(-blen // ps)    # static per prefill bucket
+        for key in ("k", "v"):
+            pool = c[key]
+            for j in range(n_prompt_pages):
+                rows = min(ps, blen - j * ps)
+                src = pf[key][:, 0, j * ps:j * ps + rows].astype(pool.dtype)
+                pool = pool.at[:, page_row[j], :rows].set(src)
+            c[key] = pool
+        for key in ("ck", "cv"):           # encdec cross K/V stay dense
+            if key in c:
+                c[key] = c[key].at[:, slot].set(
+                    pf[key][:, 0].astype(c[key].dtype))
+        c["page_table"] = c["page_table"].at[slot].set(page_row)
+        c["pos"] = c["pos"].at[slot].set(pos)
+        return c
+
+    return paste
+
+
 class ServeEngine:
     def __init__(self, model, *, n_slots: int = 4, max_len: int = 128,
-                 params=None, bucket_prompts: bool = True):
+                 params=None, bucket_prompts: bool = True,
+                 paged: Optional[bool] = None, page_size: int = 32,
+                 n_pages: Optional[int] = None):
         self.model = model
         self.cfg = model.cfg
         self.n_slots = n_slots
@@ -132,12 +199,41 @@ class ServeEngine:
         self._queue: List[Request] = []
         self._slots: List[Optional[Request]] = [None] * n_slots
         self._fresh: List[bool] = [False] * n_slots  # replaying last prompt tok
+        self._active = np.zeros((n_slots,), bool)
         self._next_rid = 0
         # Padded prefill + replay is only exact when trailing pads cannot
         # reach earlier positions — true for causal-attention KV caches, false
         # for recurrent state (ssm/hybrid), which keeps exact-length prefill.
         self._replay = self.cfg.family in _ATTN_FAMILIES
         self.bucket_prompts = bucket_prompts and self._replay
+        if paged and self.cfg.family not in _ATTN_FAMILIES:
+            raise ValueError(
+                f"paged KV applies to attention families, not {self.cfg.family!r}")
+        self.paged = (self.cfg.family in _ATTN_FAMILIES) if paged is None \
+            else bool(paged)
+        if self.paged and max_len % page_size != 0:
+            if paged is None:
+                # auto mode must not reject a max_len the dense engine took:
+                # shrink to the largest compatible page size, or go dense if
+                # pages would degenerate below 8 rows
+                fit = math.gcd(min(page_size, max_len), max_len)
+                if fit >= 8 or fit == max_len:
+                    page_size = fit
+                else:
+                    self.paged = False
+            else:
+                raise ValueError(
+                    f"max_len {max_len} is not a multiple of page_size "
+                    f"{page_size}")
+        if self.paged:
+            self.page_size = page_size
+            self.pages_per_seq = max_len // page_size
+            # page 0 is the reserved null page
+            self.n_pages = (1 + n_slots * self.pages_per_seq
+                            if n_pages is None else n_pages)
+            assert self.n_pages >= 2, self.n_pages
+            self._free_pages = list(range(self.n_pages - 1, 0, -1))
+            self._slot_pages: List[List[int]] = [[] for _ in range(n_slots)]
         # donation is unimplemented on CPU (harmless but warns per compile)
         donate = {} if jax.default_backend() == "cpu" else \
             {"donate_argnums": (2,)}
@@ -154,46 +250,109 @@ class ServeEngine:
                 return None, model.prefill_cache(params, batch)
             return model.prefill(params, batch)
 
-        def _decode(params, batch, cache):
+        def _decode(params, batch, cache, active):
             self.stats.decode_compiles += 1
-            return model.decode(params, batch, cache)
+            logits, new_cache = model.decode(params, batch, cache)
+            # freeze freed slots' stream position: their garbage advance would
+            # otherwise drift past max_len tick by tick (idle tick == no-op)
+            new_cache["pos"] = jnp.where(active, new_cache["pos"],
+                                         cache["pos"])
+            return logits, new_cache
 
-        def _paste(cache, pf, slot, pos):
-            self.stats.paste_compiles += 1
-            return _make_paste(self.cfg.family)(cache, pf, slot, pos)
+        if self.paged:
+            def _paste(cache, pf, slot, pos, page_row):
+                self.stats.paste_compiles += 1
+                return _make_paste_paged(self.cfg.family)(
+                    cache, pf, slot, pos, page_row)
+
+            def _unmap(cache, slot):
+                # retired slot: point its whole table row at the null page so
+                # freed physical pages can be re-issued without aliasing
+                return dict(cache, page_table=cache["page_table"]
+                            .at[slot].set(0))
+
+            self._unmap_jit = jax.jit(_unmap, **paste_donate)
+        else:
+            def _paste(cache, pf, slot, pos):
+                self.stats.paste_compiles += 1
+                return _make_paste(self.cfg.family)(cache, pf, slot, pos)
 
         self._prefill_jit = jax.jit(_prefill)
         self._decode_jit = jax.jit(_decode, **donate)
         self._paste_jit = jax.jit(_paste, **paste_donate)
         self._next_tok = np.zeros((n_slots, 1), np.int32)
-        abs_cache = model.cache_shape(n_slots, max_len, jnp.float32)
+        if self.paged:
+            abs_cache = model.cache_shape(n_slots, max_len, jnp.float32,
+                                          page_size=self.page_size,
+                                          n_pages=self.n_pages)
+        else:
+            abs_cache = model.cache_shape(n_slots, max_len, jnp.float32)
         self._cache = jax.tree.map(
             lambda s: jnp.zeros(s.shape, s.dtype), abs_cache)
 
     # ------------------------------------------------------------- lifecycle
-    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16) -> Request:
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
+               extras: Optional[Dict[str, np.ndarray]] = None) -> Request:
         prompt = np.asarray(prompt, np.int32)
         assert 1 <= prompt.shape[0] <= self.max_len, prompt.shape
+        assert max_new_tokens >= 1, max_new_tokens
+        if self.paged:
+            need = self._pages_for(prompt.shape[0], max_new_tokens)
+            if need > self.n_pages - 1:
+                raise ValueError(
+                    f"request needs {need} pages; pool has {self.n_pages - 1}")
         self._next_rid += 1
         req = Request(rid=self._next_rid, prompt=prompt,
-                      max_new_tokens=max_new_tokens, t_enqueue=time.time())
+                      max_new_tokens=max_new_tokens, extras=extras,
+                      t_enqueue=time.time())
         self._queue.append(req)
         return req
 
+    def _pages_for(self, plen: int, max_new: int) -> int:
+        """Pages reserved at admission: every row the request can ever write
+        (prompt + generated, one row per generated token, capacity-capped)."""
+        rows = min(self.max_len, plen + max_new)
+        return -(-rows // self.page_size)
+
+    def kv_cache_bytes(self) -> int:
+        return sum(x.size * x.dtype.itemsize
+                   for x in jax.tree.leaves(self._cache))
+
     def _admit(self):
-        """Prefill queued requests into free slots."""
+        """Prefill queued requests into free slots.
+
+        Paged engines additionally reserve the request's worst-case page
+        count up front; if the free list can't cover the queue head, admission
+        stalls (FIFO — no small-request overtaking) until retirements return
+        pages."""
         for slot in [i for i, r in enumerate(self._slots) if r is None]:
             if not self._queue:
                 return
-            r = self._queue.pop(0)
+            r = self._queue[0]
             plen = r.prompt.shape[0]
+            page_row = None
+            if self.paged:
+                need = self._pages_for(plen, r.max_new_tokens)
+                if len(self._free_pages) < need:
+                    return
+                pages = [self._free_pages.pop() for _ in range(need)]
+                self._slot_pages[slot] = pages
+                self.stats.pages_in_use += need
+                self.stats.peak_pages_in_use = max(
+                    self.stats.peak_pages_in_use, self.stats.pages_in_use)
+                page_row = np.zeros((self.pages_per_seq,), np.int32)
+                page_row[:need] = pages
+            self._queue.pop(0)
             blen = bucket_length(plen, self.max_len) if self.bucket_prompts \
                 else plen
             toks = np.zeros((1, blen), np.int32)
             toks[0, :plen] = r.prompt
-            logits, pf_cache = self._prefill_jit(self.params,
-                                                 {"tokens": jnp.asarray(toks)})
+            batch = {"tokens": jnp.asarray(toks)}
+            for key, val in (r.extras or {}).items():
+                batch[key] = jnp.asarray(val)[None]
+            logits, pf_cache = self._prefill_jit(self.params, batch)
             self.stats.prefills += 1
+            paste_args = () if page_row is None else (jnp.asarray(page_row),)
             if self._replay:
                 # Cache rows [0, plen) are exact under trailing padding; the
                 # next decode step replays prompt[-1] at position plen-1,
@@ -201,19 +360,43 @@ class ServeEngine:
                 # (pad rows ≥ plen are masked by kv_len until overwritten).
                 self._cache = self._paste_jit(
                     self._cache, pf_cache, jnp.int32(slot),
-                    jnp.int32(plen - 1))
+                    jnp.int32(plen - 1), *paste_args)
                 self._next_tok[slot, 0] = int(r.prompt[-1])
             else:
                 first = int(np.argmax(np.asarray(
                     logits[0, -1, :self.cfg.vocab_size])))
                 self._cache = self._paste_jit(
-                    self._cache, pf_cache, jnp.int32(slot), jnp.int32(plen))
+                    self._cache, pf_cache, jnp.int32(slot), jnp.int32(plen),
+                    *paste_args)
                 r.out_tokens.append(first)
                 r.t_first_token = time.time()
                 self._next_tok[slot, 0] = first
                 self.stats.tokens_out += 1
+                if plen >= self.max_len \
+                        or len(r.out_tokens) >= r.max_new_tokens:
+                    # done at admission: the cache is already full (no
+                    # writable row for a decode step) or the prefill token
+                    # exhausted the budget — never occupy a decode slot
+                    r.done = True
+                    r.t_done = time.time()
+                    self._release(slot)
+                    continue
             self._fresh[slot] = self._replay
             self._slots[slot] = r
+            self._active[slot] = True
+
+    def _release(self, slot: int):
+        """Return a finished slot to the pool (called with the request
+        already removed from / never placed in `_slots`)."""
+        self._slots[slot] = None
+        self._active[slot] = False
+        if self.paged:
+            freed = self._slot_pages[slot]
+            if freed:
+                self._free_pages.extend(freed)
+                self.stats.pages_in_use -= len(freed)
+                self._slot_pages[slot] = []
+            self._cache = self._unmap_jit(self._cache, jnp.int32(slot))
 
     # ----------------------------------------------------------------- decode
     def step(self) -> bool:
@@ -223,7 +406,8 @@ class ServeEngine:
         if not active:
             return False
         logits, self._cache = self._decode_jit(
-            self.params, {"tokens": jnp.asarray(self._next_tok)}, self._cache)
+            self.params, {"tokens": jnp.asarray(self._next_tok)}, self._cache,
+            jnp.asarray(self._active))
         self.stats.decode_steps += 1
         self.stats.occupancy_sum += len(active) / self.n_slots
         nxt = np.asarray(jnp.argmax(
@@ -237,11 +421,15 @@ class ServeEngine:
             if self._fresh[slot]:
                 r.t_first_token = time.time()
                 self._fresh[slot] = False
+            # retire when out of budget OR out of cache: `pos` is the next
+            # write index, so the slot can take another decode step iff
+            # pos < max_len (the seed's `max_len - 1` retired one writable
+            # row early, and one row earlier still on the replay path)
             if len(r.out_tokens) >= r.max_new_tokens \
-                    or int(pos[slot]) >= self.max_len - 1:
+                    or int(pos[slot]) >= self.max_len:
                 r.done = True
                 r.t_done = time.time()
-                self._slots[slot] = None
+                self._release(slot)
         return True
 
     def run_to_completion(self, max_ticks: int = 10_000) -> EngineStats:
@@ -254,14 +442,16 @@ class ServeEngine:
 
 
 def generate_greedy(model, params, prompt: np.ndarray, n_tokens: int,
-                    max_len: int = 128) -> List[int]:
+                    max_len: int = 128, paged: bool = False,
+                    extras: Optional[Dict[str, np.ndarray]] = None) -> List[int]:
     """Single-request reference path (the oracle for engine equivalence).
 
-    Runs with bucketing OFF — exact-length prefill — so equivalence tests
-    against a bucketed engine actually exercise the padded-prefill + replay
-    path instead of comparing it to itself."""
+    Runs with bucketing OFF — exact-length prefill — and a DENSE cache by
+    default, so equivalence tests against a bucketed/paged engine actually
+    exercise the padded-prefill + replay and page-table paths instead of
+    comparing them to themselves."""
     eng = ServeEngine(model, n_slots=1, max_len=max_len, params=params,
-                      bucket_prompts=False)
-    req = eng.submit(prompt, max_new_tokens=n_tokens)
+                      bucket_prompts=False, paged=paged)
+    req = eng.submit(prompt, max_new_tokens=n_tokens, extras=extras)
     eng.run_to_completion()
     return req.out_tokens

@@ -1,5 +1,6 @@
 """Pallas decode-attention kernel vs the pure-jnp reference (interpret mode):
-GQA grouping, ragged per-sequence kv_len, sliding windows, storage dtypes."""
+GQA grouping, ragged per-sequence kv_len, sliding windows, storage dtypes,
+and the paged page-table gather path."""
 
 import jax
 import jax.numpy as jnp
@@ -16,6 +17,21 @@ def _inputs(seed, b, kv, g, d, smax, dtype=jnp.float32):
     v = jax.random.normal(ks[2], (b, smax, kv, d), jnp.float32).astype(dtype)
     kv_len = jax.random.randint(ks[3], (b,), 1, smax + 1)
     return q, k, v, kv_len
+
+
+def _paged_inputs(seed, b, kv, g, d, ps, pages_per_seq, dtype=jnp.float32):
+    """Page pools + a shuffled (non-identity) page table, and the dense
+    per-sequence view obtained by gathering the table — the exactness oracle."""
+    n_pages = 1 + b * pages_per_seq         # page 0 reserved as null
+    ks = jax.random.split(jax.random.key(seed), 4)
+    q = jax.random.normal(ks[0], (b, 1, kv, g, d), jnp.float32).astype(dtype)
+    pk = jax.random.normal(ks[1], (n_pages, ps, kv, d), jnp.float32).astype(dtype)
+    pv = jax.random.normal(ks[2], (n_pages, ps, kv, d), jnp.float32).astype(dtype)
+    perm = jax.random.permutation(ks[3], jnp.arange(1, n_pages))
+    pt = perm.reshape(b, pages_per_seq).astype(jnp.int32)
+    kd = pk[pt].reshape(b, pages_per_seq * ps, kv, d)
+    vd = pv[pt].reshape(b, pages_per_seq * ps, kv, d)
+    return q, pk, pv, pt, kd, vd
 
 
 @pytest.mark.parametrize("b,kv,g,d,smax", [
@@ -74,6 +90,85 @@ def test_empty_sequence_yields_zeros():
     pal = pallas_decode(q, k, v, kv_len, interpret=True)
     assert jnp.all(ref[0] == 0.0) and jnp.all(pal[0] == 0.0)
     assert jnp.max(jnp.abs(ref[1] - pal[1])) < 2e-5
+
+
+@pytest.mark.parametrize("window,block_k", [
+    (300, 64),    # kv_len can be < window: full prefix attends
+    (40, 32),     # window not a multiple of block_k: partial leading tile
+    (64, 128),    # window smaller than one block
+])
+def test_sliding_window_edges(window, block_k):
+    q, k, v, _ = _inputs(13, 2, 2, 2, 32, 256)
+    kv_len = jnp.asarray([17, 256], jnp.int32)    # < window and == smax
+    want = decode_attention(q, k, v, kv_len, window=window, impl="reference")
+    got = pallas_decode(q, k, v, kv_len, window=window, block_k=block_k,
+                        interpret=True)
+    assert jnp.max(jnp.abs(want - got)) < 2e-5
+
+
+def test_empty_sequence_with_window_yields_zeros():
+    """kv_len == 0 under a sliding window must still emit zeros, not the
+    softmax of an all-masked row."""
+    q, k, v, _ = _inputs(15, 2, 1, 2, 32, 128)
+    kv_len = jnp.asarray([0, 100], jnp.int32)
+    ref = decode_attention(q, k, v, kv_len, window=32, impl="reference")
+    pal = pallas_decode(q, k, v, kv_len, window=32, interpret=True)
+    assert jnp.all(ref[0] == 0.0) and jnp.all(pal[0] == 0.0)
+    assert jnp.max(jnp.abs(ref[1] - pal[1])) < 2e-5
+
+
+# ------------------------------------------------------------------ paged path
+def test_paged_matches_dense_gather():
+    """Kernel reading through a shuffled page table == the same rows laid out
+    densely."""
+    q, pk, pv, pt, kd, vd = _paged_inputs(21, 2, 2, 4, 32, ps=16,
+                                          pages_per_seq=4)
+    kv_len = jnp.asarray([37, 61], jnp.int32)
+    want = decode_attention(q, kd, vd, kv_len, impl="reference")
+    ref = decode_attention(q, pk, pv, kv_len, page_table=pt, impl="reference")
+    pal = pallas_decode(q, pk, pv, kv_len, page_table=pt, interpret=True)
+    assert jnp.max(jnp.abs(want - ref)) < 2e-5
+    assert jnp.max(jnp.abs(want - pal)) < 2e-5
+
+
+def test_paged_null_pages_are_dead():
+    """Table entries past kv_len may point anywhere (the engine points them
+    at the null page); they must not contribute."""
+    q, pk, pv, pt, kd, vd = _paged_inputs(23, 2, 1, 2, 32, ps=16,
+                                          pages_per_seq=4)
+    kv_len = jnp.asarray([16, 33], jnp.int32)
+    # kill every entry beyond the live prefix: seq0 keeps page 0 only,
+    # seq1 keeps three pages
+    pt_null = pt.at[0, 1:].set(0).at[1, 3:].set(0)
+    want = decode_attention(q, kd, vd, kv_len, impl="reference")
+    pal = pallas_decode(q, pk, pv, kv_len, page_table=pt_null, interpret=True)
+    ref = decode_attention(q, pk, pv, kv_len, page_table=pt_null,
+                           impl="reference")
+    assert jnp.max(jnp.abs(want - pal)) < 2e-5
+    assert jnp.max(jnp.abs(want - ref)) < 2e-5
+
+
+@pytest.mark.parametrize("window", [24, 40])
+def test_paged_sliding_window(window):
+    q, pk, pv, pt, kd, vd = _paged_inputs(25, 2, 2, 2, 32, ps=16,
+                                          pages_per_seq=4)
+    kv_len = jnp.asarray([29, 64], jnp.int32)
+    want = decode_attention(q, kd, vd, kv_len, window=window,
+                            impl="reference")
+    pal = pallas_decode(q, pk, pv, kv_len, page_table=pt, window=window,
+                        block_k=8, interpret=True)
+    assert jnp.max(jnp.abs(want - pal)) < 2e-5
+
+
+def test_paged_bf16_pool_stays_in_storage_dtype():
+    q, pk, pv, pt, kd, vd = _paged_inputs(27, 2, 2, 2, 32, ps=16,
+                                          pages_per_seq=2, dtype=jnp.bfloat16)
+    kv_len = jnp.asarray([9, 30], jnp.int32)
+    want = decode_attention(q, kd, vd, kv_len, impl="reference")
+    got = pallas_decode(q, pk, pv, kv_len, page_table=pt, interpret=True)
+    assert got.dtype == jnp.bfloat16
+    assert jnp.max(jnp.abs(want.astype(jnp.float32)
+                           - got.astype(jnp.float32))) < 2e-2
 
 
 def test_dispatch_stays_reference_off_tpu():

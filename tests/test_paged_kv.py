@@ -1,0 +1,251 @@
+"""Paged KV cache: the page-pool engine must be token-exact against the
+dense single-request oracle at prompt lengths spanning page boundaries, for
+every attention family — plus the serve-engine correctness fixes that ride
+along (capacity off-by-one, idle-slot drift, stats summary)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import ExecOptions, build_model
+from repro.serve.engine import EngineStats, ServeEngine, generate_greedy
+
+
+@pytest.fixture(scope="module")
+def smol():
+    cfg = get_config("smollm-360m").smoke()
+    model = build_model(cfg, ExecOptions(attn_impl="reference", ce_chunk=32))
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _prompt(seed, n, vocab=512):
+    return np.asarray(
+        jax.random.randint(jax.random.key(seed), (n,), 0, vocab), np.int32)
+
+
+# ---------------------------------------------------------------- equivalence
+def test_paged_matches_dense_oracle_across_page_boundaries(smol):
+    """Prompt lengths straddling page edges (page_size=8), including
+    prompt_len == page_size, must match the dense-oracle tokens exactly."""
+    cfg, model, params = smol
+    lengths = (7, 8, 9, 15, 16, 17, 31)
+    solo = {n: generate_greedy(model, params, _prompt(n, n), n_tokens=4,
+                               max_len=64)
+            for n in lengths}
+    eng = ServeEngine(model, n_slots=2, max_len=64, params=params,
+                      page_size=8)
+    assert eng.paged
+    reqs = {n: eng.submit(_prompt(n, n), max_new_tokens=4) for n in lengths}
+    eng.run_to_completion()
+    for n in lengths:
+        assert reqs[n].done
+        assert reqs[n].out_tokens == solo[n], (n, reqs[n].out_tokens, solo[n])
+
+
+def test_prompt_len_equals_max_len(smol):
+    """A prompt that fills the cache exactly still yields one token (the
+    replayed last-prompt position) and matches the oracle."""
+    cfg, model, params = smol
+    p = _prompt(99, 32)
+    solo = generate_greedy(model, params, p, n_tokens=4, max_len=32)
+    eng = ServeEngine(model, n_slots=1, max_len=32, params=params,
+                      page_size=8)
+    r = eng.submit(p, max_new_tokens=4)
+    eng.run_to_completion()
+    assert r.done
+    assert len(r.out_tokens) == 1
+    assert r.out_tokens == solo
+
+
+@pytest.mark.parametrize("arch", ["qwen2-moe-a2.7b", "llava-next-mistral-7b"])
+def test_paged_families_match_oracle(arch):
+    """moe and vlm ride the transformer decode path; the paged pool must stay
+    token-exact for them too."""
+    cfg = get_config(arch).smoke()
+    model = build_model(cfg, ExecOptions(attn_impl="reference", ce_chunk=32))
+    params = model.init(jax.random.key(1))
+    solo = {n: generate_greedy(model, params, _prompt(n, n), n_tokens=3,
+                               max_len=64)
+            for n in (7, 9)}
+    eng = ServeEngine(model, n_slots=2, max_len=64, params=params,
+                      page_size=8)
+    reqs = {n: eng.submit(_prompt(n, n), max_new_tokens=3) for n in (7, 9)}
+    eng.run_to_completion()
+    for n, r in reqs.items():
+        assert r.out_tokens == solo[n], (n, r.out_tokens, solo[n])
+
+
+def test_paged_encdec_matches_oracle():
+    """encdec: paged decoder self-attention KV + dense cross K/V; frames ride
+    the new `extras=` prefill input."""
+    cfg = get_config("seamless-m4t-medium").smoke()
+    model = build_model(cfg, ExecOptions(attn_impl="reference", ce_chunk=32))
+    params = model.init(jax.random.key(2))
+    frames = np.asarray(jax.random.normal(
+        jax.random.key(9), (cfg.cross_len, cfg.d_model)), np.float32)
+    p = _prompt(4, 9)
+    solo = generate_greedy(model, params, p, n_tokens=4, max_len=64,
+                           extras={"frames": frames})
+    eng = ServeEngine(model, n_slots=2, max_len=64, params=params,
+                      page_size=8)
+    r = eng.submit(p, max_new_tokens=4, extras={"frames": frames})
+    eng.run_to_completion()
+    assert r.out_tokens == solo, (r.out_tokens, solo)
+
+
+def test_pool_smaller_than_dense_worst_case(smol):
+    """A pool sized well below n_slots × max_len must serve the whole queue
+    exactly (admission control blocks on the free list) and report a peak
+    page usage within the pool."""
+    cfg, model, params = smol
+    # dense worst case would be 2 slots × 8 pages; give the pool 7 + null
+    eng = ServeEngine(model, n_slots=2, max_len=64, params=params,
+                      page_size=8, n_pages=8)
+    solo = {}
+    reqs = {}
+    for n in (6, 10, 14, 18):
+        solo[n] = generate_greedy(model, params, _prompt(n, n), n_tokens=4,
+                                  max_len=64)
+        reqs[n] = eng.submit(_prompt(n, n), max_new_tokens=4)
+    stats = eng.run_to_completion()
+    for n, r in reqs.items():
+        assert r.done
+        assert r.out_tokens == solo[n], (n, r.out_tokens, solo[n])
+    assert stats.peak_pages_in_use <= 7
+    assert stats.pages_in_use == 0          # everything returned
+    assert len(eng._free_pages) == 7
+
+
+def test_auto_page_size_adapts_to_max_len(smol):
+    """Auto (paged=None) engines must accept any max_len the dense engine
+    took: page_size shrinks to fit, or falls back to dense when pages would
+    degenerate; explicit paged=True with a misfit raises."""
+    cfg, model, params = smol
+    eng = ServeEngine(model, n_slots=1, max_len=48, params=params)  # 48 % 32 != 0
+    assert eng.paged and eng.page_size == 16
+    r = eng.submit(_prompt(2, 9), max_new_tokens=3)
+    eng.run_to_completion()
+    assert r.out_tokens == generate_greedy(model, params, _prompt(2, 9),
+                                           n_tokens=3, max_len=48)
+    assert not ServeEngine(model, n_slots=1, max_len=100, params=params).paged
+    with pytest.raises(ValueError):
+        ServeEngine(model, n_slots=1, max_len=100, params=params, paged=True)
+
+
+def test_oversized_request_rejected(smol):
+    cfg, model, params = smol
+    eng = ServeEngine(model, n_slots=1, max_len=64, params=params,
+                      page_size=8, n_pages=4)   # 3 usable pages = 24 rows
+    with pytest.raises(ValueError):
+        eng.submit(_prompt(0, 30), max_new_tokens=16)
+
+
+# ----------------------------------------------------- capacity off-by-one
+def test_capacity_fills_cache_exactly(smol):
+    """Retirement happens when the NEXT write would overflow — the engine
+    must emit max_len - plen + 1 tokens (not one fewer), identically on the
+    replay (bucketed) and non-replay paths, and match the oracle."""
+    cfg, model, params = smol
+    max_len = 16
+    for plen in (8, 15, 16):
+        want_n = max_len - plen + 1
+        p = _prompt(plen, plen)
+        solo = generate_greedy(model, params, p, n_tokens=32, max_len=max_len)
+        assert len(solo) == want_n, (plen, len(solo))
+        eng = ServeEngine(model, n_slots=1, max_len=max_len, params=params,
+                          page_size=8)
+        r = eng.submit(p, max_new_tokens=32)
+        eng.run_to_completion()
+        assert len(r.out_tokens) == want_n, (plen, len(r.out_tokens))
+        assert r.out_tokens == solo
+        # dense engine, same capacity semantics
+        engd = ServeEngine(model, n_slots=1, max_len=max_len, params=params,
+                           paged=False)
+        rd = engd.submit(p, max_new_tokens=32)
+        engd.run_to_completion()
+        assert rd.out_tokens == solo
+
+
+def test_single_token_budget_consistent_across_paths(smol):
+    """max_new_tokens=1 must yield exactly one token on both the replay
+    (bucketed) and non-replay admission paths."""
+    cfg, model, params = smol
+    p = _prompt(3, 9)
+    for kw in (dict(), dict(bucket_prompts=False), dict(paged=False)):
+        eng = ServeEngine(model, n_slots=1, max_len=64, params=params, **kw)
+        r = eng.submit(p, max_new_tokens=1)
+        eng.run_to_completion()
+        assert r.done and len(r.out_tokens) == 1, (kw, r.out_tokens)
+
+
+# ------------------------------------------------------------ idle-slot drift
+def test_idle_slot_tick_is_noop(smol):
+    """After a slot retires, further engine ticks must not advance its
+    stream position or perturb the surviving request's tokens."""
+    cfg, model, params = smol
+    solo = generate_greedy(model, params, _prompt(5, 10), n_tokens=20,
+                           max_len=64)
+    eng = ServeEngine(model, n_slots=2, max_len=64, params=params,
+                      page_size=8)
+    r_long = eng.submit(_prompt(5, 10), max_new_tokens=20)
+    r_short = eng.submit(_prompt(6, 6), max_new_tokens=2)
+    idle_pos = []
+    idle_table = []
+    while not r_long.done:
+        eng.step()
+        if r_short.done and not r_long.done:
+            idle_pos.append(int(np.asarray(eng._cache["pos"])[1]))
+            idle_table.append(np.asarray(eng._cache["page_table"])[1].copy())
+    assert r_long.out_tokens == solo
+    assert len(set(idle_pos)) == 1, idle_pos          # pos frozen, no drift
+    assert all((t == 0).all() for t in idle_table)    # row points at null page
+
+
+def test_idle_slot_never_corrupts_pool_pages(smol):
+    """Freed pages get re-issued to new requests while the freed slot keeps
+    ticking; its masked writes must land on the null page, never on the
+    reallocated pages."""
+    cfg, model, params = smol
+    eng = ServeEngine(model, n_slots=2, max_len=64, params=params,
+                      page_size=8, n_pages=6)        # tight pool forces reuse
+    solo = {}
+    reqs = {}
+    for i, n in enumerate((6, 9, 12, 7)):
+        solo[(i, n)] = generate_greedy(model, params, _prompt(20 + i, n),
+                                       n_tokens=5, max_len=64)
+        reqs[(i, n)] = eng.submit(_prompt(20 + i, n), max_new_tokens=5)
+    eng.run_to_completion()
+    for key, r in reqs.items():
+        assert r.out_tokens == solo[key], (key, r.out_tokens, solo[key])
+
+
+# ------------------------------------------------------------------- summary
+def test_summary_always_emits_mean_occupancy():
+    assert EngineStats().summary()["mean_occupancy"] == 0.0
+    s = EngineStats(decode_steps=4, occupancy_sum=2.0)
+    assert s.summary()["mean_occupancy"] == 0.5
+
+
+def test_prefill_only_engine_summary(smol):
+    """An engine that admitted but never decoded must still summarize."""
+    cfg, model, params = smol
+    eng = ServeEngine(model, n_slots=1, max_len=64, params=params,
+                      page_size=8)
+    eng.submit(_prompt(1, 5), max_new_tokens=2)
+    eng._admit()                 # prefill happened, zero decode steps
+    d = eng.stats.summary()
+    assert d["mean_occupancy"] == 0.0 and d["prefills"] == 1
+
+
+# ---------------------------------------------------------------- memory math
+def test_paged_cache_smaller_than_dense(smol):
+    """The whole point: pool bytes scale with n_pages, not slots × max_len."""
+    cfg, model, params = smol
+    dense = ServeEngine(model, n_slots=4, max_len=64, params=params,
+                        paged=False)
+    paged = ServeEngine(model, n_slots=4, max_len=64, params=params,
+                        page_size=8, n_pages=9)      # 64 usable rows vs 256
+    assert paged.kv_cache_bytes() < 0.4 * dense.kv_cache_bytes()
