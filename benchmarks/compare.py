@@ -5,11 +5,18 @@ Run: python -m benchmarks.compare --baseline <dir> --new <dir> [--tol 0.10]
 Each BENCH_<section>.json is a flat {metric: number} dict (benchmarks/run.py
 --json). Only metrics named in GATES are gated — everything else is
 informational (absolute latencies wobble on shared CI runners; throughputs
-and wall-times are what the roadmap tracks PR-over-PR). A gated metric fails
-when it regresses by more than --tol in its bad direction:
+and wall-times are what the roadmap tracks PR-over-PR). Each gated metric
+carries its OWN tolerance — tight on deterministic same-run ratios (memory
+shrinks are exact byte math; a 5% drift there is a real layout change),
+loose on wall-clock metrics that inherit shared-runner scheduler noise. A
+gated metric fails when it regresses by more than its tolerance in its bad
+direction:
 
     higher-is-better (tokens/s)  : new < (1 - tol) * baseline
     lower-is-better  (wall-time) : new > (1 + tol) * baseline
+
+`--tol X` overrides every per-metric tolerance (escape hatch for local
+comparisons across very different machines); omit it to use the table.
 
 Metrics present only in the new snapshot pass (they become the next
 baseline); gated metrics missing from the new snapshot fail — a deleted
@@ -20,7 +27,8 @@ baseline was captured on the same runner class as the new run, so they are
 enforced only when the snapshots' `env_id` fingerprints match (they report
 informationally otherwise) — refresh the committed BENCH_*.json from a CI
 run's bench-json artifact to arm them in CI. Same-run ratios
-(bucketing_speedup, paged_kv_shrink) cancel machine speed and are enforced
+(bucketing_speedup, paged_kv_shrink, int8_kv_shrink,
+int8_vs_f32_decode_ratio) cancel machine speed and are enforced
 unconditionally.
 """
 
@@ -31,25 +39,44 @@ import json
 import pathlib
 import sys
 
-# section -> {metric: 'higher' | 'lower'}
+# section -> {metric: ('higher' | 'lower', tolerance)}
 GATES = {
     "serve": {
-        "fast_tokens_per_s": "higher",
-        "decode_tokens_per_s": "higher",
-        "paged_longctx_tokens_per_s": "higher",
-        "paged_kv_shrink": "lower",          # pool / dense memory ratio
-        "bucketing_speedup": "higher",       # same-run ratio, machine-free
+        # wall-clock tokens/s: shared runners swing these ±20% run-to-run
+        # even with the bench's best-window measurement — gate loosely
+        "fast_tokens_per_s": ("higher", 0.25),
+        "decode_tokens_per_s": ("higher", 0.25),
+        "paged_longctx_tokens_per_s": ("higher", 0.25),
+        "int8_decode_tokens_per_s": ("higher", 0.25),
+        "paged_kv_shrink": ("lower", 0.05),   # pool / dense memory ratio:
+        "int8_kv_shrink": ("lower", 0.05),    # deterministic byte math
+        # same-run ratio, machine-free in expectation — but its two legs
+        # include compile time, so shared-runner noise still moves it ±13%
+        "bucketing_speedup": ("higher", 0.15),
+        # same-run but dequant work makes the CPU reference path noisy; the
+        # TPU kernels are the real datapath, so gate loosely here
+        "int8_vs_f32_decode_ratio": ("higher", 0.35),
+        # greedy int8-vs-f32 prefix divergence: deterministic on a fixed
+        # runner/jax build (env-gated), drifts only if quantization quality
+        # actually moves
+        "int8_token_divergence": ("lower", 0.25),
     },
     "soc": {
-        "sweep_wall_s": "lower",
+        "sweep_wall_s": ("lower", 0.20),
     },
     "kernels": {
-        "decode_attention_us": "lower",
+        "decode_attention_us": ("lower", 0.25),
     },
 }
 
 # machine-speed-free metrics: enforced even across runner classes
-RATIO_METRICS = {"paged_kv_shrink", "bucketing_speedup"}
+RATIO_METRICS = {"paged_kv_shrink", "bucketing_speedup", "int8_kv_shrink",
+                 "int8_vs_f32_decode_ratio"}
+
+# absolute slack on top of the fractional tolerance, for metrics whose
+# baseline can legitimately be 0.0 (a multiplicative gate at b=0 would fail
+# on ANY nonzero value): divergence may move by this much regardless of b
+ABS_SLACK = {"int8_token_divergence": 0.05}
 
 
 def load(d: pathlib.Path, section: str):
@@ -61,8 +88,9 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", required=True, type=pathlib.Path)
     ap.add_argument("--new", required=True, type=pathlib.Path)
-    ap.add_argument("--tol", type=float, default=0.10,
-                    help="allowed fractional regression (default 10%%)")
+    ap.add_argument("--tol", type=float, default=None,
+                    help="override every per-metric tolerance (default: use "
+                         "the GATES table)")
     args = ap.parse_args()
 
     failures = []
@@ -77,7 +105,9 @@ def main() -> int:
             continue
         same_env = base.get("env_id") is not None \
             and base.get("env_id") == new.get("env_id")
-        for metric, direction in gates.items():
+        for metric, (direction, tol) in gates.items():
+            if args.tol is not None:
+                tol = args.tol
             if metric not in base:
                 print(f"compare,{section},{metric},new_metric,pass")
                 continue
@@ -85,21 +115,21 @@ def main() -> int:
                 failures.append(f"{section}.{metric}: missing from new run")
                 continue
             b, n = float(base[metric]), float(new[metric])
+            slack = ABS_SLACK.get(metric, 0.0)
             if direction == "higher":
-                ok = n >= (1.0 - args.tol) * b
-                delta = (n / b - 1.0) if b else 0.0
+                ok = n >= (1.0 - tol) * b - slack
             else:
-                ok = n <= (1.0 + args.tol) * b
-                delta = (n / b - 1.0) if b else 0.0
+                ok = n <= (1.0 + tol) * b + slack
+            delta_s = f"{n / b - 1.0:+.1%}" if b else f"{n - b:+.4g}abs"
             enforced = same_env or metric in RATIO_METRICS
             status = "pass" if ok else (
                 "FAIL" if enforced else "env_mismatch_info")
             print(f"compare,{section},{metric},base={b:.4g},new={n:.4g},"
-                  f"delta={delta:+.1%},{status}")
+                  f"delta={delta_s},tol={tol:.0%},{status}")
             if not ok and enforced:
                 failures.append(
                     f"{section}.{metric}: {b:.4g} -> {n:.4g} "
-                    f"({delta:+.1%}, {direction}-is-better, tol {args.tol:.0%})")
+                    f"({delta_s}, {direction}-is-better, tol {tol:.0%})")
 
     if failures:
         print("\nREGRESSIONS:\n  " + "\n  ".join(failures))

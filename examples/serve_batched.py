@@ -1,7 +1,8 @@
 """Batched serving example — the paper's "AI-optimized" runtime configuration.
 
 Continuous batching over a small model with per-request latency stats, plus
-the int8 weight-only path (the 15 TOPS INT8 NPU datapath) for comparison.
+the end-to-end INT8 decode path (weight-only int8 projections + int8 paged
+KV pool — the 15 TOPS INT8 NPU datapath) for comparison.
 
   PYTHONPATH=src python examples/serve_batched.py
 """
@@ -12,27 +13,16 @@ import time
 sys.path.insert(0, "src")
 
 import jax                                   # noqa: E402
-import jax.numpy as jnp                      # noqa: E402
 import numpy as np                           # noqa: E402
 
 from repro.configs import get_config         # noqa: E402
-from repro.kernels import ops as kops        # noqa: E402
 from repro.models import ExecOptions, build_model  # noqa: E402
 from repro.serve.engine import ServeEngine   # noqa: E402
 
 
-def quantize_params_int8(params):
-    """Weight-only int8 QDQ on every big matmul weight (NPU numerics)."""
-    def qdq(p):
-        if p.ndim == 2 and min(p.shape) >= 64:
-            q, s = kops.quantize_weight(p.astype(jnp.float32))
-            return (q.astype(jnp.float32) * s[None, :]).astype(p.dtype)
-        return p
-    return jax.tree.map(qdq, params)
-
-
-def run(params, model, label):
-    eng = ServeEngine(model, n_slots=4, max_len=96, params=params)
+def run(params, model, label, **engine_kw):
+    eng = ServeEngine(model, n_slots=4, max_len=96, params=params,
+                      **engine_kw)
     rng = np.random.default_rng(0)
     reqs = []
     for i in range(10):
@@ -48,6 +38,7 @@ def run(params, model, label):
           f"decode throughput {stats.tokens_out / wall:.1f} tok/s  "
           f"mean slots busy {stats.occupancy_sum / max(stats.decode_steps,1):.2f}")
     print(f"[{label}] sample output: {reqs[0].out_tokens}")
+    print(f"[{label}] kv cache {eng.kv_cache_bytes() / 2**20:.2f} MiB")
     return reqs
 
 
@@ -57,8 +48,9 @@ def main():
     params = model.init(jax.random.key(0))
     print(f"model: {cfg.name} ({cfg.n_layers}L d={cfg.d_model}) — "
           f"continuous batching, 4 slots, 10 requests")
-    a = run(params, model, "bf16/f32 weights")
-    b = run(quantize_params_int8(params), model, "int8 weights (NPU path)")
+    a = run(params, model, "f32 weights + f32 KV")
+    b = run(params, model, "int8 weights + int8 KV (NPU path)",
+            wdtype="int8", kv_dtype="int8")
     same = sum(x.out_tokens == y.out_tokens for x, y in zip(a, b))
     print(f"\nint8 vs full precision: {same}/10 requests decode identically "
           f"(greedy; small models amplify quantization flips)")

@@ -28,6 +28,16 @@ unchanged — a dead logical page costs one skipped `pl.when` body, and the
 serving engine points unmapped table entries at a reserved null page so the
 prefetch DMA always has a valid source.
 
+INT8 mode (`k_scale=`/`v_scale=`): the caches/pools store int8 rows and the
+scales hold one f16 factor per (position, kv head) — cache shape minus D.
+The scale tiles ride as VMEM operands right next to their K/V tiles (same
+index_map, so the paged gather walks the page table once for both), and
+dequant `int8 → f32 × scale` is fused into the tile load feeding the MXU —
+the cache crosses HBM at 1 byte/element + 2/D scale overhead, which is what
+halves decode HBM traffic vs the bf16 pool (the tokens/s bound at batch ≤
+n_slots). The paper's NPUs are 15 TOPS INT8 (§II); this is the KV half of
+that datapath (kernels/int8_matmul is the weight half).
+
 `interpret=True` runs the same kernel on CPU — the tests' numerics oracle is
 `models.attention`'s reference path.
 """
@@ -44,8 +54,12 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels.pltpu_compat import NEG_INF, CompilerParams
 
 
-def _kernel(kvlen_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
-            scale: float, window: int, block_k: int, n_k: int):
+def _body(kvlen_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
+          m_ref, l_ref, acc_ref, *, scale: float, window: int, block_k: int,
+          n_k: int):
+    """Online-softmax tile update, shared by all four (paged × int8) kernel
+    layouts — position-based, so it is blind to where the tile bytes came
+    from and whether they were dequantized on the way in."""
     b = pl.program_id(0)
     ik = pl.program_id(2)
     kvlen = kvlen_ref[b]
@@ -66,6 +80,8 @@ def _kernel(kvlen_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     def _tile():
         q = q_ref[0, 0].astype(jnp.float32)             # (G, D)
         k = k_ref[0, :, 0, :].astype(jnp.float32)       # (block_k, D)
+        if ks_ref is not None:                          # fused dequant
+            k = k * ks_ref[0, :, 0].astype(jnp.float32)[:, None]
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32) * scale  # (G, block_k)
@@ -82,6 +98,8 @@ def _kernel(kvlen_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
         m_ref[...] = m_new
         v = v_ref[0, :, 0, :].astype(jnp.float32)       # (block_k, D)
+        if vs_ref is not None:
+            v = v * vs_ref[0, :, 0].astype(jnp.float32)[:, None]
         acc_ref[...] = acc_ref[...] * corr + jax.lax.dot(
             p, v, preferred_element_type=jnp.float32)
 
@@ -91,18 +109,30 @@ def _kernel(kvlen_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
                        / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
 
 
-def _kernel_paged(kvlen_ref, pt_ref, q_ref, k_ref, v_ref, o_ref,
-                  m_ref, l_ref, acc_ref, **kw):
-    # The page table is consumed by the K/V index_maps (the gather happens in
-    # the prefetch DMA); the online-softmax body is position-based and
-    # layout-blind, so it is shared with the dense kernel verbatim.
-    _kernel(kvlen_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
-            **kw)
+def _make_kernel(*, paged: bool, quantized: bool, **kw):
+    """Ref order: scalar-prefetch (kvlen[, page_table]), inputs
+    (q, k, v[, ks, vs]), output (o), scratch (m, l, acc). The page table is
+    consumed by the K/V (and scale) index_maps — the gather happens in the
+    prefetch DMA — so the body never sees it."""
+
+    def kernel(*refs):
+        refs = list(refs)
+        kvlen_ref = refs.pop(0)
+        if paged:
+            refs.pop(0)                     # pt_ref: index_map-only
+        q_ref, k_ref, v_ref = refs[0], refs[1], refs[2]
+        ks_ref, vs_ref = (refs[3], refs[4]) if quantized else (None, None)
+        o_ref, m_ref, l_ref, acc_ref = refs[-4], refs[-3], refs[-2], refs[-1]
+        _body(kvlen_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
+              m_ref, l_ref, acc_ref, **kw)
+
+    return kernel
 
 
 @functools.partial(jax.jit, static_argnames=(
     "window", "scale", "block_k", "interpret"))
 def decode_attention(q, k_cache, v_cache, kv_len, *, page_table=None,
+                     k_scale=None, v_scale=None,
                      window: int = 0, scale=None, block_k: int = 128,
                      interpret: bool = False):
     """Single-position attention against a ragged-valid KV cache.
@@ -117,6 +147,10 @@ def decode_attention(q, k_cache, v_cache, kv_len, *, page_table=None,
       page_table: optional (B, pages_per_seq) int32 — physical page of each
                 sequence's logical page; logical depth is pages_per_seq ×
                 page_size. Unmapped entries must point at a valid (null) page.
+      k_scale/v_scale: optional per-row dequant scales for int8 caches —
+                cache shape minus the D dim ((B, Smax, KV) dense,
+                (n_pages, page_size, KV) paged). Dequant is fused into the
+                tile loads; both must be given together.
       window:   sliding-window size (0 = full attention over the valid prefix).
       scale:    logit scale; defaults to D**-0.5.
 
@@ -124,6 +158,8 @@ def decode_attention(q, k_cache, v_cache, kv_len, *, page_table=None,
     """
     b, sq, nkv, g, d = q.shape
     assert sq == 1, f"decode kernel takes one query position, got {sq}"
+    assert (k_scale is None) == (v_scale is None)
+    quantized = k_scale is not None
     scale = float(scale if scale is not None else d ** -0.5)
     kv_len = jnp.broadcast_to(
         jnp.asarray(kv_len, jnp.int32).reshape(-1), (b,))
@@ -143,22 +179,29 @@ def decode_attention(q, k_cache, v_cache, kv_len, *, page_table=None,
         n_k = smax // block_k
         kv_spec = pl.BlockSpec((1, block_k, 1, d),
                                lambda ib, ih, ik, *_: (ib, ik, ih, 0))
+        in_specs = [q_spec, kv_spec, kv_spec]
+        operands = [qf, k_cache, v_cache]
+        if quantized:
+            s_spec = pl.BlockSpec((1, block_k, 1),
+                                  lambda ib, ih, ik, *_: (ib, ik, ih))
+            in_specs += [s_spec, s_spec]
+            operands += [k_scale, v_scale]
         grid_spec = pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=(b, nkv, n_k),
-            in_specs=[q_spec, kv_spec, kv_spec],
+            in_specs=in_specs,
             out_specs=out_spec,
             scratch_shapes=scratch_shapes,
         )
         out = pl.pallas_call(
-            functools.partial(_kernel, scale=scale, window=window,
-                              block_k=block_k, n_k=n_k),
+            _make_kernel(paged=False, quantized=quantized, scale=scale,
+                         window=window, block_k=block_k, n_k=n_k),
             grid_spec=grid_spec,
             out_shape=jax.ShapeDtypeStruct((b, nkv, g, d), q.dtype),
             interpret=interpret,
             compiler_params=CompilerParams(
                 dimension_semantics=("parallel", "parallel", "arbitrary")),
-        )(kv_len, qf, k_cache, v_cache)
+        )(kv_len, qf, *operands[1:])
         return out.reshape(b, 1, nkv, g, d)
 
     # ------------------------------------------------------------- paged path
@@ -175,21 +218,31 @@ def decode_attention(q, k_cache, v_cache, kv_len, *, page_table=None,
         # physical page of this tile's logical page; row offset in block units
         return pt_ref[ib, ik // bpp], ik % bpp, ih, 0
 
+    def s_map(ib, ih, ik, kvlen_ref, pt_ref):
+        # the scale tile gathers through the same table entry as its K/V tile
+        return pt_ref[ib, ik // bpp], ik % bpp, ih
+
     kv_spec = pl.BlockSpec((1, block_k, 1, d), kv_map)
+    in_specs = [q_spec, kv_spec, kv_spec]
+    operands = [k_cache, v_cache]
+    if quantized:
+        s_spec = pl.BlockSpec((1, block_k, 1), s_map)
+        in_specs += [s_spec, s_spec]
+        operands += [k_scale, v_scale]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(b, nkv, n_k),
-        in_specs=[q_spec, kv_spec, kv_spec],
+        in_specs=in_specs,
         out_specs=out_spec,
         scratch_shapes=scratch_shapes,
     )
     out = pl.pallas_call(
-        functools.partial(_kernel_paged, scale=scale, window=window,
-                          block_k=block_k, n_k=n_k),
+        _make_kernel(paged=True, quantized=quantized, scale=scale,
+                     window=window, block_k=block_k, n_k=n_k),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, nkv, g, d), q.dtype),
         interpret=interpret,
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
-    )(kv_len, page_table, qf, k_cache, v_cache)
+    )(kv_len, page_table, qf, *operands)
     return out.reshape(b, 1, nkv, g, d)

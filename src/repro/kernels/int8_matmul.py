@@ -23,6 +23,18 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.pltpu_compat import CompilerParams
 
+# default (bm, bn, bk) — dispatch predicates (models/quantized.qeinsum) use
+# these to decide kernel eligibility, so they live here with the kernel
+DEFAULT_BLOCKS = (128, 128, 512)
+
+
+def blocks_fit(m: int, n: int, k: int) -> bool:
+    """True iff (m, n, k) tile evenly under the clamped default blocks
+    (bm/bn/bk = min(default, dim)) — the kernel's shape contract."""
+    bm, bn, bk = DEFAULT_BLOCKS
+    return (m % min(bm, m) == 0 and n % min(bn, n) == 0
+            and k % min(bk, k) == 0)
+
 
 def _kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *, n_k: int):
     @pl.when(pl.program_id(2) == 0)
@@ -40,7 +52,8 @@ def _kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *, n_k: int):
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
 def int8_matmul(x: jnp.ndarray, w_q: jnp.ndarray, scales: jnp.ndarray,
-                *, bm: int = 128, bn: int = 128, bk: int = 512,
+                *, bm: int = DEFAULT_BLOCKS[0], bn: int = DEFAULT_BLOCKS[1],
+                bk: int = DEFAULT_BLOCKS[2],
                 interpret: bool = False) -> jnp.ndarray:
     """x (M,K) bf16/f32 · w_q (K,N) int8 · scales (N,) f32 → (M,N) x.dtype."""
     m, k = x.shape

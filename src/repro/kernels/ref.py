@@ -13,13 +13,23 @@ def int8_matmul_ref(x: jnp.ndarray, w_q: jnp.ndarray,
     return (acc * scales[None, :]).astype(x.dtype)
 
 
+def quantize_channelwise_ref(w: jnp.ndarray, axes):
+    """Symmetric int8 over `axes` (the contraction dims), keepdims f32 scale.
+
+    THE weight quantizer: the serving wdtype='int8' pass
+    (models/quantized.quantize_params) and the 2-D QDQ path below both call
+    this, so a numerics tweak (clip range, scale floor) lands everywhere."""
+    wf = w.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(wf), axis=axes, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(wf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
 def quantize_weight_ref(w: jnp.ndarray):
     """Symmetric per-output-channel int8 weight quantization. w (K,N)."""
-    absmax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=0)
-    scale = jnp.maximum(absmax, 1e-8) / 127.0
-    q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale[None, :]),
-                 -127, 127).astype(jnp.int8)
-    return q, scale.astype(jnp.float32)
+    q, scale = quantize_channelwise_ref(w, (0,))
+    return q, scale[0]
 
 
 def flash_attention_ref(q, k, v, *, causal=True, window=0, scale=None):

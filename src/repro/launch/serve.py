@@ -1,7 +1,12 @@
 """Serving driver: continuous-batching engine over a chosen architecture.
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \
-      --requests 16 --slots 4 [--int8]
+      --requests 16 --slots 4 [--wdtype int8] [--kv-dtype int8]
+
+`--wdtype int8 --kv-dtype int8` is the paper's "AI-optimized" serving
+numerics: weight-only int8 projections (Pallas int8_matmul on TPU) plus an
+int8 paged KV pool with dequant fused into the decode-attention kernel —
+the 15 TOPS INT8 NPU datapath (§II) as the measured configuration.
 
 On a pod the same engine runs against the mesh-sharded prefill/decode steps
 from `launch/steps.py`; on CPU it serves the reduced configs (examples +
@@ -23,7 +28,11 @@ from repro.serve.engine import ServeEngine
 
 
 def quantize_params_int8(params):
-    """Weight-only int8 QDQ (the paper's 15 TOPS INT8 NPU numerics)."""
+    """Weight-only int8 QDQ over generic 2-D weights.
+
+    Kept for f32-datapath experiments that only want int8 NUMERICS; real
+    int8 serving goes through `ServeEngine(wdtype="int8")`, which stores the
+    projections as (int8, scale) and dispatches the Pallas int8_matmul."""
     from repro.kernels import ops as kops
 
     def qdq(p):
@@ -43,7 +52,13 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=96)
     ap.add_argument("--new-tokens", type=int, default=8)
-    ap.add_argument("--int8", action="store_true")
+    ap.add_argument("--int8", action="store_true",
+                    help="shorthand for --wdtype int8 --kv-dtype int8")
+    ap.add_argument("--wdtype", choices=["bf16", "int8"], default=None,
+                    help="weight datapath (int8 = Pallas int8_matmul on TPU)")
+    ap.add_argument("--kv-dtype", choices=["f32", "bf16", "int8"],
+                    default=None,
+                    help="KV-cache storage (int8 = fused-dequant decode)")
     ap.add_argument("--page-size", type=int, default=32,
                     help="KV page size (0 = dense per-slot cache)")
     ap.add_argument("--pages", type=int, default=0,
@@ -56,14 +71,22 @@ def main():
         cfg = cfg.smoke()
     model = build_model(cfg, ExecOptions(attn_impl="reference", ce_chunk=32))
     params = model.init(jax.random.key(args.seed))
-    if args.int8:
-        params = quantize_params_int8(params)
+    wdtype = args.wdtype or ("int8" if args.int8 else None)
+    kv_dtype = args.kv_dtype or ("int8" if args.int8 else None)
+    if cfg.family not in ("dense", "moe", "vlm", "encdec"):
+        # recurrent families (ssm/hybrid) have no int8 engine datapath —
+        # keep the old behavior: generic QDQ for int8 NUMERICS, f32 compute
+        if wdtype == "int8":
+            params = quantize_params_int8(params)
+            wdtype = None
+        kv_dtype = None if kv_dtype in ("int8", "bf16") else kv_dtype
     paged_kw = {"paged": False} if args.page_size == 0 else {
         "page_size": args.page_size,
         "n_pages": args.pages or None,
     }
     eng = ServeEngine(model, n_slots=args.slots, max_len=args.max_len,
-                      params=params, **paged_kw)
+                      params=params, wdtype=wdtype, kv_dtype=kv_dtype,
+                      **paged_kw)
     rng = np.random.default_rng(args.seed)
     reqs = []
     for _ in range(args.requests):

@@ -129,20 +129,23 @@ def _pallas_decode_ok(q, k_cache, page_table=None) -> bool:
     tiles evenly; everything else falls back to the pure-jnp path."""
     if jax.default_backend() != "tpu":
         return False
+    # int8 pools tile at 32 sublanes (vs 16 for bf16): require 32-row pages
+    sublane = 32 if k_cache.dtype == jnp.int8 else 16
     if page_table is not None:
-        # auto-dispatch whenever a page is sublane-tileable for every storage
-        # dtype (16 rows covers bf16); the serving default (32) qualifies —
-        # falling back to the jnp path would densify the whole logical view
-        # per step, re-buying the dense cache the pool exists to avoid.
-        # Sub-16-row pages (tests) still run via impl='pallas'.
+        # auto-dispatch whenever a page is sublane-tileable for the storage
+        # dtype; the serving default (32) qualifies for both — falling back
+        # to the jnp path would densify the whole logical view per step,
+        # re-buying the dense cache the pool exists to avoid. Smaller pages
+        # (tests) still run via impl='pallas'.
         page_size = k_cache.shape[1]
-        return page_size >= 16 and page_size % 16 == 0
+        return page_size >= sublane and page_size % sublane == 0
     smax = k_cache.shape[1]
     return smax % min(128, smax) == 0 and smax >= 128
 
 
 def decode_attention(q, k_cache, v_cache, cur_len, *, window=0, scale=None,
-                     page_table=None, impl: str = "auto"):
+                     page_table=None, k_scale=None, v_scale=None,
+                     impl: str = "auto"):
     """Single-position attention against a cache.
 
     q: (B,1,KV,G,D); caches: (B,Smax,KV,D); cur_len: () or (B,) int — number of
@@ -155,6 +158,12 @@ def decode_attention(q, k_cache, v_cache, cur_len, *, window=0, scale=None,
     oracle for the kernel — while the Pallas kernel gathers tile-by-tile
     through scalar prefetch and never materializes the dense view.
 
+    INT8 caches (`k_scale`/`v_scale`): the caches hold int8 rows and the
+    scales hold one f16 dequant factor per (position, kv head) — shaped like
+    the caches minus the D dim. Dequant is `int8.astype(f32) * scale` — the
+    jnp path materializes it on the gathered view (CPU oracle), the Pallas
+    kernel fuses it into the K/V tile loads so the cache crosses HBM as int8.
+
     impl: 'auto' dispatches to the Pallas decode kernel
     (kernels/decode_attention) on TPU — the engine's decode step streams the
     cache through VMEM tiles instead of materializing masked scores over the
@@ -166,6 +175,7 @@ def decode_attention(q, k_cache, v_cache, cur_len, *, window=0, scale=None,
     whole-cache fp32 copy would double the decode footprint (measured +15 GiB
     on gemma-7b × decode_32k; EXPERIMENTS.md §Perf).
     """
+    assert (k_scale is None) == (v_scale is None)
     if impl == "auto" and _pallas_decode_ok(q, k_cache, page_table):
         impl = "pallas"
     if impl == "pallas":
@@ -173,7 +183,7 @@ def decode_attention(q, k_cache, v_cache, cur_len, *, window=0, scale=None,
             decode_attention as pallas_decode)
         return pallas_decode(
             q, k_cache, v_cache, cur_len, window=window,
-            page_table=page_table,
+            page_table=page_table, k_scale=k_scale, v_scale=v_scale,
             scale=None if scale is None else float(scale),
             interpret=jax.default_backend() != "tpu")
     b, _, nkv, g, d = q.shape
@@ -183,6 +193,13 @@ def decode_attention(q, k_cache, v_cache, cur_len, *, window=0, scale=None,
         # positions ≥ cur_len and are masked below like any dead row.
         k_cache = k_cache[page_table].reshape(b, -1, nkv, d)
         v_cache = v_cache[page_table].reshape(b, -1, nkv, d)
+        if k_scale is not None:
+            k_scale = k_scale[page_table].reshape(b, -1, nkv)
+            v_scale = v_scale[page_table].reshape(b, -1, nkv)
+    if k_scale is not None:
+        from repro.models.quantized import dequantize_kv_rows
+        k_cache = dequantize_kv_rows(k_cache, k_scale)
+        v_cache = dequantize_kv_rows(v_cache, v_scale)
     smax = k_cache.shape[1]
     scale = scale if scale is not None else d ** -0.5
     s = jnp.einsum("bqkgd,bskd->bkgqs", q, k_cache,

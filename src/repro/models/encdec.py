@@ -16,10 +16,11 @@ import jax.numpy as jnp
 
 from repro.models import attention as attn_mod
 from repro.models.common import ParamDef, act_fn, apply_rope, glu_act, rms_norm
+from repro.models.quantized import SCALE_DTYPE, qeinsum
 from repro.models.transformer import (
     ExecOptions, _expand_kv, attn_schema, chunked_ce_loss, embed_tokens,
     head_mask, lm_head_weights, paged_kv_shapes, remat_wrap, _write_cache,
-    _write_cache_paged,
+    _write_cache_paged, _write_cache_paged_q, _write_cache_q,
 )
 
 
@@ -56,9 +57,9 @@ def schema(cfg) -> Dict[str, Any]:
 
 def _self_attn(x, p, cfg, opts, positions, *, causal, prefix=""):
     c = opts.constrain
-    q = jnp.einsum("bsd,dhk->bshk", x, p[prefix + "wq"])
-    k = jnp.einsum("bsd,dhk->bshk", x, p[prefix + "wk"])
-    v = jnp.einsum("bsd,dhk->bshk", x, p[prefix + "wv"])
+    q = qeinsum("bsd,dhk->bshk", x, p[prefix + "wq"])
+    k = qeinsum("bsd,dhk->bshk", x, p[prefix + "wk"])
+    v = qeinsum("bsd,dhk->bshk", x, p[prefix + "wv"])
     q = apply_rope(q, positions, theta=cfg.rope_theta)
     k = apply_rope(k, positions, theta=cfg.rope_theta)
     kx, vx = _expand_kv(k, v, cfg)
@@ -69,22 +70,22 @@ def _self_attn(x, p, cfg, opts, positions, *, causal, prefix=""):
                            impl=opts.attn_impl, q_chunk=opts.q_chunk,
                            kv_chunk=opts.kv_chunk, unroll=opts.unroll_scans)
     o = o[:, :, :, 0, :] * head_mask(cfg, x.dtype)[None, None, :, None]
-    return jnp.einsum("bshk,hkd->bsd", o, p[prefix + "wo"]), (k, v)
+    return qeinsum("bshk,hkd->bsd", o, p[prefix + "wo"]), (k, v)
 
 
 def _cross_attn_full(x, p, cfg, opts, enc_out):
     """Full cross attention (train/prefill). Returns (out, (ck, cv))."""
     c = opts.constrain
-    q = jnp.einsum("bsd,dhk->bshk", x, p["cwq"])
-    ck = jnp.einsum("bsd,dhk->bshk", enc_out, p["cwk"])
-    cv = jnp.einsum("bsd,dhk->bshk", enc_out, p["cwv"])
+    q = qeinsum("bsd,dhk->bshk", x, p["cwq"])
+    ck = qeinsum("bsd,dhk->bshk", enc_out, p["cwk"])
+    cv = qeinsum("bsd,dhk->bshk", enc_out, p["cwv"])
     kx, vx = _expand_kv(ck, cv, cfg)
     qp = c(q[:, :, :, None, :], "batchlike", None, "heads_flat", None, None)
     o = attn_mod.attention(qp, kx, vx, causal=False, scale=cfg.head_dim ** -0.5,
                            impl=opts.attn_impl, q_chunk=opts.q_chunk,
                            kv_chunk=opts.kv_chunk, unroll=opts.unroll_scans)
     o = o[:, :, :, 0, :] * head_mask(cfg, x.dtype)[None, None, :, None]
-    return jnp.einsum("bshk,hkd->bsd", o, p["cwo"]), (ck, cv)
+    return qeinsum("bshk,hkd->bsd", o, p["cwo"]), (ck, cv)
 
 
 def encode(params, frames, cfg, opts: ExecOptions):
@@ -98,10 +99,10 @@ def encode(params, frames, cfg, opts: ExecOptions):
         h = h + a
         hn = rms_norm(h, lp["ffn_norm"])
         act = act_fn(glu_act(cfg.activation))
-        ff = act(jnp.einsum("bsd,df->bsf", hn, lp["w1"])) \
-            * jnp.einsum("bsd,df->bsf", hn, lp["w3"])
+        ff = act(qeinsum("bsd,df->bsf", hn, lp["w1"])) \
+            * qeinsum("bsd,df->bsf", hn, lp["w3"])
         ff = opts.constrain(ff, "batchlike", None, "ff")
-        return h + jnp.einsum("bsf,fd->bsd", ff, lp["w2"]), None
+        return h + qeinsum("bsf,fd->bsd", ff, lp["w2"]), None
 
     from repro.models.common import scan_or_unroll
     x, _ = scan_or_unroll(remat_wrap(body, opts.remat), x, params["enc"],
@@ -128,41 +129,58 @@ def _dec_layer(h, lp, cfg, opts, positions, enc_out, mode, cache):
         b = h.shape[0]
         pos_b = positions.reshape(-1)
         xn = rms_norm(h, lp["attn_norm"])
-        q = jnp.einsum("bsd,dhk->bshk", xn, lp["wq"])
-        k = jnp.einsum("bsd,dhk->bshk", xn, lp["wk"])
-        v = jnp.einsum("bsd,dhk->bshk", xn, lp["wv"])
+        q = qeinsum("bsd,dhk->bshk", xn, lp["wq"])
+        k = qeinsum("bsd,dhk->bshk", xn, lp["wk"])
+        v = qeinsum("bsd,dhk->bshk", xn, lp["wv"])
         q = apply_rope(q, positions, theta=cfg.rope_theta)
         k = apply_rope(k, positions, theta=cfg.rope_theta)
         page_table = cache.get("page_table")
+        int8_kv = "ks" in cache         # self-KV only; cross K/V stay dense
+        k_scale = v_scale = None
         if page_table is None:
-            k_cache = _write_cache(cache["k"], k, pos_b)
-            v_cache = _write_cache(cache["v"], v, pos_b)
+            if int8_kv:
+                k_cache, k_scale = _write_cache_q(
+                    cache["k"], cache["ks"], k, pos_b)
+                v_cache, v_scale = _write_cache_q(
+                    cache["v"], cache["vs"], v, pos_b)
+            else:
+                k_cache = _write_cache(cache["k"], k, pos_b)
+                v_cache = _write_cache(cache["v"], v, pos_b)
         else:
-            k_cache = _write_cache_paged(cache["k"], k, pos_b, page_table)
-            v_cache = _write_cache_paged(cache["v"], v, pos_b, page_table)
+            if int8_kv:
+                k_cache, k_scale = _write_cache_paged_q(
+                    cache["k"], cache["ks"], k, pos_b, page_table)
+                v_cache, v_scale = _write_cache_paged_q(
+                    cache["v"], cache["vs"], v, pos_b, page_table)
+            else:
+                k_cache = _write_cache_paged(cache["k"], k, pos_b, page_table)
+                v_cache = _write_cache_paged(cache["v"], v, pos_b, page_table)
         kvp, gp = cfg.padded_kv_group
         hm = head_mask(cfg, h.dtype)[None, None, :, None]
         qg = q.reshape(b, 1, kvp, gp, cfg.head_dim)
         o = attn_mod.decode_attention(qg, k_cache, v_cache, pos_b + 1,
                                       scale=cfg.head_dim ** -0.5,
-                                      page_table=page_table)
+                                      page_table=page_table,
+                                      k_scale=k_scale, v_scale=v_scale)
         o = o.reshape(b, 1, cfg.n_heads_padded, cfg.head_dim) * hm
-        h = h + jnp.einsum("bshk,hkd->bsd", o, lp["wo"])
+        h = h + qeinsum("bshk,hkd->bsd", o, lp["wo"])
         xn = rms_norm(h, lp["cross_norm"])
-        cq = jnp.einsum("bsd,dhk->bshk", xn, lp["cwq"])
+        cq = qeinsum("bsd,dhk->bshk", xn, lp["cwq"])
         cqg = cq.reshape(b, 1, kvp, gp, cfg.head_dim)
         se = cache["ck"].shape[1]
         co = attn_mod.decode_attention(cqg, cache["ck"], cache["cv"],
                                        jnp.full((b,), se, jnp.int32),
                                        scale=cfg.head_dim ** -0.5)
         co = co.reshape(b, 1, cfg.n_heads_padded, cfg.head_dim) * hm
-        h = h + jnp.einsum("bshk,hkd->bsd", co, lp["cwo"])
+        h = h + qeinsum("bshk,hkd->bsd", co, lp["cwo"])
         new_cache = {"k": k_cache, "v": v_cache}
+        if int8_kv:
+            new_cache["ks"], new_cache["vs"] = k_scale, v_scale
     hn = rms_norm(h, lp["ffn_norm"])
-    ff = act(jnp.einsum("bsd,df->bsf", hn, lp["w1"])) \
-        * jnp.einsum("bsd,df->bsf", hn, lp["w3"])
+    ff = act(qeinsum("bsd,df->bsf", hn, lp["w1"])) \
+        * qeinsum("bsd,df->bsf", hn, lp["w3"])
     ff = c(ff, "batchlike", None, "ff")
-    return h + jnp.einsum("bsf,fd->bsd", ff, lp["w2"]), new_cache
+    return h + qeinsum("bsf,fd->bsd", ff, lp["w2"]), new_cache
 
 
 def decode_stack(params, tokens, cfg, opts, enc_out, *, mode, cache=None,
@@ -216,35 +234,47 @@ def decode_step(params, batch, cache, cfg, opts: ExecOptions):
     xs (no ys re-emission) — avoids double-buffering either cache."""
     positions = cache["pos"]
     page_table = cache.get("page_table")
+    int8_kv = "ks" in cache
     x = embed_tokens(params, batch["tokens"], cfg, opts)
 
+    def dyn(t, i):
+        return jax.lax.dynamic_index_in_dim(t, i, 0, keepdims=False)
+
     def body(carry, xs):
-        h, kc, vc = carry
+        (h, kc, vc, ksc, vsc) = carry if int8_kv else (*carry, None, None)
         lp, ck, cv, i = xs
-        layer_cache = {
-            "k": jax.lax.dynamic_index_in_dim(kc, i, 0, keepdims=False),
-            "v": jax.lax.dynamic_index_in_dim(vc, i, 0, keepdims=False),
-            "ck": ck, "cv": cv,
-        }
+        layer_cache = {"k": dyn(kc, i), "v": dyn(vc, i), "ck": ck, "cv": cv}
+        if int8_kv:
+            layer_cache["ks"], layer_cache["vs"] = dyn(ksc, i), dyn(vsc, i)
         if page_table is not None:
             layer_cache["page_table"] = page_table
         h, new_cache = _dec_layer(h, lp, cfg, opts, positions[:, None],
                                   None, "decode", layer_cache)
         kc = jax.lax.dynamic_update_index_in_dim(kc, new_cache["k"], i, 0)
         vc = jax.lax.dynamic_update_index_in_dim(vc, new_cache["v"], i, 0)
+        if int8_kv:
+            ksc = jax.lax.dynamic_update_index_in_dim(ksc, new_cache["ks"], i, 0)
+            vsc = jax.lax.dynamic_update_index_in_dim(vsc, new_cache["vs"], i, 0)
+            return (h, kc, vc, ksc, vsc), None
         return (h, kc, vc), None
 
     from repro.models.common import scan_or_unroll
-    (x, kc, vc), _ = scan_or_unroll(
-        body, (x, cache["k"], cache["v"]),
+    init = (x, cache["k"], cache["v"])
+    if int8_kv:
+        init = init + (cache["ks"], cache["vs"])
+    carry, _ = scan_or_unroll(
+        body, init,
         (params["dec"], cache["ck"], cache["cv"],
          jnp.arange(cfg.n_dec_layers)),
         unroll=opts.unroll_scans)
+    x, kc, vc = carry[:3]
     x = rms_norm(x, params["final_norm"])
     logits = jnp.einsum("bsd,vd->bsv", x,
                         lm_head_weights(params, cfg)).astype(jnp.float32)
     new_cache = {"k": kc, "v": vc, "ck": cache["ck"], "cv": cache["cv"],
                  "pos": positions + 1}
+    if int8_kv:
+        new_cache["ks"], new_cache["vs"] = carry[3], carry[4]
     if page_table is not None:
         new_cache["page_table"] = page_table
     return logits, new_cache
@@ -255,11 +285,15 @@ def cache_shape(cfg, batch: int, max_len: int, dtype=jnp.bfloat16, *,
     """Self-attention K/V go paged when `page_size` is given (shared sizing
     contract: transformer.paged_kv_shapes); cross K/V stay dense per slot —
     they are written once at prefill at a fixed (cross_len) depth, so paging
-    would buy nothing and cost a second table."""
+    would buy nothing and cost a second table. dtype=jnp.int8 quantizes the
+    self-attention K/V only (plus 'ks'/'vs' f16 row scales); cross K/V keep
+    f32 — written once, read every step, and a second dequant operand per
+    layer would buy back ~cross_len/max_len of the savings at best."""
     L, kv, hd, se = cfg.n_dec_layers, cfg.kv_pad, cfg.head_dim, cfg.cross_len
+    cross_dtype = jnp.float32 if dtype == jnp.int8 else dtype
     cross = {
-        "ck": jax.ShapeDtypeStruct((L, batch, se, kv, hd), dtype),
-        "cv": jax.ShapeDtypeStruct((L, batch, se, kv, hd), dtype),
+        "ck": jax.ShapeDtypeStruct((L, batch, se, kv, hd), cross_dtype),
+        "cv": jax.ShapeDtypeStruct((L, batch, se, kv, hd), cross_dtype),
     }
     if page_size is None:
         self_kv = {
@@ -267,6 +301,10 @@ def cache_shape(cfg, batch: int, max_len: int, dtype=jnp.bfloat16, *,
             "v": jax.ShapeDtypeStruct((L, batch, max_len, kv, hd), dtype),
             "pos": jax.ShapeDtypeStruct((batch,), jnp.int32),
         }
+        if dtype == jnp.int8:
+            for key in ("ks", "vs"):
+                self_kv[key] = jax.ShapeDtypeStruct(
+                    (L, batch, max_len, kv), SCALE_DTYPE)
     else:
         self_kv = paged_kv_shapes(L, batch, max_len, kv, hd, dtype,
                                   page_size, n_pages)

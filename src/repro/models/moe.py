@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.common import ParamDef, act_fn, glu_act
+from repro.models.quantized import qeinsum
 
 
 def moe_schema(cfg, n_layers: int) -> dict:
@@ -110,19 +111,21 @@ def moe_ffn(x: jnp.ndarray, p: dict, cfg, *, constrain=lambda t, *a: t):
     # --- dispatch: groups-sharded tokens → experts-sharded slots --------------
     xin = jnp.einsum("gsec,gsd->egcd", dispatch, xg)
     xin = constrain(xin, "experts", tok_b, None, None)
-    h = act(jnp.einsum("egcd,edf->egcf", xin, p["w1"])) \
-        * jnp.einsum("egcd,edf->egcf", xin, p["w3"])
+    # expert weights may be int8 (per-expert per-channel scales): qeinsum
+    # vmaps the Pallas int8 matmul over the expert dim on TPU
+    h = act(qeinsum("egcd,edf->egcf", xin, p["w1"])) \
+        * qeinsum("egcd,edf->egcf", xin, p["w3"])
     h = constrain(h, "experts", tok_b, None, "ff")
-    xout = jnp.einsum("egcf,efd->egcd", h, p["w2"])
+    xout = qeinsum("egcf,efd->egcd", h, p["w2"])
     xout = constrain(xout, "experts", tok_b, None, None)
     y = jnp.einsum("gsec,egcd->gsd", combine.astype(jnp.float32),
                    xout.astype(jnp.float32)).astype(x.dtype)
 
     # --- shared experts (qwen2-moe), sigmoid-gated -----------------------------
     if "shared_w1" in p:
-        hs = act(jnp.einsum("gsd,df->gsf", xg, p["shared_w1"])) \
-            * jnp.einsum("gsd,df->gsf", xg, p["shared_w3"])
-        ys = jnp.einsum("gsf,fd->gsd", hs, p["shared_w2"])
+        hs = act(qeinsum("gsd,df->gsf", xg, p["shared_w1"])) \
+            * qeinsum("gsd,df->gsf", xg, p["shared_w3"])
+        ys = qeinsum("gsf,fd->gsd", hs, p["shared_w2"])
         gate = jax.nn.sigmoid(
             jnp.einsum("gsd,do->gso", xg, p["shared_gate"]).astype(jnp.float32))
         y = y + (ys.astype(jnp.float32) * gate).astype(x.dtype)

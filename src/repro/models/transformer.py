@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from repro.models import attention as attn_mod
 from repro.models import moe as moe_mod
 from repro.models.common import ParamDef, act_fn, apply_rope, glu_act, rms_norm, softcap
+from repro.models.quantized import SCALE_DTYPE, qeinsum, quantize_kv_rows
 
 
 def _noop_constrain(x, *logical):
@@ -125,9 +126,9 @@ def schema(cfg) -> Dict[str, Any]:
 # ---------------------------------------------------------------------------
 
 def _project_qkv(x, p, cfg, prefix=""):
-    q = jnp.einsum("bsd,dhk->bshk", x, p[prefix + "wq"])
-    k = jnp.einsum("bsd,dhk->bshk", x, p[prefix + "wk"])
-    v = jnp.einsum("bsd,dhk->bshk", x, p[prefix + "wv"])
+    q = qeinsum("bsd,dhk->bshk", x, p[prefix + "wq"])
+    k = qeinsum("bsd,dhk->bshk", x, p[prefix + "wk"])
+    v = qeinsum("bsd,dhk->bshk", x, p[prefix + "wv"])
     if "bq" in p and not prefix:
         q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
     return q, k, v
@@ -172,23 +173,40 @@ def attn_block(x, p, cfg, opts: ExecOptions, *, positions,
         b = x.shape[0]
         pos_b = positions.reshape(-1)             # (B,)
         page_table = cache.get("page_table")
+        int8_kv = "ks" in cache                   # int8 storage + row scales
         # write this step's k/v at each sequence position `pos_b`
         if page_table is None:
-            k_cache = _write_cache(cache["k"], k, pos_b)
-            v_cache = _write_cache(cache["v"], v, pos_b)
+            if int8_kv:
+                k_cache, k_scale = _write_cache_q(
+                    cache["k"], cache["ks"], k, pos_b)
+                v_cache, v_scale = _write_cache_q(
+                    cache["v"], cache["vs"], v, pos_b)
+            else:
+                k_cache = _write_cache(cache["k"], k, pos_b)
+                v_cache = _write_cache(cache["v"], v, pos_b)
         else:
-            k_cache = _write_cache_paged(cache["k"], k, pos_b, page_table)
-            v_cache = _write_cache_paged(cache["v"], v, pos_b, page_table)
+            if int8_kv:
+                k_cache, k_scale = _write_cache_paged_q(
+                    cache["k"], cache["ks"], k, pos_b, page_table)
+                v_cache, v_scale = _write_cache_paged_q(
+                    cache["v"], cache["vs"], v, pos_b, page_table)
+            else:
+                k_cache = _write_cache_paged(cache["k"], k, pos_b, page_table)
+                v_cache = _write_cache_paged(cache["v"], v, pos_b, page_table)
         kvp, gp = cfg.padded_kv_group
         qg = q.reshape(b, 1, kvp, gp, cfg.head_dim)
         o = attn_mod.decode_attention(
             qg, k_cache, v_cache, pos_b + 1,
-            window=cfg.window, scale=scale, page_table=page_table)
+            window=cfg.window, scale=scale, page_table=page_table,
+            k_scale=k_scale if int8_kv else None,
+            v_scale=v_scale if int8_kv else None)
         o = o.reshape(b, 1, cfg.n_heads_padded, cfg.head_dim)
         new_cache = {"k": k_cache, "v": v_cache}
+        if int8_kv:
+            new_cache["ks"], new_cache["vs"] = k_scale, v_scale
 
     o = o * head_mask(cfg, o.dtype)[None, None, :, None]
-    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    out = qeinsum("bshk,hkd->bsd", o, p["wo"])
     return out, new_cache
 
 
@@ -201,6 +219,19 @@ def _write_cache(cache, kv_new, positions):
     onehot = (jnp.arange(smax)[None, :] == positions[:, None])  # (B, Smax)
     oh = onehot[:, :, None, None].astype(cache.dtype)
     return cache * (1 - oh) + oh * kv_new.astype(cache.dtype)
+
+
+def _write_cache_q(cache, scales, kv_new, positions):
+    """Dense int8 KV write: quantize the new (B,1,KV,D) row per (token, kv
+    head) and masked-set both the int8 cache row and its f16 scale. Same
+    one-hot masking as `_write_cache` but via `where` — int8 arithmetic has
+    no exact multiply-by-mask. Returns (cache, scales)."""
+    q, s = quantize_kv_rows(kv_new)                 # (B,1,KV,D) i8, (B,1,KV)
+    smax = cache.shape[1]
+    onehot = (jnp.arange(smax)[None, :] == positions[:, None])  # (B, Smax)
+    new_c = jnp.where(onehot[:, :, None, None], q, cache)
+    new_s = jnp.where(onehot[:, :, None], s, scales)
+    return new_c, new_s
 
 
 def _write_cache_paged(pool, kv_new, positions, page_table):
@@ -222,13 +253,27 @@ def _write_cache_paged(pool, kv_new, positions, page_table):
         kv_new[:, 0].astype(pool.dtype))
 
 
+def _write_cache_paged_q(pool, spool, kv_new, positions, page_table):
+    """Paged int8 KV write: same scatter as `_write_cache_paged`, with the
+    row quantized first and its scale scattered into the (n_pages, ps, KV)
+    scale pool. The quantized bytes are identical to the dense `_write_cache_q`
+    path — layout-independence is what keeps paged int8 engines token-exact
+    against the dense int8 oracle."""
+    q, s = quantize_kv_rows(kv_new)
+    ps = pool.shape[1]
+    logical = jnp.minimum(positions // ps, page_table.shape[1] - 1)
+    page = jnp.take_along_axis(page_table, logical[:, None], axis=1)[:, 0]
+    return (pool.at[page, positions % ps].set(q[:, 0]),
+            spool.at[page, positions % ps].set(s[:, 0]))
+
+
 def dense_ffn(x, p, cfg, opts: ExecOptions):
     c = opts.constrain
     act = act_fn(glu_act(cfg.activation))
-    h = act(jnp.einsum("bsd,df->bsf", x, p["w1"])) \
-        * jnp.einsum("bsd,df->bsf", x, p["w3"])
+    h = act(qeinsum("bsd,df->bsf", x, p["w1"])) \
+        * qeinsum("bsd,df->bsf", x, p["w3"])
     h = c(h, "batchlike", None, "ff")
-    return jnp.einsum("bsf,fd->bsd", h, p["w2"])
+    return qeinsum("bsf,fd->bsd", h, p["w2"])
 
 
 def layer_fn(x, lp, cfg, opts: ExecOptions, *, positions, mode,
@@ -384,15 +429,17 @@ def decode_step(params, batch, cache, cfg, opts: ExecOptions):
     tokens = batch["tokens"]
     positions = cache["pos"]                      # (B,) next position to write
     page_table = cache.get("page_table")          # read-only within the step
+    int8_kv = "ks" in cache                       # int8 pools + f16 row scales
     x = embed_tokens(params, tokens, cfg, opts)
+    dyn = functools.partial(jax.lax.dynamic_index_in_dim, axis=0,
+                            keepdims=False)
 
     def body(carry, xs):
-        h, kc, vc = carry
+        (h, kc, vc, ksc, vsc) = carry if int8_kv else (*carry, None, None)
         lp, i = xs
-        layer_cache = {
-            "k": jax.lax.dynamic_index_in_dim(kc, i, 0, keepdims=False),
-            "v": jax.lax.dynamic_index_in_dim(vc, i, 0, keepdims=False),
-        }
+        layer_cache = {"k": dyn(kc, i), "v": dyn(vc, i)}
+        if int8_kv:
+            layer_cache["ks"], layer_cache["vs"] = dyn(ksc, i), dyn(vsc, i)
         if page_table is not None:
             layer_cache["page_table"] = page_table
         h, new_cache = layer_fn(h, lp, cfg, opts,
@@ -400,17 +447,26 @@ def decode_step(params, batch, cache, cfg, opts: ExecOptions):
                                 cache=layer_cache)
         kc = jax.lax.dynamic_update_index_in_dim(kc, new_cache["k"], i, 0)
         vc = jax.lax.dynamic_update_index_in_dim(vc, new_cache["v"], i, 0)
+        if int8_kv:
+            ksc = jax.lax.dynamic_update_index_in_dim(ksc, new_cache["ks"], i, 0)
+            vsc = jax.lax.dynamic_update_index_in_dim(vsc, new_cache["vs"], i, 0)
+            return (h, kc, vc, ksc, vsc), None
         return (h, kc, vc), None
 
     from repro.models.common import scan_or_unroll
-    (x, kc, vc), _ = scan_or_unroll(
-        body, (x, cache["k"], cache["v"]),
-        (params["layers"], jnp.arange(cfg.n_layers)),
+    init = (x, cache["k"], cache["v"])
+    if int8_kv:
+        init = init + (cache["ks"], cache["vs"])
+    carry, _ = scan_or_unroll(
+        body, init, (params["layers"], jnp.arange(cfg.n_layers)),
         unroll=opts.unroll_scans)
+    x, kc, vc = carry[:3]
     x = rms_norm(x, params["final_norm"], plus_one=cfg.norm_plus_one)
     logits = jnp.einsum("bsd,vd->bsv", x, lm_head_weights(params, cfg))
     logits = softcap(logits.astype(jnp.float32), cfg.logit_softcap)
     new_cache = {"k": kc, "v": vc, "pos": positions + 1}
+    if int8_kv:
+        new_cache["ks"], new_cache["vs"] = carry[3], carry[4]
     if page_table is not None:
         new_cache["page_table"] = page_table
     return logits, new_cache
@@ -427,12 +483,17 @@ def paged_kv_shapes(L: int, batch: int, max_len: int, kv: int, hd: int,
     pages_per_seq = max_len // page_size
     if n_pages is None:
         n_pages = 1 + batch * pages_per_seq
-    return {
+    shapes = {
         "k": jax.ShapeDtypeStruct((L, n_pages, page_size, kv, hd), dtype),
         "v": jax.ShapeDtypeStruct((L, n_pages, page_size, kv, hd), dtype),
         "page_table": jax.ShapeDtypeStruct((batch, pages_per_seq), jnp.int32),
         "pos": jax.ShapeDtypeStruct((batch,), jnp.int32),
     }
+    if dtype == jnp.int8:   # per-row (token × kv-head) dequant scales
+        for key in ("ks", "vs"):
+            shapes[key] = jax.ShapeDtypeStruct(
+                (L, n_pages, page_size, kv), SCALE_DTYPE)
+    return shapes
 
 
 def cache_shape(cfg, batch: int, max_len: int, dtype=jnp.bfloat16, *,
@@ -441,13 +502,20 @@ def cache_shape(cfg, batch: int, max_len: int, dtype=jnp.bfloat16, *,
     """Abstract KV-cache pytree (stacked over layers; kv_pad heads).
 
     Dense (default): per-slot (L, B, max_len, KV, D) K/V rows.
-    Paged (`page_size=`): shared page pools — see `paged_kv_shapes`."""
+    Paged (`page_size=`): shared page pools — see `paged_kv_shapes`.
+    dtype=jnp.int8 (either layout): K/V stored int8 plus per-row f16 dequant
+    scale tensors 'ks'/'vs' — the serving engine's kv_dtype='int8' layout."""
     L, kv, hd = cfg.n_layers, cfg.kv_pad, cfg.head_dim
     if page_size is None:
-        return {
+        shapes = {
             "k": jax.ShapeDtypeStruct((L, batch, max_len, kv, hd), dtype),
             "v": jax.ShapeDtypeStruct((L, batch, max_len, kv, hd), dtype),
             "pos": jax.ShapeDtypeStruct((batch,), jnp.int32),
         }
+        if dtype == jnp.int8:
+            for key in ("ks", "vs"):
+                shapes[key] = jax.ShapeDtypeStruct(
+                    (L, batch, max_len, kv), SCALE_DTYPE)
+        return shapes
     return paged_kv_shapes(L, batch, max_len, kv, hd, dtype, page_size,
                            n_pages)

@@ -9,6 +9,36 @@ The "AI-optimized" configuration of the paper, as a serving runtime:
   * the faithful chiplet perf model (core/) prices batching decisions the way
     the paper's CPU chiplet dispatches to its two NPUs (see benches).
 
+INT8 serving configuration (PR 3 — the paper's 15 TOPS INT8 datapath as the
+measured serving numerics):
+  * `wdtype="int8"`: weight-only int8 — the params pytree's projection
+    weights become (int8, per-output-channel f32 scale) leaves via
+    `models.quantized.quantize_params`; every projection einsum in the
+    prefill/decode steps dispatches through `qeinsum` (Pallas int8_matmul on
+    TPU, jnp dequant-matmul reference elsewhere; MoE experts quantized per
+    expert). Halves weight HBM traffic per decode step — the bound at small
+    batch.
+  * `kv_dtype="int8"`: K/V stored int8 with per-(token, kv head) f16 dequant
+    scales ('ks'/'vs' tensors riding next to 'k'/'v' in either cache
+    layout). Quantization happens at write time (prefill paste + decode
+    write); dequant is fused into the decode-attention kernel's K/V tile
+    loads, so cache bytes/token drop ~2× vs bf16 (~(D+2)/2D) on top of the
+    paged pool's live-token scaling. The quantized bytes are identical in
+    the dense and paged layouts, so an int8 paged engine is token-exact
+    against the dense int8 oracle — the equivalence the tests pin. encdec
+    cross K/V stay f32 (written once; see encdec.cache_shape).
+  * `kv_dtype="bf16"` is also accepted (the comparison baseline the int8
+    serve bench reports its byte-shrink against).
+
+Sliding-window paged slots (PR 3): window-attention configs (cfg.window > 0)
+hold O(window) pages instead of O(position): admission reserves only
+ceil(window/page)+2 pages past the live floor, and every tick the engine
+frees pages that fell fully out of the attention window — remapping them to
+the slot's next logical page (zero pool traffic) or returning them to the
+free list once the request's span is covered. Out-of-window prompt pages are
+never backed at all (their paste rows land on the null page, which the
+window mask already makes unreadable).
+
 Cache layout (PR 2 — paged KV):
   * Attention families default to a PAGED KV cache: one shared page pool of
     (n_layers, n_pages, page_size, KV, D) K/V blocks plus a per-slot
@@ -63,7 +93,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.models.quantized import quantize_kv_rows
+
 _ATTN_FAMILIES = ("dense", "moe", "vlm", "encdec")
+
+_KV_DTYPES = {None: jnp.float32, "f32": jnp.float32, "float32": jnp.float32,
+              "bf16": jnp.bfloat16, "bfloat16": jnp.bfloat16,
+              "int8": jnp.int8}
 
 
 def bucket_length(plen: int, max_len: int) -> int:
@@ -123,9 +159,18 @@ def _make_paste(fam: str):
         c = dict(cache)
         if fam in _ATTN_FAMILIES:
             plen = pf["k"].shape[2]
+            int8_kv = "ks" in c
             for key in ("k", "v"):
-                c[key] = c[key].at[:, slot, :plen].set(
-                    pf[key][:, 0, :plen].astype(c[key].dtype))
+                if int8_kv:
+                    # quantize prompt rows per (position, kv head) — the same
+                    # map the decode write path applies, so dense and paged
+                    # int8 caches hold identical bytes
+                    qr, sr = quantize_kv_rows(pf[key][:, 0, :plen])
+                    c[key] = c[key].at[:, slot, :plen].set(qr)
+                    c[key + "s"] = c[key + "s"].at[:, slot, :plen].set(sr)
+                else:
+                    c[key] = c[key].at[:, slot, :plen].set(
+                        pf[key][:, 0, :plen].astype(c[key].dtype))
             for key in ("ck", "cv"):
                 if key in c:
                     c[key] = c[key].at[:, slot].set(
@@ -167,13 +212,25 @@ def _make_paste_paged(fam: str):
         ps = c["k"].shape[2]
         blen = pf["k"].shape[2]
         n_prompt_pages = -(-blen // ps)    # static per prefill bucket
+        int8_kv = "ks" in c
         for key in ("k", "v"):
             pool = c[key]
+            if int8_kv:
+                qrows, srows = quantize_kv_rows(pf[key][:, 0])  # (L,blen,KV,·)
+                spool = c[key + "s"]
             for j in range(n_prompt_pages):
                 rows = min(ps, blen - j * ps)
-                src = pf[key][:, 0, j * ps:j * ps + rows].astype(pool.dtype)
-                pool = pool.at[:, page_row[j], :rows].set(src)
+                if int8_kv:
+                    pool = pool.at[:, page_row[j], :rows].set(
+                        qrows[:, j * ps:j * ps + rows])
+                    spool = spool.at[:, page_row[j], :rows].set(
+                        srows[:, j * ps:j * ps + rows])
+                else:
+                    src = pf[key][:, 0, j * ps:j * ps + rows].astype(pool.dtype)
+                    pool = pool.at[:, page_row[j], :rows].set(src)
             c[key] = pool
+            if int8_kv:
+                c[key + "s"] = spool
         for key in ("ck", "cv"):           # encdec cross K/V stay dense
             if key in c:
                 c[key] = c[key].at[:, slot].set(
@@ -189,11 +246,35 @@ class ServeEngine:
     def __init__(self, model, *, n_slots: int = 4, max_len: int = 128,
                  params=None, bucket_prompts: bool = True,
                  paged: Optional[bool] = None, page_size: int = 32,
-                 n_pages: Optional[int] = None):
+                 n_pages: Optional[int] = None,
+                 wdtype: Optional[str] = None,
+                 kv_dtype: Optional[str] = None):
         self.model = model
         self.cfg = model.cfg
         self.n_slots = n_slots
         self.max_len = max_len
+        if wdtype not in (None, "bf16", "int8"):
+            raise ValueError(f"wdtype must be None/'bf16'/'int8', got {wdtype!r}")
+        if wdtype == "int8":
+            if self.cfg.family not in _ATTN_FAMILIES:
+                raise ValueError(
+                    f"wdtype='int8' applies to attention families, not "
+                    f"{self.cfg.family!r}")
+            from repro.models.quantized import quantize_params
+            params = quantize_params(params, self.cfg)
+        elif wdtype == "bf16":
+            params = jax.tree.map(
+                lambda p: p.astype(jnp.bfloat16)
+                if jnp.issubdtype(p.dtype, jnp.floating) else p, params)
+        self.wdtype = wdtype
+        if kv_dtype not in _KV_DTYPES:
+            raise ValueError(f"unknown kv_dtype {kv_dtype!r}")
+        self.kv_dtype = _KV_DTYPES[kv_dtype]
+        if self.kv_dtype != jnp.float32 \
+                and self.cfg.family not in _ATTN_FAMILIES:
+            raise ValueError(
+                f"kv_dtype={kv_dtype!r} applies to attention-family KV "
+                f"caches, not {self.cfg.family!r} recurrent state")
         self.params = params
         self.stats = EngineStats()
         self._queue: List[Request] = []
@@ -225,6 +306,11 @@ class ServeEngine:
                 raise ValueError(
                     f"max_len {max_len} is not a multiple of page_size "
                     f"{page_size}")
+        # sliding-window page recycling: attention configs with a window hold
+        # O(window) live pages — out-of-window pages are freed mid-flight.
+        # (encdec self-attention ignores cfg.window, so it stays full-span.)
+        self._window = self.cfg.window \
+            if self.paged and self.cfg.family != "encdec" else 0
         if self.paged:
             self.page_size = page_size
             self.pages_per_seq = max_len // page_size
@@ -233,7 +319,11 @@ class ServeEngine:
                             if n_pages is None else n_pages)
             assert self.n_pages >= 2, self.n_pages
             self._free_pages = list(range(self.n_pages - 1, 0, -1))
-            self._slot_pages: List[List[int]] = [[] for _ in range(n_slots)]
+            # logical page index -> physical page, per slot
+            self._slot_pages: List[Dict[int, int]] = [
+                {} for _ in range(n_slots)]
+            # highest logical page the request may ever write (exclusive)
+            self._slot_cap = [0] * n_slots
         # donation is unimplemented on CPU (harmless but warns per compile)
         donate = {} if jax.default_backend() == "cpu" else \
             {"donate_argnums": (2,)}
@@ -271,7 +361,21 @@ class ServeEngine:
                 return dict(cache, page_table=cache["page_table"]
                             .at[slot].set(0))
 
+            def _remap_entry(cache, slot, j_dead, j_new, phys):
+                # window recycling: a page that fell out of the attention
+                # window becomes the slot's next logical page (its stale rows
+                # sit at positions >= kv_len until overwritten — masked, the
+                # same invariant pad rows rely on)
+                pt = cache["page_table"].at[slot, j_dead].set(0)
+                return dict(cache, page_table=pt.at[slot, j_new].set(phys))
+
+            def _unmap_entry(cache, slot, j_dead):
+                return dict(cache, page_table=cache["page_table"]
+                            .at[slot, j_dead].set(0))
+
             self._unmap_jit = jax.jit(_unmap, **paste_donate)
+            self._remap_entry_jit = jax.jit(_remap_entry, **paste_donate)
+            self._unmap_entry_jit = jax.jit(_unmap_entry, **paste_donate)
         else:
             def _paste(cache, pf, slot, pos):
                 self.stats.paste_compiles += 1
@@ -282,11 +386,11 @@ class ServeEngine:
         self._paste_jit = jax.jit(_paste, **paste_donate)
         self._next_tok = np.zeros((n_slots, 1), np.int32)
         if self.paged:
-            abs_cache = model.cache_shape(n_slots, max_len, jnp.float32,
+            abs_cache = model.cache_shape(n_slots, max_len, self.kv_dtype,
                                           page_size=self.page_size,
                                           n_pages=self.n_pages)
         else:
-            abs_cache = model.cache_shape(n_slots, max_len, jnp.float32)
+            abs_cache = model.cache_shape(n_slots, max_len, self.kv_dtype)
         self._cache = jax.tree.map(
             lambda s: jnp.zeros(s.shape, s.dtype), abs_cache)
 
@@ -310,9 +414,28 @@ class ServeEngine:
 
     def _pages_for(self, plen: int, max_new: int) -> int:
         """Pages reserved at admission: every row the request can ever write
-        (prompt + generated, one row per generated token, capacity-capped)."""
+        (prompt + generated, one row per generated token, capacity-capped).
+
+        Window configs reserve only the live span: pages below the attention
+        window's floor are never backed, and ceil(window/page)+2 pages are
+        enough to slide the window to the end of the request (out-of-window
+        pages are recycled forward every tick — see `_recycle_window_pages`),
+        so occupancy is O(window), not O(position)."""
         rows = min(self.max_len, plen + max_new)
-        return -(-rows // self.page_size)
+        full = -(-rows // self.page_size)
+        if not self._window:
+            return full
+        return min(full - self._live_lo(plen), self._window_pages())
+
+    def _live_lo(self, plen: int) -> int:
+        """First logical page a window request can still read or write at its
+        first decode step (the replay writes position plen-1)."""
+        return max(0, plen - 1 - self._window) // self.page_size
+
+    def _window_pages(self) -> int:
+        """Mapped pages that always cover [pos-window, pos] plus one page of
+        write-ahead slack while the window slides."""
+        return (self._window - 1) // self.page_size + 3
 
     def kv_cache_bytes(self) -> int:
         return sum(x.size * x.dtype.itemsize
@@ -336,12 +459,17 @@ class ServeEngine:
                 if len(self._free_pages) < need:
                     return
                 pages = [self._free_pages.pop() for _ in range(need)]
-                self._slot_pages[slot] = pages
+                lo = self._live_lo(plen) if self._window else 0
+                self._slot_pages[slot] = {lo + i: p
+                                          for i, p in enumerate(pages)}
+                self._slot_cap[slot] = -(-min(self.max_len,
+                                              plen + r.max_new_tokens)
+                                         // self.page_size)
                 self.stats.pages_in_use += need
                 self.stats.peak_pages_in_use = max(
                     self.stats.peak_pages_in_use, self.stats.pages_in_use)
                 page_row = np.zeros((self.pages_per_seq,), np.int32)
-                page_row[:need] = pages
+                page_row[lo:lo + need] = pages
             self._queue.pop(0)
             blen = bucket_length(plen, self.max_len) if self.bucket_prompts \
                 else plen
@@ -393,9 +521,9 @@ class ServeEngine:
         if self.paged:
             freed = self._slot_pages[slot]
             if freed:
-                self._free_pages.extend(freed)
+                self._free_pages.extend(freed.values())
                 self.stats.pages_in_use -= len(freed)
-                self._slot_pages[slot] = []
+                self._slot_pages[slot] = {}
             self._cache = self._unmap_jit(self._cache, jnp.int32(slot))
 
     # ----------------------------------------------------------------- decode
@@ -430,7 +558,41 @@ class ServeEngine:
                 r.done = True
                 r.t_done = time.time()
                 self._release(slot)
+        if self._window:
+            self._recycle_window_pages(pos)
         return True
+
+    def _recycle_window_pages(self, pos):
+        """Free pages that fell fully out of the attention window.
+
+        A freed page either becomes the slot's next logical page (the table
+        entry moves forward, no pool traffic — the window slides in place) or,
+        once the request's whole span is mapped, returns to the free list so
+        queued requests can admit. Runs on the already-synced `pos`; at most
+        one page transitions per slot per page_size ticks."""
+        ps = self.page_size
+        for slot, r in enumerate(self._slots):
+            if r is None or not self._slot_pages[slot]:
+                continue
+            m = self._slot_pages[slot]
+            p = int(pos[slot])                   # next write index
+            dead = sorted(j for j in m if (j + 1) * ps <= p - self._window)
+            if not dead:
+                continue
+            nxt = max(m) + 1
+            for j in dead:
+                phys = m.pop(j)
+                if nxt < self._slot_cap[slot]:
+                    m[nxt] = phys
+                    self._cache = self._remap_entry_jit(
+                        self._cache, jnp.int32(slot), jnp.int32(j),
+                        jnp.int32(nxt), jnp.int32(phys))
+                    nxt += 1
+                else:
+                    self._free_pages.append(phys)
+                    self.stats.pages_in_use -= 1
+                    self._cache = self._unmap_entry_jit(
+                        self._cache, jnp.int32(slot), jnp.int32(j))
 
     def run_to_completion(self, max_ticks: int = 10_000) -> EngineStats:
         ticks = 0
@@ -443,15 +605,20 @@ class ServeEngine:
 
 def generate_greedy(model, params, prompt: np.ndarray, n_tokens: int,
                     max_len: int = 128, paged: bool = False,
+                    wdtype: Optional[str] = None,
+                    kv_dtype: Optional[str] = None,
                     extras: Optional[Dict[str, np.ndarray]] = None) -> List[int]:
     """Single-request reference path (the oracle for engine equivalence).
 
     Runs with bucketing OFF — exact-length prefill — and a DENSE cache by
     default, so equivalence tests against a bucketed/paged engine actually
     exercise the padded-prefill + replay and page-table paths instead of
-    comparing them to themselves."""
+    comparing them to themselves. With wdtype/kv_dtype this is the dense
+    INT8 oracle: row quantization is layout-independent, so a paged int8
+    engine must reproduce its tokens exactly."""
     eng = ServeEngine(model, n_slots=1, max_len=max_len, params=params,
-                      bucket_prompts=False, paged=paged)
+                      bucket_prompts=False, paged=paged, wdtype=wdtype,
+                      kv_dtype=kv_dtype)
     req = eng.submit(prompt, max_new_tokens=n_tokens, extras=extras)
     eng.run_to_completion()
     return req.out_tokens

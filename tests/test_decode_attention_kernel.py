@@ -171,6 +171,73 @@ def test_paged_bf16_pool_stays_in_storage_dtype():
                            - got.astype(jnp.float32))) < 2e-2
 
 
+# ------------------------------------------------------------------- int8 path
+def _int8_inputs(seed, b, kv, g, d, smax):
+    """int8 cache + per-row f16 scales, from quantizing an f32 cache — the
+    jnp reference with the same operands is the dequant oracle."""
+    from repro.models.quantized import quantize_kv_rows
+    q, k, v, kv_len = _inputs(seed, b, kv, g, d, smax)
+    k8, ks = quantize_kv_rows(k)
+    v8, vs = quantize_kv_rows(v)
+    return q, k8, ks, v8, vs, kv_len
+
+
+def test_int8_dense_fused_dequant_matches_reference():
+    """Dense int8 cache: the kernel's fused (tile * scale) dequant must match
+    the jnp path's materialized dequant."""
+    q, k8, ks, v8, vs, kv_len = _int8_inputs(31, 2, 2, 4, 64, 256)
+    want = decode_attention(q, k8, v8, kv_len, k_scale=ks, v_scale=vs,
+                            impl="reference")
+    got = pallas_decode(q, k8, v8, kv_len, k_scale=ks, v_scale=vs,
+                        interpret=True)
+    assert jnp.max(jnp.abs(want - got)) < 2e-5
+
+
+def test_int8_paged_fused_dequant_matches_reference():
+    """Paged int8 pools: scales gather through the same page-table entries as
+    their K/V tiles; kernel == jnp gather-then-dequant oracle."""
+    from repro.models.quantized import quantize_kv_rows
+    q, pk, pv, pt, kd, vd = _paged_inputs(33, 2, 2, 2, 32, ps=16,
+                                          pages_per_seq=4)
+    pk8, pks = quantize_kv_rows(pk)
+    pv8, pvs = quantize_kv_rows(pv)
+    kv_len = jnp.asarray([37, 61], jnp.int32)
+    want = decode_attention(q, pk8, pv8, kv_len, page_table=pt,
+                            k_scale=pks, v_scale=pvs, impl="reference")
+    got = pallas_decode(q, pk8, pv8, kv_len, page_table=pt,
+                        k_scale=pks, v_scale=pvs, interpret=True)
+    assert got.dtype == q.dtype
+    assert jnp.max(jnp.abs(want - got)) < 2e-5
+
+
+@pytest.mark.parametrize("window", [24, 40])
+def test_int8_paged_sliding_window(window):
+    from repro.models.quantized import quantize_kv_rows
+    q, pk, pv, pt, kd, vd = _paged_inputs(35, 2, 2, 2, 32, ps=16,
+                                          pages_per_seq=4)
+    pk8, pks = quantize_kv_rows(pk)
+    pv8, pvs = quantize_kv_rows(pv)
+    kv_len = jnp.asarray([29, 64], jnp.int32)
+    want = decode_attention(q, pk8, pv8, kv_len, page_table=pt, window=window,
+                            k_scale=pks, v_scale=pvs, impl="reference")
+    got = pallas_decode(q, pk8, pv8, kv_len, page_table=pt, window=window,
+                        k_scale=pks, v_scale=pvs, block_k=8, interpret=True)
+    assert jnp.max(jnp.abs(want - got)) < 2e-5
+
+
+def test_int8_quantized_cache_close_to_f32_cache():
+    """End-to-end numerics: attention over the quantized cache stays within
+    the int8 grid error of attention over the original f32 cache."""
+    q, k, v, kv_len = _inputs(37, 2, 2, 2, 64, 128)
+    from repro.models.quantized import quantize_kv_rows
+    k8, ks = quantize_kv_rows(k)
+    v8, vs = quantize_kv_rows(v)
+    exact = decode_attention(q, k, v, kv_len, impl="reference")
+    quant = pallas_decode(q, k8, v8, kv_len, k_scale=ks, v_scale=vs,
+                          interpret=True)
+    assert jnp.max(jnp.abs(exact - quant)) < 0.05
+
+
 def test_dispatch_stays_reference_off_tpu():
     """On CPU/GPU the model-level entry point keeps the jnp path (the kernel
     is opt-in via impl='pallas' with interpret)."""

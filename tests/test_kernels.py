@@ -41,6 +41,26 @@ def test_int8_matmul_block_shapes():
                                    rtol=1e-2, atol=1e-2)
 
 
+@pytest.mark.parametrize("m,k,n", [
+    (64, 256, 64),      # all three dims below the default blocks: bm=m,
+    (32, 128, 384),     # bn=n, bk=k clamp paths
+    (8, 512, 128),      # tiny M (decode batch), exact default bk
+    (128, 384, 256),    # K below bk and not a multiple of 512
+    (4, 1024, 128),     # decode-shaped: batch-4 row block, deep K
+])
+def test_int8_matmul_clamped_blocks(m, k, n):
+    """M,N,K off the 128/128/512 default grid exercise the bm/bn/bk
+    clamping paths (block = min(default, dim)); kernel == jnp dequant ref."""
+    kx, kw = jax.random.split(jax.random.key(m + k + n))
+    x = _rand(kx, (m, k), jnp.float32)
+    w = _rand(kw, (k, n), jnp.float32)
+    w_q, scales = ops.quantize_weight(w)
+    got = ops.int8_matmul(x, w_q, scales, interpret=True)
+    want = ref.int8_matmul_ref(x, w_q, scales)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5 * float(jnp.std(want)))
+
+
 def test_int8_quantization_error_bounded():
     w = _rand(jax.random.key(2), (512, 128), jnp.float32)
     w_q, s = ops.quantize_weight(w)
@@ -127,3 +147,29 @@ def test_quantize_matches_ref():
     qr, sr, nr = ref.quantize_blocks_ref(x, block=256)
     np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
     np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+
+
+@pytest.mark.parametrize("shape", [(255,), (257,), (256 * 8,), (256 * 8 + 1,)])
+def test_quantize_blocks_grid_pad_edges(shape):
+    """Flat sizes straddling the (block x rows_per_tile) grid-tile boundary:
+    the pad rows must not leak into the reconstructed prefix, and the error
+    stays within half a grid step per block."""
+    x = _rand(jax.random.key(sum(shape)), shape, jnp.float32)
+    q, s, n = ops.quantize_blocks(x, block=256, interpret=True)
+    assert n == shape[0]
+    back = ops.dequantize_blocks(q, s, n, shape, dtype=jnp.float32,
+                                 interpret=True)
+    bound = np.repeat(np.asarray(s), 256)[:n].reshape(shape) * 0.5
+    assert (np.abs(np.asarray(x) - np.asarray(back)) <= bound + 1e-6).all()
+
+
+def test_quantize_weight_channelwise_bound():
+    """Per-output-channel weight quantization (the serving wdtype='int8'
+    pass): each channel reconstructs within scale/2 OF ITS OWN scale."""
+    from repro.models.quantized import quantize_weight_channelwise
+    w = _rand(jax.random.key(12), (256, 96), jnp.float32)
+    qw = quantize_weight_channelwise(w, (0,))
+    back = qw["int8_q"].astype(jnp.float32) * qw["s"]
+    err = np.abs(np.asarray(w) - np.asarray(back))
+    bound = np.asarray(qw["s"]) * 0.5 + 1e-6   # (1, 96) broadcasts per channel
+    assert (err <= bound).all()

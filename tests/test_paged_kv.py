@@ -43,6 +43,9 @@ def test_paged_matches_dense_oracle_across_page_boundaries(smol):
     for n in lengths:
         assert reqs[n].done
         assert reqs[n].out_tokens == solo[n], (n, reqs[n].out_tokens, solo[n])
+    # pool occupancy: every reserved page returned on retirement
+    assert eng.stats.pages_in_use == 0
+    assert len(eng._free_pages) == eng.n_pages - 1
 
 
 def test_prompt_len_equals_max_len(smol):
@@ -220,6 +223,8 @@ def test_idle_slot_never_corrupts_pool_pages(smol):
     eng.run_to_completion()
     for key, r in reqs.items():
         assert r.out_tokens == solo[key], (key, r.out_tokens, solo[key])
+    assert eng.stats.pages_in_use == 0
+    assert len(eng._free_pages) == eng.n_pages - 1
 
 
 # ------------------------------------------------------------------- summary
