@@ -56,6 +56,13 @@ GATES = {
         # same-run but dequant work makes the CPU reference path noisy; the
         # TPU kernels are the real datapath, so gate loosely here
         "int8_vs_f32_decode_ratio": ("higher", 0.35),
+        # chunked prefill (PR 4): stall ticks and pad waste are DETERMINISTIC
+        # tick/token counts on fixed traffic — any increase is a scheduler
+        # regression (stall must stay 0: the one-chunk-per-tick invariant)
+        "chunked_prefill_stall_ticks": ("lower", 0.0),
+        "chunked_pad_waste": ("lower", 0.05),
+        "chunked_mixed_tokens_per_s": ("higher", 0.25),
+        "sampled_tokens_per_s": ("higher", 0.25),
         # greedy int8-vs-f32 prefix divergence: deterministic on a fixed
         # runner/jax build (env-gated), drifts only if quantization quality
         # actually moves
@@ -71,12 +78,18 @@ GATES = {
 
 # machine-speed-free metrics: enforced even across runner classes
 RATIO_METRICS = {"paged_kv_shrink", "bucketing_speedup", "int8_kv_shrink",
-                 "int8_vs_f32_decode_ratio"}
+                 "int8_vs_f32_decode_ratio", "chunked_prefill_stall_ticks",
+                 "chunked_pad_waste"}
 
 # absolute slack on top of the fractional tolerance, for metrics whose
 # baseline can legitimately be 0.0 (a multiplicative gate at b=0 would fail
 # on ANY nonzero value): divergence may move by this much regardless of b
-ABS_SLACK = {"int8_token_divergence": 0.05}
+ABS_SLACK = {"int8_token_divergence": 0.05,
+             # stall ticks baseline IS 0 for the chunked engine — any
+             # half-tick of slack only exists to let the multiplicative
+             # form evaluate; an increase to >= 1 tick still fails
+             "chunked_prefill_stall_ticks": 0.5,
+             "chunked_pad_waste": 0.02}
 
 
 def load(d: pathlib.Path, section: str):

@@ -258,9 +258,12 @@ def bench_serve():
         return out
 
     metrics = {}
+    # chunked_prefill=False on both legs: this pair isolates the BUCKETING
+    # win (compile-count collapse); the chunked scheduler is measured by its
+    # own section below
     for tag, bucketed in (("fast", True), ("no_bucketing", False)):
         eng = ServeEngine(model, n_slots=4, max_len=64, params=params,
-                          bucket_prompts=bucketed)
+                          bucket_prompts=bucketed, chunked_prefill=False)
         ps = prompts()
         t0 = time.perf_counter()
         for p in ps:
@@ -384,6 +387,60 @@ def bench_serve():
           f"kv_shrink_vs_bf16={metrics['int8_kv_shrink']:.3f},"
           f"vs_f32_ratio={metrics['int8_vs_f32_decode_ratio']:.2f},"
           f"token_divergence={metrics['int8_token_divergence']:.3f}")
+
+    # ---- chunked page-granular prefill vs monolithic (PR 4) ---------------
+    # Mixed long/short traffic against a long-context paged engine: the
+    # monolithic engine stalls the whole decode batch on every long prefill
+    # (head-of-line blocking, counted in chunk-equivalents beyond the
+    # one-chunk budget); the chunked engine runs at most one chunk per tick,
+    # so its stall count is 0 by construction and its padding waste is
+    # capped at one chunk per prompt. Both stall and pad-waste are
+    # DETERMINISTIC tick/token counts — machine-free, gated tight.
+    def mixed_traffic(eng):
+        rng2 = np.random.default_rng(7)
+        eng.submit(np.asarray(rng2.integers(0, cfg.vocab_size, 12),
+                              np.int32), max_new_tokens=24)
+        eng.step()                      # a short request is already decoding
+        for i in range(10):
+            n = 200 + 17 * i if i % 3 == 0 else 8 + 3 * i   # 4 long, 6 short
+            eng.submit(np.asarray(rng2.integers(0, cfg.vocab_size, n),
+                                  np.int32), max_new_tokens=8)
+        t0 = time.perf_counter()
+        stats = eng.run_to_completion()
+        return stats, time.perf_counter() - t0
+
+    for tag, kw in (("monolithic", dict(chunked_prefill=False)),
+                    ("chunked", {})):
+        eng = ServeEngine(model, n_slots=4, max_len=512, params=params,
+                          page_size=16, **kw)
+        stats, dt = mixed_traffic(eng)
+        s = stats.summary()
+        metrics[f"{tag}_prefill_stall_ticks"] = stats.decode_stall_ticks
+        metrics[f"{tag}_pad_waste"] = s["pad_waste_ratio"]
+        metrics[f"{tag}_mixed_tokens_per_s"] = stats.tokens_out / dt
+        print(f"serve,{tag}_prefill,stall_ticks={stats.decode_stall_ticks},"
+              f"pad_waste={s['pad_waste_ratio']:.3f},"
+              f"tokens_per_s={stats.tokens_out / dt:.1f},"
+              f"chunks={stats.prefill_chunks}")
+    print(f"serve,chunked_vs_monolithic,stall "
+          f"{metrics['monolithic_prefill_stall_ticks']}->"
+          f"{metrics['chunked_prefill_stall_ticks']},pad_waste "
+          f"{metrics['monolithic_pad_waste']:.3f}->"
+          f"{metrics['chunked_pad_waste']:.3f}")
+
+    # ---- per-slot sampling overhead ---------------------------------------
+    # sampled decode vs greedy decode, same engine config: the sampler rides
+    # the same single decode jit, so the delta is the vmapped sort/cumsum
+    eng = ServeEngine(model, n_slots=4, max_len=160, params=params)
+    for p in prompts(4):
+        eng.submit(p, max_new_tokens=60, sample_params=(0.8, 40, 0.95),
+                   seed=11)
+    t0 = time.perf_counter()
+    stats = eng.run_to_completion()
+    dt = time.perf_counter() - t0
+    metrics["sampled_tokens_per_s"] = stats.tokens_out / dt
+    print(f"serve,sampled,tokens_per_s={stats.tokens_out / dt:.1f},"
+          f"temperature=0.8,top_k=40,top_p=0.95")
 
     # same-run ratio: machine-speed cancels, so the regression gate can hold
     # this tight even across runner generations

@@ -20,23 +20,29 @@ from repro.models import ExecOptions, build_model  # noqa: E402
 from repro.serve.engine import ServeEngine   # noqa: E402
 
 
-def run(params, model, label, **engine_kw):
+def run(params, model, label, sample_params=None, **engine_kw):
     eng = ServeEngine(model, n_slots=4, max_len=96, params=params,
                       **engine_kw)
     rng = np.random.default_rng(0)
     reqs = []
     for i in range(10):
-        plen = int(rng.integers(8, 24))
+        # mixed traffic: a few long prompts exercise the chunked prefill
+        plen = int(rng.integers(40, 80)) if i % 4 == 0 \
+            else int(rng.integers(8, 24))
         prompt = rng.integers(0, model.cfg.vocab_size, plen).astype(np.int32)
-        reqs.append(eng.submit(prompt, max_new_tokens=8))
+        reqs.append(eng.submit(prompt, max_new_tokens=8,
+                               sample_params=sample_params, seed=i))
     t0 = time.time()
     stats = eng.run_to_completion()
     wall = time.time() - t0
-    ttft = [r.t_first_token - r.t_enqueue for r in reqs]
-    print(f"\n[{label}] {stats.summary()}")
+    s = stats.summary()
+    print(f"\n[{label}] {s}")
     print(f"[{label}] wall {wall:.2f}s  "
           f"decode throughput {stats.tokens_out / wall:.1f} tok/s  "
-          f"mean slots busy {stats.occupancy_sum / max(stats.decode_steps,1):.2f}")
+          f"mean slots busy {s['mean_occupancy'] * eng.n_slots:.2f}  "
+          f"prefill chunks {stats.prefill_chunks}  "
+          f"stall ticks {stats.decode_stall_ticks}  "
+          f"pad waste {s['pad_waste_ratio']:.2f}")
     print(f"[{label}] sample output: {reqs[0].out_tokens}")
     print(f"[{label}] kv cache {eng.kv_cache_bytes() / 2**20:.2f} MiB")
     return reqs
@@ -47,13 +53,23 @@ def main():
     model = build_model(cfg, ExecOptions(attn_impl="reference", ce_chunk=32))
     params = model.init(jax.random.key(0))
     print(f"model: {cfg.name} ({cfg.n_layers}L d={cfg.d_model}) — "
-          f"continuous batching, 4 slots, 10 requests")
-    a = run(params, model, "f32 weights + f32 KV")
+          f"continuous batching, 4 slots, 10 requests (mixed long/short)")
+    a = run(params, model, "f32 weights + f32 KV (chunked prefill)")
+    m = run(params, model, "f32, monolithic prefill (baseline)",
+            chunked_prefill=False)
     b = run(params, model, "int8 weights + int8 KV (NPU path)",
             wdtype="int8", kv_dtype="int8")
+    s = run(params, model, "f32, sampled (T=0.8 top_k=40 top_p=0.95)",
+            sample_params=(0.8, 40, 0.95))
     same = sum(x.out_tokens == y.out_tokens for x, y in zip(a, b))
     print(f"\nint8 vs full precision: {same}/10 requests decode identically "
           f"(greedy; small models amplify quantization flips)")
+    exact = sum(x.out_tokens == y.out_tokens for x, y in zip(a, m))
+    print(f"chunked vs monolithic: {exact}/10 requests identical "
+          f"(token-exact scheduler change)")
+    diff = sum(x.out_tokens != y.out_tokens for x, y in zip(a, s))
+    print(f"sampled vs greedy: {diff}/10 requests differ "
+          f"(deterministic per seed)")
 
 
 if __name__ == "__main__":

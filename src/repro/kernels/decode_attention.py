@@ -54,6 +54,30 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels.pltpu_compat import NEG_INF, CompilerParams
 
 
+def paged_index_maps(bpp: int, *, n_prefetch: int, g: int = 1):
+    """(kv_map, s_map) BlockSpec index_map factories for page-pool gathers.
+
+    Shared by the decode kernel below and the chunk-prefill kernel in
+    kernels/flash_attention: both stream K/V (and int8 scale) tiles out of a
+    (n_pages, page_size, ...) pool through a scalar-prefetched page table.
+
+    Grid convention: (batch, head, [q-block,] k-block) with the K-BLOCK INDEX
+    LAST among grid dims and the PAGE TABLE LAST among the `n_prefetch`
+    scalar-prefetch refs. `bpp` is k-blocks per page; `g` divides a flattened
+    query-head grid index down to its KV head (1 when the grid already runs
+    over KV heads, as in the decode kernel)."""
+
+    def kv_map(ib, ih, *rest):
+        ik, pt_ref = rest[len(rest) - n_prefetch - 1], rest[-1]
+        return pt_ref[ib, ik // bpp], ik % bpp, ih // g, 0
+
+    def s_map(ib, ih, *rest):
+        ik, pt_ref = rest[len(rest) - n_prefetch - 1], rest[-1]
+        return pt_ref[ib, ik // bpp], ik % bpp, ih // g
+
+    return kv_map, s_map
+
+
 def _body(kvlen_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
           m_ref, l_ref, acc_ref, *, scale: float, window: int, block_k: int,
           n_k: int):
@@ -214,13 +238,9 @@ def decode_attention(q, k_cache, v_cache, kv_len, *, page_table=None,
     n_k = pages_per_seq * bpp               # logical k-block sweep
     page_table = jnp.asarray(page_table, jnp.int32)
 
-    def kv_map(ib, ih, ik, kvlen_ref, pt_ref):
-        # physical page of this tile's logical page; row offset in block units
-        return pt_ref[ib, ik // bpp], ik % bpp, ih, 0
-
-    def s_map(ib, ih, ik, kvlen_ref, pt_ref):
-        # the scale tile gathers through the same table entry as its K/V tile
-        return pt_ref[ib, ik // bpp], ik % bpp, ih
+    # physical page of each tile's logical page via prefetch; the scale tile
+    # gathers through the same table entry as its K/V tile
+    kv_map, s_map = paged_index_maps(bpp, n_prefetch=2)
 
     kv_spec = pl.BlockSpec((1, block_k, 1, d), kv_map)
     in_specs = [q_spec, kv_spec, kv_spec]

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: blockwise online-softmax attention (causal + window).
+"""Pallas TPU kernels: blockwise online-softmax attention (causal + window).
 
 VMEM tiling: (block_q × D) query tile resident; K/V stream through in
 (block_k × D) tiles along the innermost grid dim; the m/l/acc running
@@ -9,6 +9,16 @@ indices, so the kernel does ~half the tiles of a dense-masked pass.
 
 Layout: q/k/v (B, H, S, D) — B·H is the embarrassingly-parallel leading
 grid dim; q blocks next; k blocks innermost ('arbitrary').
+
+`flash_attention_paged` is the CHUNK-PREFILL variant (PR 4): a fixed-size
+chunk of query rows at global positions q_offset+i attends against the
+serving engine's shared KV page POOLS through a scalar-prefetched page
+table (the same gather convention as kernels/decode_attention — the index
+maps are shared via `paged_index_maps`). `kv_len` is the live length (rows
+the prompt has actually written), so stale pool rows and chunk padding are
+masked exactly like the decode kernel's ragged prefix. Optional
+k_scale/v_scale operands fuse int8 dequant into the tile loads, giving the
+int8 KV pool a chunked prefill path with no densify/cast step.
 """
 
 from __future__ import annotations
@@ -21,6 +31,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.pltpu_compat import NEG_INF, CompilerParams
+from repro.kernels.decode_attention import paged_index_maps
 
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
@@ -113,3 +124,154 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
     )(qf, kf, vf)
     return out.reshape(b, h, sq, d)
+
+
+# ---------------------------------------------------------------------------
+# Chunk-prefill attention against the paged KV pool
+# ---------------------------------------------------------------------------
+
+def _paged_kernel(off_ref, kvlen_ref, pt_ref, *refs, scale: float,
+                  window: int, block_q: int, block_k: int, n_k: int,
+                  quantized: bool):
+    """One (q-block × k-block) online-softmax tile of chunk prefill.
+
+    Ref order after the scalar prefetch (q_offset, kv_len, page_table):
+    inputs (q, k, v[, ks, vs]), output (o), scratch (m, l, acc). The page
+    table is consumed by the K/V index_maps — the body only sees positions.
+    """
+    refs = list(refs)
+    q_ref, k_ref, v_ref = refs[0], refs[1], refs[2]
+    ks_ref, vs_ref = (refs[3], refs[4]) if quantized else (None, None)
+    o_ref, m_ref, l_ref, acc_ref = refs[-4], refs[-3], refs[-2], refs[-1]
+    ib = pl.program_id(0)
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    kvlen = kvlen_ref[ib]
+    q_lo = off_ref[ib] + iq * block_q          # global position of q row 0
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # tile liveness: below the live prefix AND not strictly above the causal
+    # frontier of the block's last q row AND (windowed) not entirely below
+    # the first q row's window floor
+    live = jnp.logical_and(ik * block_k < kvlen,
+                           ik * block_k <= q_lo + block_q - 1)
+    if window > 0:
+        live = jnp.logical_and(live, ik * block_k + block_k > q_lo - window)
+
+    @pl.when(live)
+    def _tile():
+        q = q_ref[0, 0].astype(jnp.float32)             # (block_q, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)       # (block_k, D)
+        if ks_ref is not None:                          # fused int8 dequant
+            k = k * ks_ref[0, :, 0].astype(jnp.float32)[:, None]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+        q_pos = q_lo + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        k_pos = ik * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        ok = jnp.logical_and(k_pos <= q_pos, k_pos < kvlen)
+        if window > 0:
+            ok = jnp.logical_and(ok, q_pos - k_pos < window)
+        s = jnp.where(ok, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        # rows with no valid key yet keep m == NEG_INF; NEG_INF is finite, so
+        # exp(s - m) would be exp(0)=1 for their masked entries — zero them
+        p = jnp.where(ok, jnp.exp(s - m_new), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        m_ref[...] = m_new
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        if vs_ref is not None:
+            v = v * vs_ref[0, :, 0].astype(jnp.float32)[:, None]
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+
+    @pl.when(ik == n_k - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "window", "scale", "block_q", "block_k", "interpret"))
+def flash_attention_paged(q, k_pool, v_pool, page_table, q_offset, kv_len, *,
+                          k_scale=None, v_scale=None, window: int = 0,
+                          scale=None, block_q: int = 128,
+                          block_k: "int | None" = None,
+                          interpret: bool = False):
+    """Chunk-prefill attention through the page table.
+
+    Args:
+      q:          (B, C, KV, G, D) — one fixed-size prefill chunk of queries;
+                  row i sits at global position q_offset[b] + i.
+      k_pool/v_pool: shared (n_pages, page_size, KV, D) page pools.
+      page_table: (B, pages_per_seq) int32 — the slot's physical page per
+                  logical page (null page 0 for unmapped entries).
+      q_offset:   (B,) int32 — global position of the chunk's first row.
+      kv_len:     (B,) int32 — live rows (this chunk's K/V already written).
+      k_scale/v_scale: optional (n_pages, page_size, KV) int8 dequant scales.
+      window:     sliding-window size (0 = full causal).
+
+    Returns (B, C, KV, G, D) in q.dtype, fp32 accumulation throughout.
+    """
+    b, cq, nkv, g, d = q.shape
+    assert (k_scale is None) == (v_scale is None)
+    quantized = k_scale is not None
+    scale = float(scale if scale is not None else d ** -0.5)
+    page_size = k_pool.shape[1]
+    pages_per_seq = page_table.shape[1]
+    block_k = page_size if block_k is None else min(block_k, page_size)
+    assert page_size % block_k == 0, (page_size, block_k)
+    bpp = page_size // block_k
+    n_k = pages_per_seq * bpp
+    block_q = min(block_q, cq)
+    assert cq % block_q == 0, (cq, block_q)
+    h = nkv * g
+    q_offset = jnp.asarray(q_offset, jnp.int32).reshape(b)
+    kv_len = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32).reshape(-1), (b,))
+    page_table = jnp.asarray(page_table, jnp.int32)
+    qf = jnp.moveaxis(q.reshape(b, cq, h, d), 1, 2)    # (B, H, C, D)
+
+    q_spec = pl.BlockSpec((1, 1, block_q, d),
+                          lambda ib, ih, iq, ik, *_: (ib, ih, iq, 0))
+    out_spec = pl.BlockSpec((1, 1, block_q, d),
+                            lambda ib, ih, iq, ik, *_: (ib, ih, iq, 0))
+    kv_map, s_map = paged_index_maps(bpp, n_prefetch=3, g=g)
+    kv_spec = pl.BlockSpec((1, block_k, 1, d), kv_map)
+    in_specs = [q_spec, kv_spec, kv_spec]
+    operands = [qf, k_pool, v_pool]
+    if quantized:
+        s_spec = pl.BlockSpec((1, block_k, 1), s_map)
+        in_specs += [s_spec, s_spec]
+        operands += [k_scale, v_scale]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, h, cq // block_q, n_k),
+        in_specs=in_specs,
+        out_specs=out_spec,
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # m
+            pltpu.VMEM((block_q, 1), jnp.float32),   # l
+            pltpu.VMEM((block_q, d), jnp.float32),   # acc
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_kernel, scale=scale, window=window,
+                          block_q=block_q, block_k=block_k, n_k=n_k,
+                          quantized=quantized),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, cq, d), q.dtype),
+        interpret=interpret,
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+    )(q_offset, kv_len, page_table, *operands)
+    return jnp.moveaxis(out, 1, 2).reshape(b, cq, nkv, g, d)

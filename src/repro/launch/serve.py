@@ -63,6 +63,18 @@ def main():
                     help="KV page size (0 = dense per-slot cache)")
     ap.add_argument("--pages", type=int, default=0,
                     help="pool pages incl. the null page (0 = worst case)")
+    ap.add_argument("--no-chunked-prefill", action="store_true",
+                    help="monolithic bucketed prefill instead of the "
+                         "chunked page-granular default (paged engines)")
+    ap.add_argument("--chunk-pages", type=int, default=2,
+                    help="prefill chunk size in pages (chunk = "
+                         "chunk_pages x page_size tokens)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy argmax)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k filter (0 = off)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus top-p filter (1.0 = off)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -83,16 +95,21 @@ def main():
     paged_kw = {"paged": False} if args.page_size == 0 else {
         "page_size": args.page_size,
         "n_pages": args.pages or None,
+        "chunked_prefill": False if args.no_chunked_prefill else None,
+        "chunk_pages": args.chunk_pages,
     }
     eng = ServeEngine(model, n_slots=args.slots, max_len=args.max_len,
                       params=params, wdtype=wdtype, kv_dtype=kv_dtype,
                       **paged_kw)
+    sample = None if args.temperature == 0 else (
+        args.temperature, args.top_k, args.top_p)
     rng = np.random.default_rng(args.seed)
     reqs = []
-    for _ in range(args.requests):
+    for i in range(args.requests):
         plen = int(rng.integers(8, 24))
         prompt = rng.integers(0, cfg.vocab_size, plen).astype(np.int32)
-        reqs.append(eng.submit(prompt, max_new_tokens=args.new_tokens))
+        reqs.append(eng.submit(prompt, max_new_tokens=args.new_tokens,
+                               sample_params=sample, seed=args.seed + i))
     t0 = time.time()
     stats = eng.run_to_completion()
     wall = time.time() - t0

@@ -218,6 +218,74 @@ def decode_attention(q, k_cache, v_cache, cur_len, *, window=0, scale=None,
     return o.astype(q.dtype)
 
 
+def _pallas_chunk_ok(q, k_pool) -> bool:
+    """Chunk-prefill kernel dispatch: TPU + sublane-tileable pages (32 rows
+    for int8 pools, 16 for bf16) + a chunk the q-block tiles evenly."""
+    if jax.default_backend() != "tpu":
+        return False
+    sublane = 32 if k_pool.dtype == jnp.int8 else 16
+    page_size = k_pool.shape[1]
+    cq = q.shape[1]
+    return (page_size >= sublane and page_size % sublane == 0
+            and cq % min(128, cq) == 0)
+
+
+def chunk_attention_paged(q, k_pool, v_pool, page_table, q_offset, *, kv_len,
+                          window=0, scale=None, k_scale=None, v_scale=None,
+                          impl: str = "auto"):
+    """Chunk-prefill attention: a block of query rows against the page pool.
+
+    q: (B, C, KV, G, D) — one fixed-size prefill chunk whose row i sits at
+    global position q_offset[b] + i; k_pool/v_pool are the engine's shared
+    (n_pages, page_size, KV, D) pools and page_table (B, pages_per_seq) maps
+    the slot's logical pages onto them (null page 0 absorbs unmapped
+    entries). kv_len (B,) is the LIVE length — q_offset + the chunk's real
+    rows, which the caller must already have written to the pool — and masks
+    stale pool rows beyond it; causality masks by global position, so chunk
+    padding rows only ever produce garbage outputs, never garbage inputs.
+
+    k_scale/v_scale: optional (n_pages, page_size, KV) scales for int8
+    pools — the jnp path dequantizes the gathered view (CPU oracle), the
+    Pallas kernel fuses dequant into its tile loads.
+
+    impl: 'auto' dispatches to kernels/flash_attention.flash_attention_paged
+    on TPU; 'pallas' forces the kernel (interpret off-TPU — tests);
+    'reference' forces the jnp gather path below.
+    """
+    b, cq, nkv, g, d = q.shape
+    assert (k_scale is None) == (v_scale is None)
+    scale = scale if scale is not None else d ** -0.5
+    if impl == "auto" and _pallas_chunk_ok(q, k_pool):
+        impl = "pallas"
+    if impl == "pallas":
+        from repro.kernels.flash_attention import flash_attention_paged
+        return flash_attention_paged(
+            q, k_pool, v_pool, page_table, q_offset, kv_len,
+            k_scale=k_scale, v_scale=v_scale, window=window,
+            scale=float(scale), interpret=jax.default_backend() != "tpu")
+    # reference: gather the table back to a dense logical view (CPU oracle)
+    kd = k_pool[page_table].reshape(b, -1, nkv, d)
+    vd = v_pool[page_table].reshape(b, -1, nkv, d)
+    if k_scale is not None:
+        from repro.models.quantized import dequantize_kv_rows
+        kd = dequantize_kv_rows(kd, k_scale[page_table].reshape(b, -1, nkv))
+        vd = dequantize_kv_rows(vd, v_scale[page_table].reshape(b, -1, nkv))
+    smax = kd.shape[1]
+    s = jnp.einsum("bqkgd,bskd->bkgqs", q, kd,
+                   preferred_element_type=jnp.float32) * scale
+    q_pos = jnp.reshape(q_offset, (-1, 1)) + jnp.arange(cq)[None, :]  # (B, C)
+    k_pos = jnp.arange(smax)
+    ok = k_pos[None, None, :] <= q_pos[:, :, None]                # causal
+    ok &= k_pos[None, None, :] < jnp.reshape(kv_len, (-1, 1, 1))  # live rows
+    if window > 0:
+        ok &= q_pos[:, :, None] - k_pos[None, None, :] < window
+    s = jnp.where(ok[:, None, None, :, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(vd.dtype), vd,
+                   preferred_element_type=jnp.float32)
+    return o.astype(q.dtype)
+
+
 def attention(q, k, v, *, causal=True, window=0, scale=None, impl="chunked",
               q_chunk=1024, kv_chunk=1024, unroll=False):
     if impl == "reference" or q.shape[1] <= max(256, q_chunk // 4):

@@ -18,9 +18,10 @@ from repro.models import attention as attn_mod
 from repro.models.common import ParamDef, act_fn, apply_rope, glu_act, rms_norm
 from repro.models.quantized import SCALE_DTYPE, qeinsum
 from repro.models.transformer import (
-    ExecOptions, _expand_kv, attn_schema, chunked_ce_loss, embed_tokens,
-    head_mask, lm_head_weights, paged_kv_shapes, remat_wrap, _write_cache,
+    ExecOptions, _expand_kv, _kv_round_of, _round_kv, _write_cache,
     _write_cache_paged, _write_cache_paged_q, _write_cache_q,
+    _write_chunk_paged, _write_chunk_paged_q, attn_schema, chunked_ce_loss,
+    embed_tokens, head_mask, lm_head_weights, paged_kv_shapes, remat_wrap,
 )
 
 
@@ -55,14 +56,18 @@ def schema(cfg) -> Dict[str, Any]:
     }
 
 
-def _self_attn(x, p, cfg, opts, positions, *, causal, prefix=""):
+def _self_attn(x, p, cfg, opts, positions, *, causal, prefix="", kv_round=None):
     c = opts.constrain
     q = qeinsum("bsd,dhk->bshk", x, p[prefix + "wq"])
     k = qeinsum("bsd,dhk->bshk", x, p[prefix + "wk"])
     v = qeinsum("bsd,dhk->bshk", x, p[prefix + "wv"])
     q = apply_rope(q, positions, theta=cfg.rope_theta)
     k = apply_rope(k, positions, theta=cfg.rope_theta)
-    kx, vx = _expand_kv(k, v, cfg)
+    # decoder prefill with a lossy (bf16/int8) KV cache attends the values
+    # the cache will store (see transformer._round_kv); encoder K/V are
+    # never cached, so the encoder passes kv_round=None
+    ka, va = _round_kv(k, v, kv_round)
+    kx, vx = _expand_kv(ka, va, cfg)
     qp = c(q[:, :, :, None, :], "batchlike", None, "heads_flat", None, None)
     kx = c(kx, "batchlike", None, "heads_flat", None)
     vx = c(vx, "batchlike", None, "heads_flat", None)
@@ -73,13 +78,21 @@ def _self_attn(x, p, cfg, opts, positions, *, causal, prefix=""):
     return qeinsum("bshk,hkd->bsd", o, p[prefix + "wo"]), (k, v)
 
 
-def _cross_attn_full(x, p, cfg, opts, enc_out):
-    """Full cross attention (train/prefill). Returns (out, (ck, cv))."""
+def _cross_attn_full(x, p, cfg, opts, enc_out, kv_round=None):
+    """Full cross attention (train/prefill). Returns (out, (ck, cv)).
+
+    `kv_round` (prefill with a lossy cross cache, i.e. kv_dtype='bf16' —
+    int8 pools keep the cross cache f32) rounds the attended ck/cv through
+    the storage dtype, so the monolithic prefill sees the same cross K/V
+    the decode steps and the chunked prefill read back from the cache."""
     c = opts.constrain
     q = qeinsum("bsd,dhk->bshk", x, p["cwq"])
     ck = qeinsum("bsd,dhk->bshk", enc_out, p["cwk"])
     cv = qeinsum("bsd,dhk->bshk", enc_out, p["cwv"])
-    kx, vx = _expand_kv(ck, cv, cfg)
+    ka, va = (ck, cv) if kv_round is None else (
+        ck.astype(kv_round).astype(ck.dtype),
+        cv.astype(kv_round).astype(cv.dtype))
+    kx, vx = _expand_kv(ka, va, cfg)
     qp = c(q[:, :, :, None, :], "batchlike", None, "heads_flat", None, None)
     o = attn_mod.attention(qp, kx, vx, causal=False, scale=cfg.head_dim ** -0.5,
                            impl=opts.attn_impl, q_chunk=opts.q_chunk,
@@ -110,17 +123,25 @@ def encode(params, frames, cfg, opts: ExecOptions):
     return rms_norm(x, params["enc_norm"])
 
 
-def _dec_layer(h, lp, cfg, opts, positions, enc_out, mode, cache):
+def _dec_layer(h, lp, cfg, opts, positions, enc_out, mode, cache,
+               kv_round=None):
     c = opts.constrain
     if mode != "decode":
         h = c(h, "batchlike", opts.seq_axis, None)
     act = act_fn(glu_act(cfg.activation))
     if mode in ("train", "prefill"):
         a, (k, v) = _self_attn(rms_norm(h, lp["attn_norm"]), lp, cfg, opts,
-                               positions, causal=True)
+                               positions, causal=True,
+                               kv_round=kv_round if mode == "prefill"
+                               else None)
         h = h + a
+        # the cross CACHE stays f32 under int8 KV (cache_shape), so only a
+        # bf16 kv_round actually rounds the cross attention inputs
+        cross_round = kv_round if (mode == "prefill"
+                                   and kv_round is not None
+                                   and kv_round != jnp.int8) else None
         ca, (ck, cv) = _cross_attn_full(rms_norm(h, lp["cross_norm"]), lp, cfg,
-                                        opts, enc_out)
+                                        opts, enc_out, kv_round=cross_round)
         h = h + ca
         new_cache = None
         if mode == "prefill":
@@ -184,14 +205,15 @@ def _dec_layer(h, lp, cfg, opts, positions, enc_out, mode, cache):
 
 
 def decode_stack(params, tokens, cfg, opts, enc_out, *, mode, cache=None,
-                 positions=None):
+                 positions=None, kv_round=None):
     x = embed_tokens(params, tokens, cfg, opts)
     if positions is None:
         positions = jnp.arange(tokens.shape[1])[None, :]
 
     def body(h, xs):
         lp, lc = xs
-        return _dec_layer(h, lp, cfg, opts, positions, enc_out, mode, lc)
+        return _dec_layer(h, lp, cfg, opts, positions, enc_out, mode, lc,
+                          kv_round)
 
     from repro.models.common import scan_or_unroll
     x, new_cache = scan_or_unroll(
@@ -213,15 +235,120 @@ def prefill_cache(params, batch, cfg, opts: ExecOptions):
     """Cache-only prefill (no LM-head) for the serve engine's replay path."""
     enc_out = encode(params, batch["frames"], cfg, opts)
     _, cache = decode_stack(params, batch["tokens"], cfg, opts, enc_out,
-                            mode="prefill")
+                            mode="prefill", kv_round=_kv_round_of(batch))
     b, s = batch["tokens"].shape
     return dict(cache, pos=jnp.full((b,), s, jnp.int32))
+
+
+def prefill_cross(params, batch, cfg, opts: ExecOptions):
+    """Encoder + per-layer cross K/V only — the admission-time half of a
+    CHUNKED encdec prefill. The decoder's cross K/V depend on the frames
+    alone (written once, read every step), so the engine computes them once
+    per request, pastes them into the slot's dense cross cache, and the
+    per-tick `prefill_chunk` calls read them back — the encoder never stalls
+    the decode batch more than once per request."""
+    enc_out = encode(params, batch["frames"], cfg, opts)
+
+    def body(_, lp):
+        ck = qeinsum("bsd,dhk->bshk", enc_out, lp["cwk"])
+        cv = qeinsum("bsd,dhk->bshk", enc_out, lp["cwv"])
+        return None, (ck, cv)
+
+    from repro.models.common import scan_or_unroll
+    _, (ck, cv) = scan_or_unroll(body, None, params["dec"],
+                                 unroll=opts.unroll_scans)
+    return {"ck": ck, "cv": cv}          # (L, B, S_enc, KVp, D)
+
+
+def prefill_chunk(params, batch, cache, cfg, opts: ExecOptions):
+    """One fixed-size chunk of paged decoder prefill (see
+    transformer.prefill_chunk for the contract). Cross-attention reads the
+    slot's dense cross K/V, pasted at admission by `prefill_cross`; batch
+    additionally carries `slot` () int32 to address them."""
+    tokens = batch["tokens"]
+    start, length = batch["start"], batch["length"]
+    page_row = batch["page_row"]
+    slot = batch["slot"]
+    int8_kv = "ks" in cache
+    b, C = tokens.shape
+    positions = start[:, None] + jnp.arange(C)[None, :]
+    x = embed_tokens(params, tokens, cfg, opts)
+    ck_s = jax.lax.dynamic_index_in_dim(cache["ck"], slot, 1, keepdims=True)
+    cv_s = jax.lax.dynamic_index_in_dim(cache["cv"], slot, 1, keepdims=True)
+    kvp, gp = cfg.padded_kv_group
+    hm = head_mask(cfg, x.dtype)[None, None, :, None]
+    act = act_fn(glu_act(cfg.activation))
+    scale = cfg.head_dim ** -0.5
+
+    def dyn(t, i):
+        return jax.lax.dynamic_index_in_dim(t, i, 0, keepdims=False)
+
+    def body(carry, xs):
+        (h, kc, vc, ksc, vsc) = carry if int8_kv else (*carry, None, None)
+        lp, ck, cv, i = xs                       # ck/cv: (1, S_enc, KVp, D)
+        xn = rms_norm(h, lp["attn_norm"])
+        q = qeinsum("bsd,dhk->bshk", xn, lp["wq"])
+        k = qeinsum("bsd,dhk->bshk", xn, lp["wk"])
+        v = qeinsum("bsd,dhk->bshk", xn, lp["wv"])
+        q = apply_rope(q, positions, theta=cfg.rope_theta)
+        k = apply_rope(k, positions, theta=cfg.rope_theta)
+        pk, pv = dyn(kc, i), dyn(vc, i)
+        if int8_kv:
+            psk, psv = dyn(ksc, i), dyn(vsc, i)
+            pk, psk = _write_chunk_paged_q(pk, psk, k[0], start[0], length[0],
+                                           page_row)
+            pv, psv = _write_chunk_paged_q(pv, psv, v[0], start[0], length[0],
+                                           page_row)
+        else:
+            pk = _write_chunk_paged(pk, k[0], start[0], length[0], page_row)
+            pv = _write_chunk_paged(pv, v[0], start[0], length[0], page_row)
+        qg = q.reshape(b, C, kvp, gp, cfg.head_dim)
+        o = attn_mod.chunk_attention_paged(
+            qg, pk, pv, page_row[None], start, kv_len=start + length,
+            scale=scale,
+            k_scale=psk if int8_kv else None,
+            v_scale=psv if int8_kv else None)
+        o = o.reshape(b, C, cfg.n_heads_padded, cfg.head_dim) * hm
+        h = h + qeinsum("bshk,hkd->bsd", o, lp["wo"])
+        xn = rms_norm(h, lp["cross_norm"])
+        cq = qeinsum("bsd,dhk->bshk", xn, lp["cwq"])
+        ckx, cvx = _expand_kv(ck.astype(x.dtype), cv.astype(x.dtype), cfg)
+        qp = cq[:, :, :, None, :]
+        co = attn_mod.attention(qp, ckx, cvx, causal=False, scale=scale,
+                                impl=opts.attn_impl, q_chunk=opts.q_chunk,
+                                kv_chunk=opts.kv_chunk,
+                                unroll=opts.unroll_scans)
+        co = co[:, :, :, 0, :] * hm
+        h = h + qeinsum("bshk,hkd->bsd", co, lp["cwo"])
+        hn = rms_norm(h, lp["ffn_norm"])
+        ff = act(qeinsum("bsd,df->bsf", hn, lp["w1"])) \
+            * qeinsum("bsd,df->bsf", hn, lp["w3"])
+        h = h + qeinsum("bsf,fd->bsd", ff, lp["w2"])
+        kc = jax.lax.dynamic_update_index_in_dim(kc, pk, i, 0)
+        vc = jax.lax.dynamic_update_index_in_dim(vc, pv, i, 0)
+        if int8_kv:
+            ksc = jax.lax.dynamic_update_index_in_dim(ksc, psk, i, 0)
+            vsc = jax.lax.dynamic_update_index_in_dim(vsc, psv, i, 0)
+            return (h, kc, vc, ksc, vsc), None
+        return (h, kc, vc), None
+
+    from repro.models.common import scan_or_unroll
+    init = (x, cache["k"], cache["v"])
+    if int8_kv:
+        init = init + (cache["ks"], cache["vs"])
+    carry, _ = scan_or_unroll(
+        body, init, (params["dec"], ck_s, cv_s, jnp.arange(cfg.n_dec_layers)),
+        unroll=opts.unroll_scans)
+    new_cache = dict(cache, k=carry[1], v=carry[2])
+    if int8_kv:
+        new_cache["ks"], new_cache["vs"] = carry[3], carry[4]
+    return new_cache
 
 
 def prefill(params, batch, cfg, opts: ExecOptions):
     enc_out = encode(params, batch["frames"], cfg, opts)
     hidden, cache = decode_stack(params, batch["tokens"], cfg, opts, enc_out,
-                                 mode="prefill")
+                                 mode="prefill", kv_round=_kv_round_of(batch))
     logits = jnp.einsum("bsd,vd->bsv", hidden[:, -1:, :],
                         lm_head_weights(params, cfg)).astype(jnp.float32)
     b, s = batch["tokens"].shape

@@ -34,6 +34,13 @@ class ModelApi:
     # Cache-only prefill (no LM-head) — serve-engine replay admissions
     # discard prefill logits; None for families without one.
     prefill_cache: Optional[Callable] = None
+    # Chunked page-granular prefill: (params, batch, cache) -> cache, one
+    # fixed-size chunk streamed into the paged KV pool (serve engine's
+    # interleaved prefill). None for families without a paged cache.
+    prefill_chunk: Optional[Callable] = None
+    # encdec only: (params, batch) -> {'ck','cv'} — encoder + cross K/V,
+    # computed once at admission for the chunked prefill path.
+    prefill_cross: Optional[Callable] = None
 
     def init(self, key: jax.Array, dtype=None):
         return init_params(self.schema, key, dtype or _dt(self.cfg))
@@ -59,6 +66,8 @@ def build_model(cfg: ArchConfig, opts: Optional[ExecOptions] = None) -> ModelApi
             decode=functools.partial(mod.decode_step, cfg=cfg, opts=opts),
             cache_shape=functools.partial(mod.cache_shape, cfg),
             prefill_cache=functools.partial(mod.prefill_cache, cfg=cfg,
+                                            opts=opts),
+            prefill_chunk=functools.partial(mod.prefill_chunk, cfg=cfg,
                                             opts=opts),
         )
     if fam == "ssm":
@@ -120,6 +129,10 @@ def build_model(cfg: ArchConfig, opts: Optional[ExecOptions] = None) -> ModelApi
             decode=functools.partial(encdec.decode_step, cfg=cfg, opts=opts),
             cache_shape=functools.partial(encdec.cache_shape, cfg),
             prefill_cache=functools.partial(encdec.prefill_cache, cfg=cfg,
+                                            opts=opts),
+            prefill_chunk=functools.partial(encdec.prefill_chunk, cfg=cfg,
+                                            opts=opts),
+            prefill_cross=functools.partial(encdec.prefill_cross, cfg=cfg,
                                             opts=opts),
         )
     raise ValueError(f"unknown family {fam!r}")

@@ -25,7 +25,8 @@ import jax.numpy as jnp
 from repro.models import attention as attn_mod
 from repro.models import moe as moe_mod
 from repro.models.common import ParamDef, act_fn, apply_rope, glu_act, rms_norm, softcap
-from repro.models.quantized import SCALE_DTYPE, qeinsum, quantize_kv_rows
+from repro.models.quantized import (
+    SCALE_DTYPE, dequantize_kv_rows, qeinsum, quantize_kv_rows)
 
 
 def _noop_constrain(x, *logical):
@@ -143,13 +144,37 @@ def _expand_kv(k, v, cfg):
     return k, v
 
 
+def _round_kv(k, v, kv_round):
+    """Round K/V through the cache storage dtype before attention.
+
+    `kv_round` is the storage dtype (or None = lossless storage). Prefill
+    attention must see the SAME values the cache will hold — otherwise a
+    chunked prefill (which attends already-pasted pool rows) and a monolithic
+    prefill (which would attend fresh activations) diverge numerically and
+    the chunked-vs-oracle token-exactness breaks. int8 takes the full
+    quantize→dequantize round trip (the map the paste/decode write paths
+    apply); bf16 is a cast round trip. This also makes prefill and decode
+    numerics consistent: decode attention always reads stored rows.
+    """
+    if kv_round is None:
+        return k, v
+    if kv_round == jnp.int8:
+        kq, ks = quantize_kv_rows(k)
+        vq, vs = quantize_kv_rows(v)
+        return (dequantize_kv_rows(kq, ks, k.dtype),
+                dequantize_kv_rows(vq, vs, v.dtype))
+    return k.astype(kv_round).astype(k.dtype), v.astype(kv_round).astype(v.dtype)
+
+
 def attn_block(x, p, cfg, opts: ExecOptions, *, positions,
-               mode: str, cache: Optional[dict] = None):
+               mode: str, cache: Optional[dict] = None, kv_round=None):
     """Self-attention. Returns (out, new_cache_entry).
 
     mode: 'train' / 'prefill' (full attention over S positions; 'train' skips
     cache emission so the layer scan carries nothing dead) or 'decode' (one
     position; cache holds (B, Smax, KV, D) K/V; positions (B,1) write index).
+    kv_round: cache storage dtype for lossy (bf16/int8) KV caches — prefill
+    attends the rounded values the cache will store (see `_round_kv`).
     """
     c = opts.constrain
     q, k, v = _project_qkv(x, p, cfg)
@@ -158,7 +183,8 @@ def attn_block(x, p, cfg, opts: ExecOptions, *, positions,
     scale = cfg.head_dim ** -0.5
 
     if mode in ("train", "prefill"):
-        kx, vx = _expand_kv(k, v, cfg)
+        ka, va = (k, v) if mode == "train" else _round_kv(k, v, kv_round)
+        kx, vx = _expand_kv(ka, va, cfg)
         qp = c(q[:, :, :, None, :], "batchlike", None, "heads_flat", None, None)
         kx = c(kx, "batchlike", None, "heads_flat", None)
         vx = c(vx, "batchlike", None, "heads_flat", None)
@@ -267,6 +293,138 @@ def _write_cache_paged_q(pool, spool, kv_new, positions, page_table):
             spool.at[page, positions % ps].set(s[:, 0]))
 
 
+def _chunk_pages(pos, length, page_row, ps):
+    """(page, row) scatter targets for a prefill chunk's K/V rows.
+
+    pos: (C,) global positions start+i; rows past `length` (chunk padding)
+    and positions past the table's logical depth route to the NULL page (0),
+    so padding never touches reserved pages — the capacity edge where a
+    prompt's last chunk exactly fills its final page stays clean."""
+    logical = jnp.minimum(pos // ps, page_row.shape[0] - 1)
+    real = jnp.arange(pos.shape[0]) < length
+    page = jnp.where(real, page_row[logical], 0)
+    return page, pos % ps
+
+
+def _write_chunk_paged(pool, rows, start, length, page_row):
+    """pool: (n_pages, ps, KV, D); rows: (C, KV, D) — stream one prefill
+    chunk's K/V straight into the page pool at global positions start+i."""
+    page, r = _chunk_pages(start + jnp.arange(rows.shape[0]), length,
+                           page_row, pool.shape[1])
+    return pool.at[page, r].set(rows.astype(pool.dtype))
+
+
+def _write_chunk_paged_q(pool, spool, rows, start, length, page_row):
+    """Paged int8 chunk write: same scatter as `_write_chunk_paged` with the
+    rows quantized per (position, kv head) first — identical bytes to the
+    dense/paged decode write paths, which is what keeps chunked int8 engines
+    token-exact against the dense int8 oracle."""
+    q, s = quantize_kv_rows(rows)
+    page, r = _chunk_pages(start + jnp.arange(rows.shape[0]), length,
+                           page_row, pool.shape[1])
+    return pool.at[page, r].set(q), spool.at[page, r].set(s)
+
+
+def prefill_chunk(params, batch, cache, cfg, opts: ExecOptions):
+    """One fixed-size chunk of page-granular prefill (PR 4).
+
+    Computes the chunk's K/V, streams them into the shared page pool through
+    the slot's page row, and runs chunk attention against the slot's live
+    pages (earlier chunks + this one) — so a long prompt prefills in
+    ceil(plen/C) bounded-latency steps interleaved with the decode batch,
+    with one compile total (C is fixed) instead of one per bucket.
+
+    batch:
+      tokens   (1, C) int32 — chunk tokens, zero-padded past `length`
+      start    (1,)   int32 — global position of tokens[:, 0]
+      length   (1,)   int32 — real rows in this chunk
+      page_row (pages_per_seq,) int32 — slot's physical page per logical
+               page (null page 0 beyond the reservation)
+      patch_rows/n_patch (vlm) — patch-embedding rows overlapping the chunk
+
+    Only the K/V pools (and int8 scale pools) change: the slot's page_table
+    row and `pos` are stamped by the engine AFTER the last chunk, so
+    mid-prefill slots stay invisible to the batched decode step (its garbage
+    writes for them land on the null page — the idle-slot-drift guard).
+
+    NOTE: the per-layer body below MIRRORS `layer_fn`/`attn_block` (and
+    encdec.prefill_chunk mirrors encdec._dec_layer) with only the attention
+    swapped for pool-write + chunk_attention_paged. Any layer-math change
+    (norm variant, rope args, softcap, FFN routing) must land in both, or
+    the chunked-vs-oracle token-exactness tests will catch the drift —
+    folding the chunk write/attend into attn_block is a recorded follow-on.
+    """
+    tokens = batch["tokens"]
+    start, length = batch["start"], batch["length"]
+    page_row = batch["page_row"]
+    int8_kv = "ks" in cache
+    b, C = tokens.shape
+    positions = start[:, None] + jnp.arange(C)[None, :]
+    x = embed_tokens(params, tokens, cfg, opts)
+    if cfg.family == "vlm" and "patch_rows" in batch:
+        in_patch = (positions < batch["n_patch"][:, None])[..., None]
+        x = jnp.where(in_patch, batch["patch_rows"].astype(x.dtype), x)
+    dyn = functools.partial(jax.lax.dynamic_index_in_dim, axis=0,
+                            keepdims=False)
+    kvp, gp = cfg.padded_kv_group
+    hm = head_mask(cfg, x.dtype)[None, None, :, None]
+    scale = cfg.head_dim ** -0.5
+
+    def body(carry, xs):
+        (h, kc, vc, ksc, vsc) = carry if int8_kv else (*carry, None, None)
+        lp, i = xs
+        hn = rms_norm(h, lp["attn_norm"], plus_one=cfg.norm_plus_one)
+        q, k, v = _project_qkv(hn, lp, cfg)
+        q = apply_rope(q, positions, fraction=cfg.rope_fraction,
+                       theta=cfg.rope_theta)
+        k = apply_rope(k, positions, fraction=cfg.rope_fraction,
+                       theta=cfg.rope_theta)
+        pk, pv = dyn(kc, i), dyn(vc, i)
+        if int8_kv:
+            psk, psv = dyn(ksc, i), dyn(vsc, i)
+            pk, psk = _write_chunk_paged_q(pk, psk, k[0], start[0], length[0],
+                                           page_row)
+            pv, psv = _write_chunk_paged_q(pv, psv, v[0], start[0], length[0],
+                                           page_row)
+        else:
+            pk = _write_chunk_paged(pk, k[0], start[0], length[0], page_row)
+            pv = _write_chunk_paged(pv, v[0], start[0], length[0], page_row)
+        qg = q.reshape(b, C, kvp, gp, cfg.head_dim)
+        o = attn_mod.chunk_attention_paged(
+            qg, pk, pv, page_row[None], start, kv_len=start + length,
+            window=cfg.window, scale=scale,
+            k_scale=psk if int8_kv else None,
+            v_scale=psv if int8_kv else None)
+        o = o.reshape(b, C, cfg.n_heads_padded, cfg.head_dim) * hm
+        h = h + qeinsum("bshk,hkd->bsd", o, lp["wo"])
+        hn2 = rms_norm(h, lp["ffn_norm"], plus_one=cfg.norm_plus_one)
+        if cfg.family == "moe":
+            f = moe_mod.moe_ffn(hn2, lp, _maybe_group(cfg, opts),
+                                constrain=opts.constrain)
+        else:
+            f = dense_ffn(hn2, lp, cfg, opts)
+        h = h + f
+        kc = jax.lax.dynamic_update_index_in_dim(kc, pk, i, 0)
+        vc = jax.lax.dynamic_update_index_in_dim(vc, pv, i, 0)
+        if int8_kv:
+            ksc = jax.lax.dynamic_update_index_in_dim(ksc, psk, i, 0)
+            vsc = jax.lax.dynamic_update_index_in_dim(vsc, psv, i, 0)
+            return (h, kc, vc, ksc, vsc), None
+        return (h, kc, vc), None
+
+    from repro.models.common import scan_or_unroll
+    init = (x, cache["k"], cache["v"])
+    if int8_kv:
+        init = init + (cache["ks"], cache["vs"])
+    carry, _ = scan_or_unroll(
+        body, init, (params["layers"], jnp.arange(cfg.n_layers)),
+        unroll=opts.unroll_scans)
+    new_cache = dict(cache, k=carry[1], v=carry[2])
+    if int8_kv:
+        new_cache["ks"], new_cache["vs"] = carry[3], carry[4]
+    return new_cache
+
+
 def dense_ffn(x, p, cfg, opts: ExecOptions):
     c = opts.constrain
     act = act_fn(glu_act(cfg.activation))
@@ -277,12 +435,13 @@ def dense_ffn(x, p, cfg, opts: ExecOptions):
 
 
 def layer_fn(x, lp, cfg, opts: ExecOptions, *, positions, mode,
-             cache: Optional[dict] = None):
+             cache: Optional[dict] = None, kv_round=None):
     c = opts.constrain
     x = c(x, "batchlike", opts.seq_axis, None)
     a, new_cache = attn_block(
         rms_norm(x, lp["attn_norm"], plus_one=cfg.norm_plus_one),
-        lp, cfg, opts, positions=positions, mode=mode, cache=cache)
+        lp, cfg, opts, positions=positions, mode=mode, cache=cache,
+        kv_round=kv_round)
     x = x + a
     h = rms_norm(x, lp["ffn_norm"], plus_one=cfg.norm_plus_one)
     if cfg.family == "moe":
@@ -351,7 +510,8 @@ def chunked_ce_loss(hidden, emb, labels, cfg, opts: ExecOptions):
 # Model entry points
 # ---------------------------------------------------------------------------
 
-def _stack_scan(params, x, cfg, opts, *, positions, mode, cache=None):
+def _stack_scan(params, x, cfg, opts, *, positions, mode, cache=None,
+                kv_round=None):
     """lax.scan over stacked layers. cache (if given) is stacked on axis 0."""
     lp = params["layers"]
 
@@ -359,7 +519,7 @@ def _stack_scan(params, x, cfg, opts, *, positions, mode, cache=None):
         layer_params, layer_cache = xs
         h, new_cache = layer_fn(h, layer_params, cfg, opts,
                                 positions=positions, mode=mode,
-                                cache=layer_cache)
+                                cache=layer_cache, kv_round=kv_round)
         return h, new_cache
 
     from repro.models.common import scan_or_unroll
@@ -370,12 +530,20 @@ def _stack_scan(params, x, cfg, opts, *, positions, mode, cache=None):
 
 
 def forward_hidden(params, tokens, cfg, opts, *, patch_embeds=None,
-                   mode="train"):
+                   mode="train", kv_round=None):
     b, s = tokens.shape
     x = embed_tokens(params, tokens, cfg, opts, patch_embeds)
     positions = jnp.arange(s)[None, :]
-    x, cache = _stack_scan(params, x, cfg, opts, positions=positions, mode=mode)
+    x, cache = _stack_scan(params, x, cfg, opts, positions=positions,
+                           mode=mode, kv_round=kv_round)
     return rms_norm(x, params["final_norm"], plus_one=cfg.norm_plus_one), cache
+
+
+def _kv_round_of(batch):
+    """Storage dtype of a lossy KV cache, from the serving engine's zero-size
+    `kv_round` batch marker (absent = lossless storage, attend fresh K/V)."""
+    marker = batch.get("kv_round")
+    return None if marker is None else marker.dtype
 
 
 def train_loss(params, batch, cfg, opts: ExecOptions):
@@ -400,7 +568,7 @@ def prefill_cache(params, batch, cfg, opts: ExecOptions):
     request on the serving hot path."""
     _, kv = forward_hidden(params, batch["tokens"], cfg, opts,
                            patch_embeds=batch.get("patch_embeds"),
-                           mode="prefill")
+                           mode="prefill", kv_round=_kv_round_of(batch))
     b, s = batch["tokens"].shape
     return {"k": kv["k"], "v": kv["v"], "pos": jnp.full((b,), s, jnp.int32)}
 
@@ -409,7 +577,7 @@ def prefill(params, batch, cfg, opts: ExecOptions):
     """Returns (last-position logits, cache dict)."""
     hidden, kv = forward_hidden(params, batch["tokens"], cfg, opts,
                                 patch_embeds=batch.get("patch_embeds"),
-                                mode="prefill")
+                                mode="prefill", kv_round=_kv_round_of(batch))
     last = hidden[:, -1:, :]
     logits = jnp.einsum("bsd,vd->bsv", last, lm_head_weights(params, cfg))
     logits = softcap(logits.astype(jnp.float32), cfg.logit_softcap)

@@ -58,6 +58,46 @@ Cache layout (PR 2 — paged KV):
   * ssm/hybrid families keep their O(1) dense recurrent state; paging does
     not apply.
 
+Chunked page-granular prefill (PR 4) — paged attention-family engines
+default to it:
+  * `_admit` only RESERVES the request's pages and (encdec) computes the
+    cross K/V once; no prompt compute happens at admission. Each engine tick
+    then runs AT MOST ONE fixed-size prefill chunk (chunk = chunk_pages ×
+    page_size tokens) before the decode batch steps: the chunk computes its
+    K/V, streams them straight into the page pool through the slot's page
+    row, and runs chunk attention against the slot's already-pasted pages
+    (kernels/flash_attention.flash_attention_paged on TPU; the jnp gather
+    path is the CPU oracle). Head-of-line blocking is gone — a 4k-token
+    prompt costs ceil(4k/C) bounded ticks interleaved with decode instead of
+    one monolithic stall — and padding waste is capped at ONE CHUNK per
+    prompt (vs ~2x worst-case under pow2 bucketing). One chunk compile total
+    (C is fixed), instead of one prefill compile per bucket.
+  * Mid-prefill slots keep their cache page-table row on the null page and
+    their `active` mask off: the batched decode step's garbage writes for
+    them can only land on the null page (the PR 2 idle-slot guard, extended
+    to admission). The slot's REAL page row rides the chunk call as an
+    explicit argument and is stamped into the cache — with pos = plen-1 for
+    the replay — only after the final chunk.
+  * Windowed configs chunk one page at a time and recycle out-of-window
+    pages BETWEEN chunks (host-side bookkeeping only — the cache table row
+    is still null), so a prompt longer than the window holds O(window)
+    pages while prefilling, not O(plen).
+  * Lossy KV storage (bf16/int8) engines pass a `kv_round` marker into the
+    monolithic prefill so it attends the SAME rounded values the cache
+    stores (models/transformer._round_kv). Chunk attention reads the pool —
+    already rounded — so chunked and monolithic prefill see identical
+    numerics and the chunked engine stays token-exact against the dense
+    oracle for every KV dtype.
+
+Per-slot sampling (PR 4): `submit(..., sample_params=(temperature, top_k,
+top_p), seed=...)` threads per-slot sampling state through ONE jitted
+sampled-decode step (serve/sampling.py, vmapped over slots): each slot's
+PRNG key for its i-th token is fold_in(key(seed), i) — deterministic under
+re-runs, slot reassignment and chunk-size changes. All-greedy ticks (the
+default) dispatch to a separate argmax-only decode jit — bit-identical
+tokens, none of the sampler's per-vocab sort/cumsum work, and the sampled
+variant never even traces unless a request asks for it.
+
 Fast-path design (PR 1):
   * power-of-two prompt bucketing — prefill compiles once per bucket, not once
     per distinct prompt length, so compile count is O(log max_len) in steady
@@ -94,6 +134,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.quantized import quantize_kv_rows
+from repro.serve.sampling import sample_tokens
 
 _ATTN_FAMILIES = ("dense", "moe", "vlm", "encdec")
 
@@ -118,6 +159,12 @@ class Request:
     # extra prefill inputs (e.g. encdec 'frames': (S_enc, d_model)); batched
     # with a leading axis of 1 at admission
     extras: Optional[Dict[str, np.ndarray]] = None
+    # sampling: temperature 0 = greedy argmax (the exactness-test oracle);
+    # top_k 0 and top_p 1.0 disable their filters
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     t_enqueue: float = 0.0
@@ -127,15 +174,23 @@ class Request:
 
 @dataclasses.dataclass
 class EngineStats:
-    prefills: int = 0
+    prefills: int = 0           # requests admitted into prefill
     decode_steps: int = 0
     tokens_out: int = 0
     occupancy_sum: float = 0.0
     prefill_compiles: int = 0   # actual jit traces (bucketing keeps this flat)
     decode_compiles: int = 0
     paste_compiles: int = 0
+    chunk_compiles: int = 0     # chunked prefill: ONE total (fixed shapes)
+    prefill_chunks: int = 0     # chunk-prefill invocations
     pages_in_use: int = 0       # paged engines: currently reserved pages
     peak_pages_in_use: int = 0
+    # head-of-line blocking: ticks the decode batch waited on prefill work
+    # beyond the per-tick one-chunk budget (monolithic prefill of a long
+    # prompt counts ceil(blen/chunk)-1; chunked prefill counts 0)
+    decode_stall_ticks: int = 0
+    prefill_tokens: int = 0     # real prompt tokens prefilled
+    prefill_pad_tokens: int = 0  # padded prefill rows (bucket or chunk waste)
 
     def summary(self) -> Dict[str, float]:
         d = dataclasses.asdict(self)
@@ -143,6 +198,8 @@ class EngineStats:
         # and bench/report consumers index this key unconditionally
         d["mean_occupancy"] = (self.occupancy_sum / self.decode_steps
                                if self.decode_steps else 0.0)
+        d["pad_waste_ratio"] = (self.prefill_pad_tokens / self.prefill_tokens
+                                if self.prefill_tokens else 0.0)
         return d
 
 
@@ -248,7 +305,9 @@ class ServeEngine:
                  paged: Optional[bool] = None, page_size: int = 32,
                  n_pages: Optional[int] = None,
                  wdtype: Optional[str] = None,
-                 kv_dtype: Optional[str] = None):
+                 kv_dtype: Optional[str] = None,
+                 chunked_prefill: Optional[bool] = None,
+                 chunk_pages: int = 2):
         self.model = model
         self.cfg = model.cfg
         self.n_slots = n_slots
@@ -324,6 +383,35 @@ class ServeEngine:
                 {} for _ in range(n_slots)]
             # highest logical page the request may ever write (exclusive)
             self._slot_cap = [0] * n_slots
+        # ---- chunked page-granular prefill (PR 4) --------------------------
+        can_chunk = self.paged and model.prefill_chunk is not None
+        if chunked_prefill is None:
+            self.chunked = can_chunk
+        else:
+            self.chunked = bool(chunked_prefill)
+            if self.chunked and not can_chunk:
+                raise ValueError(
+                    "chunked_prefill requires a paged attention-family "
+                    f"engine (family {self.cfg.family!r}, paged={self.paged})")
+        self.chunk_pages = max(1, int(chunk_pages))
+        if self.chunked and self._window:
+            # windowed slots chunk ONE page at a time so the existing
+            # ceil(window/page)+2 reservation also covers the chunk's
+            # write-ahead — occupancy stays O(window) during prefill
+            self.chunk_pages = 1
+        # chunk token budget; also the stall-metric unit for monolithic
+        # engines (a monolithic prefill of blen tokens counts as
+        # ceil(blen/chunk_tokens) chunk-equivalents of decode stall)
+        self.chunk_tokens = (self.chunk_pages * page_size if self.paged
+                             else min(64, max_len))
+        self._prefill_fifo: List[int] = []     # slots mid-prefill, FIFO
+        self._chunk_next = [0] * n_slots       # next chunk start per slot
+        self._tick_prefill_tokens = 0
+        # ---- per-slot sampling state (PR 4) --------------------------------
+        self._temp = np.zeros((n_slots,), np.float32)
+        self._topk = np.zeros((n_slots,), np.int32)
+        self._topp = np.ones((n_slots,), np.float32)
+        self._sseed = np.zeros((n_slots,), np.int32)
         # donation is unimplemented on CPU (harmless but warns per compile)
         donate = {} if jax.default_backend() == "cpu" else \
             {"donate_argnums": (2,)}
@@ -340,14 +428,32 @@ class ServeEngine:
                 return None, model.prefill_cache(params, batch)
             return model.prefill(params, batch)
 
-        def _decode(params, batch, cache, active):
-            self.stats.decode_compiles += 1
+        def _decode_core(params, batch, cache, active):
             logits, new_cache = model.decode(params, batch, cache)
             # freeze freed slots' stream position: their garbage advance would
             # otherwise drift past max_len tick by tick (idle tick == no-op)
             new_cache["pos"] = jnp.where(active, new_cache["pos"],
                                          cache["pos"])
-            return logits, new_cache
+            return logits[:, -1, :self.cfg.vocab_size], new_cache
+
+        def _decode(params, batch, cache, active):
+            # all-greedy fast path (the default): plain argmax, no sampling
+            # pipeline — the pre-sampling engine's hot loop, unchanged
+            self.stats.decode_compiles += 1
+            logits, new_cache = _decode_core(params, batch, cache, active)
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), new_cache
+
+        def _decode_sample(params, batch, cache, active, sample):
+            # per-slot sampling inside the decode jit: greedy (temperature 0)
+            # rows still take the raw argmax; only (B,) tokens leave device.
+            # Compiled lazily — engines that never sample never trace it.
+            self.stats.decode_compiles += 1
+            logits, new_cache = _decode_core(params, batch, cache, active)
+            toks = sample_tokens(
+                logits.astype(jnp.float32),
+                sample["temperature"], sample["top_k"], sample["top_p"],
+                sample["seed"], sample["counter"])
+            return toks, new_cache
 
         if self.paged:
             def _paste(cache, pf, slot, pos, page_row):
@@ -376,6 +482,39 @@ class ServeEngine:
             self._unmap_jit = jax.jit(_unmap, **paste_donate)
             self._remap_entry_jit = jax.jit(_remap_entry, **paste_donate)
             self._unmap_entry_jit = jax.jit(_unmap_entry, **paste_donate)
+
+            if self.chunked:
+                chunk_donate = {} if jax.default_backend() == "cpu" else \
+                    {"donate_argnums": (2,)}
+
+                def _chunk(params, batch, cache):
+                    self.stats.chunk_compiles += 1   # trace time only
+                    return model.prefill_chunk(params, batch, cache)
+
+                def _finalize(cache, slot, pos, page_row):
+                    # last chunk done: stamp the slot's REAL page row and its
+                    # replay position — only now does the slot become visible
+                    # to the batched decode step
+                    c = dict(cache)
+                    c["page_table"] = c["page_table"].at[slot].set(page_row)
+                    c["pos"] = c["pos"].at[slot].set(pos)
+                    return c
+
+                self._chunk_jit = jax.jit(_chunk, **chunk_donate)
+                self._finalize_jit = jax.jit(_finalize, **paste_donate)
+                if model.prefill_cross is not None:
+                    self._cross_jit = jax.jit(model.prefill_cross)
+
+                    def _paste_cross(cache, ck, cv, slot):
+                        c = dict(cache)
+                        c["ck"] = c["ck"].at[:, slot].set(
+                            ck[:, 0].astype(c["ck"].dtype))
+                        c["cv"] = c["cv"].at[:, slot].set(
+                            cv[:, 0].astype(c["cv"].dtype))
+                        return c
+
+                    self._paste_cross_jit = jax.jit(_paste_cross,
+                                                    **paste_donate)
         else:
             def _paste(cache, pf, slot, pos):
                 self.stats.paste_compiles += 1
@@ -383,7 +522,11 @@ class ServeEngine:
 
         self._prefill_jit = jax.jit(_prefill)
         self._decode_jit = jax.jit(_decode, **donate)
+        self._decode_sample_jit = jax.jit(_decode_sample, **donate)
         self._paste_jit = jax.jit(_paste, **paste_donate)
+        # non-replay first-token sampler (recurrent families sample their
+        # first output from the prefill logits, counter 0)
+        self._sample1_jit = jax.jit(sample_tokens)
         self._next_tok = np.zeros((n_slots, 1), np.int32)
         if self.paged:
             abs_cache = model.cache_shape(n_slots, max_len, self.kv_dtype,
@@ -396,7 +539,12 @@ class ServeEngine:
 
     # ------------------------------------------------------------- lifecycle
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
-               extras: Optional[Dict[str, np.ndarray]] = None) -> Request:
+               extras: Optional[Dict[str, np.ndarray]] = None,
+               sample_params: Optional[tuple] = None,
+               seed: int = 0) -> Request:
+        """Queue a request. sample_params=(temperature, top_k, top_p) turns
+        on per-slot sampling for this request (None = greedy argmax, the
+        temperature=0 fast path); `seed` keys its PRNG stream."""
         prompt = np.asarray(prompt, np.int32)
         assert 1 <= prompt.shape[0] <= self.max_len, prompt.shape
         assert max_new_tokens >= 1, max_new_tokens
@@ -405,9 +553,18 @@ class ServeEngine:
             if need > self.n_pages - 1:
                 raise ValueError(
                     f"request needs {need} pages; pool has {self.n_pages - 1}")
+        temperature, top_k, top_p = 0.0, 0, 1.0
+        if sample_params is not None:
+            temperature, top_k, top_p = sample_params
+            if temperature < 0 or not 0 < top_p <= 1 or top_k < 0:
+                raise ValueError(
+                    f"bad sample_params {(temperature, top_k, top_p)}: need "
+                    "temperature >= 0, 0 < top_p <= 1, top_k >= 0")
         self._next_rid += 1
         req = Request(rid=self._next_rid, prompt=prompt,
                       max_new_tokens=max_new_tokens, extras=extras,
+                      temperature=float(temperature), top_k=int(top_k),
+                      top_p=float(top_p), seed=int(seed),
                       t_enqueue=time.time())
         self._queue.append(req)
         return req
@@ -420,12 +577,16 @@ class ServeEngine:
         window's floor are never backed, and ceil(window/page)+2 pages are
         enough to slide the window to the end of the request (out-of-window
         pages are recycled forward every tick — see `_recycle_window_pages`),
-        so occupancy is O(window), not O(position)."""
+        so occupancy is O(window), not O(position). Chunked windowed prefill
+        starts its mapping at logical page 0 (the first chunk writes row 0)
+        and recycles forward between chunks, so it needs the same
+        ceil(window/page)+2 budget but no live_lo offset."""
         rows = min(self.max_len, plen + max_new)
         full = -(-rows // self.page_size)
         if not self._window:
             return full
-        return min(full - self._live_lo(plen), self._window_pages())
+        lo = 0 if self.chunked else self._live_lo(plen)
+        return min(full - lo, self._window_pages())
 
     def _live_lo(self, plen: int) -> int:
         """First logical page a window request can still read or write at its
@@ -441,13 +602,21 @@ class ServeEngine:
         return sum(x.size * x.dtype.itemsize
                    for x in jax.tree.leaves(self._cache))
 
+    def _sample_state(self, slot: int, r: Request):
+        self._temp[slot] = r.temperature
+        self._topk[slot] = r.top_k
+        self._topp[slot] = r.top_p
+        self._sseed[slot] = r.seed
+
     def _admit(self):
-        """Prefill queued requests into free slots.
+        """Admit queued requests into free slots.
 
         Paged engines additionally reserve the request's worst-case page
         count up front; if the free list can't cover the queue head, admission
         stalls (FIFO — no small-request overtaking) until retirements return
-        pages."""
+        pages. Chunked engines only reserve + (encdec) compute cross K/V
+        here — the prompt itself prefills one chunk per tick in
+        `_prefill_tick`, so admission never stalls the decode batch."""
         for slot in [i for i, r in enumerate(self._slots) if r is None]:
             if not self._queue:
                 return
@@ -459,7 +628,8 @@ class ServeEngine:
                 if len(self._free_pages) < need:
                     return
                 pages = [self._free_pages.pop() for _ in range(need)]
-                lo = self._live_lo(plen) if self._window else 0
+                lo = self._live_lo(plen) \
+                    if (self._window and not self.chunked) else 0
                 self._slot_pages[slot] = {lo + i: p
                                           for i, p in enumerate(pages)}
                 self._slot_cap[slot] = -(-min(self.max_len,
@@ -471,15 +641,39 @@ class ServeEngine:
                 page_row = np.zeros((self.pages_per_seq,), np.int32)
                 page_row[lo:lo + need] = pages
             self._queue.pop(0)
+            self.stats.prefills += 1
+            self.stats.prefill_tokens += plen
+            self._sample_state(slot, r)
+            if self.chunked:
+                # reserve-only admission: the slot's cache table row stays on
+                # the null page (decode's garbage writes can't touch reserved
+                # pages) until the final chunk stamps it in _prefill_tick
+                self._slots[slot] = r
+                self._active[slot] = False
+                self._fresh[slot] = False
+                self._chunk_next[slot] = 0
+                self._prefill_fifo.append(slot)
+                if self.model.prefill_cross is not None:
+                    cross = self._cross_jit(self.params, {
+                        "frames": jnp.asarray(r.extras["frames"])[None]})
+                    self._cache = self._paste_cross_jit(
+                        self._cache, cross["ck"], cross["cv"],
+                        jnp.int32(slot))
+                continue
             blen = bucket_length(plen, self.max_len) if self.bucket_prompts \
                 else plen
             toks = np.zeros((1, blen), np.int32)
             toks[0, :plen] = r.prompt
             batch = {"tokens": jnp.asarray(toks)}
+            if self.kv_dtype != jnp.float32:
+                # lossy KV storage: prefill attends the rounded values the
+                # cache will hold (zero-size marker, dtype carries the info)
+                batch["kv_round"] = jnp.zeros((0,), self.kv_dtype)
             for key, val in (r.extras or {}).items():
                 batch[key] = jnp.asarray(val)[None]
             logits, pf_cache = self._prefill_jit(self.params, batch)
-            self.stats.prefills += 1
+            self.stats.prefill_pad_tokens += blen - plen
+            self._tick_prefill_tokens += blen
             paste_args = () if page_row is None else (jnp.asarray(page_row),)
             if self._replay:
                 # Cache rows [0, plen) are exact under trailing padding; the
@@ -491,8 +685,17 @@ class ServeEngine:
                     jnp.int32(plen - 1), *paste_args)
                 self._next_tok[slot, 0] = int(r.prompt[-1])
             else:
-                first = int(np.argmax(np.asarray(
-                    logits[0, -1, :self.cfg.vocab_size])))
+                lv = jnp.asarray(logits[:, -1, :self.cfg.vocab_size],
+                                 jnp.float32)
+                if r.temperature > 0:
+                    first = int(np.asarray(self._sample1_jit(
+                        lv, jnp.full((1,), r.temperature, jnp.float32),
+                        jnp.full((1,), r.top_k, jnp.int32),
+                        jnp.full((1,), r.top_p, jnp.float32),
+                        jnp.full((1,), r.seed, jnp.int32),
+                        jnp.zeros((1,), jnp.int32)))[0])
+                else:
+                    first = int(np.argmax(np.asarray(lv[0])))
                 self._cache = self._paste_jit(
                     self._cache, pf_cache, jnp.int32(slot), jnp.int32(plen),
                     *paste_args)
@@ -518,6 +721,10 @@ class ServeEngine:
         already removed from / never placed in `_slots`)."""
         self._slots[slot] = None
         self._active[slot] = False
+        self._temp[slot], self._topk[slot] = 0.0, 0
+        self._topp[slot], self._sseed[slot] = 1.0, 0
+        if slot in self._prefill_fifo:          # defensive: never mid-chunk
+            self._prefill_fifo.remove(slot)
         if self.paged:
             freed = self._slot_pages[slot]
             if freed:
@@ -526,22 +733,103 @@ class ServeEngine:
                 self._slot_pages[slot] = {}
             self._cache = self._unmap_jit(self._cache, jnp.int32(slot))
 
+    # ---------------------------------------------------------------- prefill
+    def _page_row(self, slot: int) -> np.ndarray:
+        row = np.zeros((self.pages_per_seq,), np.int32)
+        for j, p in self._slot_pages[slot].items():
+            row[j] = p
+        return row
+
+    def _prefill_tick(self) -> bool:
+        """Run AT MOST ONE fixed-size prefill chunk (FIFO over mid-prefill
+        slots; the head slot finishes all its chunks first — shortest time
+        to first token for the oldest admitted request)."""
+        if not self._prefill_fifo:
+            return False
+        slot = self._prefill_fifo[0]
+        r = self._slots[slot]
+        s = self._chunk_next[slot]
+        plen = r.prompt.shape[0]
+        C = self.chunk_tokens
+        if self._window and s:
+            # free/remap pages that no chunk row >= s can still read — a
+            # prompt longer than the window holds O(window) pages while
+            # prefilling; the cache table row is still null, so this is pure
+            # host bookkeeping until finalize stamps the row
+            self._recycle_slot_pages(slot, s, in_cache=False)
+        n = min(C, plen - s)
+        toks = np.zeros((1, C), np.int32)
+        toks[0, :n] = r.prompt[s:s + n]
+        page_row = self._page_row(slot)
+        batch = {"tokens": jnp.asarray(toks),
+                 "start": jnp.full((1,), s, jnp.int32),
+                 "length": jnp.full((1,), n, jnp.int32),
+                 "page_row": jnp.asarray(page_row)}
+        if self.cfg.family == "vlm":
+            pe = np.asarray((r.extras or {}).get(
+                "patch_embeds", np.zeros((0, self.cfg.d_model), np.float32)))
+            rows = np.zeros((1, C, self.cfg.d_model), np.float32)
+            if s < pe.shape[0]:
+                m = min(C, pe.shape[0] - s)
+                rows[0, :m] = pe[s:s + m]
+            batch["patch_rows"] = jnp.asarray(rows)
+            batch["n_patch"] = jnp.full((1,), pe.shape[0], jnp.int32)
+        if self.cfg.family == "encdec":
+            batch["slot"] = jnp.int32(slot)
+        self._cache = self._chunk_jit(self.params, batch, self._cache)
+        self.stats.prefill_chunks += 1
+        self.stats.prefill_pad_tokens += C - n
+        self._tick_prefill_tokens += C
+        if s + C >= plen:                      # final chunk — slot goes live
+            self._prefill_fifo.pop(0)
+            self._cache = self._finalize_jit(
+                self._cache, jnp.int32(slot), jnp.int32(plen - 1),
+                jnp.asarray(page_row))
+            self._next_tok[slot, 0] = int(r.prompt[-1])
+            self._fresh[slot] = True
+            self._active[slot] = True
+        else:
+            self._chunk_next[slot] = s + C
+        return True
+
     # ----------------------------------------------------------------- decode
     def step(self) -> bool:
-        """One engine tick: admit new work, then one batched decode step."""
+        """One engine tick: admit new work, run at most one prefill chunk,
+        then one batched decode step over the live slots."""
+        had_decode = bool(np.any(self._active))
+        self._tick_prefill_tokens = 0
         self._admit()
-        active = [i for i, r in enumerate(self._slots) if r is not None]
-        if not active:
-            return False
-        logits, self._cache = self._decode_jit(
-            self.params, {"tokens": jnp.asarray(self._next_tok)}, self._cache,
-            jnp.asarray(self._active))
+        chunk_ran = self._prefill_tick() if self.chunked else False
+        if had_decode and self._tick_prefill_tokens > self.chunk_tokens:
+            # decode batch waited on more than one chunk's worth of prefill
+            # this tick — the head-of-line blocking chunking eliminates
+            self.stats.decode_stall_ticks += \
+                -(-self._tick_prefill_tokens // self.chunk_tokens) - 1
+        decoding = [i for i, r in enumerate(self._slots)
+                    if r is not None and self._active[i]]
+        if not decoding:
+            return chunk_ran
+        if any(self._temp[i] > 0 for i in decoding):
+            counter = np.asarray(
+                [len(r.out_tokens) if r is not None else 0
+                 for r in self._slots], np.int32)
+            sample = {"temperature": jnp.asarray(self._temp),
+                      "top_k": jnp.asarray(self._topk),
+                      "top_p": jnp.asarray(self._topp),
+                      "seed": jnp.asarray(self._sseed),
+                      "counter": jnp.asarray(counter)}
+            toks, self._cache = self._decode_sample_jit(
+                self.params, {"tokens": jnp.asarray(self._next_tok)},
+                self._cache, jnp.asarray(self._active), sample)
+        else:
+            toks, self._cache = self._decode_jit(
+                self.params, {"tokens": jnp.asarray(self._next_tok)},
+                self._cache, jnp.asarray(self._active))
         self.stats.decode_steps += 1
-        self.stats.occupancy_sum += len(active) / self.n_slots
-        nxt = np.asarray(jnp.argmax(
-            logits[:, -1, :self.cfg.vocab_size], axis=-1), np.int32)
+        self.stats.occupancy_sum += len(decoding) / self.n_slots
+        nxt = np.asarray(toks, np.int32)
         pos = np.asarray(self._cache["pos"])   # ONE host sync per step
-        for slot in active:
+        for slot in decoding:
             r = self._slots[slot]
             r.out_tokens.append(int(nxt[slot]))
             self._next_tok[slot, 0] = nxt[slot]
@@ -569,28 +857,39 @@ class ServeEngine:
         entry moves forward, no pool traffic — the window slides in place) or,
         once the request's whole span is mapped, returns to the free list so
         queued requests can admit. Runs on the already-synced `pos`; at most
-        one page transitions per slot per page_size ticks."""
-        ps = self.page_size
+        one page transitions per slot per page_size ticks. Mid-prefill slots
+        are SKIPPED — their cache `pos` is stale (chunk progress drives their
+        recycling in `_prefill_tick` instead)."""
         for slot, r in enumerate(self._slots):
-            if r is None or not self._slot_pages[slot]:
+            if r is None or not self._active[slot] \
+                    or not self._slot_pages[slot]:
                 continue
-            m = self._slot_pages[slot]
-            p = int(pos[slot])                   # next write index
-            dead = sorted(j for j in m if (j + 1) * ps <= p - self._window)
-            if not dead:
-                continue
-            nxt = max(m) + 1
-            for j in dead:
-                phys = m.pop(j)
-                if nxt < self._slot_cap[slot]:
-                    m[nxt] = phys
+            self._recycle_slot_pages(slot, int(pos[slot]), in_cache=True)
+
+    def _recycle_slot_pages(self, slot: int, progress: int, *, in_cache: bool):
+        """Recycle one slot's dead pages given `progress` = the next write
+        index (decode: synced pos; chunked prefill: the next chunk's start).
+        `in_cache` mirrors the remap/unmap into the cache's page-table row —
+        False while the slot is mid-prefill and its row is still null."""
+        ps = self.page_size
+        m = self._slot_pages[slot]
+        dead = sorted(j for j in m if (j + 1) * ps <= progress - self._window)
+        if not dead:
+            return
+        nxt = max(m) + 1
+        for j in dead:
+            phys = m.pop(j)
+            if nxt < self._slot_cap[slot]:
+                m[nxt] = phys
+                if in_cache:
                     self._cache = self._remap_entry_jit(
                         self._cache, jnp.int32(slot), jnp.int32(j),
                         jnp.int32(nxt), jnp.int32(phys))
-                    nxt += 1
-                else:
-                    self._free_pages.append(phys)
-                    self.stats.pages_in_use -= 1
+                nxt += 1
+            else:
+                self._free_pages.append(phys)
+                self.stats.pages_in_use -= 1
+                if in_cache:
                     self._cache = self._unmap_entry_jit(
                         self._cache, jnp.int32(slot), jnp.int32(j))
 
@@ -611,11 +910,13 @@ def generate_greedy(model, params, prompt: np.ndarray, n_tokens: int,
     """Single-request reference path (the oracle for engine equivalence).
 
     Runs with bucketing OFF — exact-length prefill — and a DENSE cache by
-    default, so equivalence tests against a bucketed/paged engine actually
-    exercise the padded-prefill + replay and page-table paths instead of
-    comparing them to themselves. With wdtype/kv_dtype this is the dense
-    INT8 oracle: row quantization is layout-independent, so a paged int8
-    engine must reproduce its tokens exactly."""
+    default, so equivalence tests against a bucketed/paged/chunked engine
+    actually exercise the padded-prefill + replay, page-table and
+    chunk-streaming paths instead of comparing them to themselves. With
+    wdtype/kv_dtype this is the dense INT8 oracle: row quantization is
+    layout-independent AND schedule-independent (prefill attends the rounded
+    rows the cache stores — models/transformer._round_kv), so a paged or
+    chunked int8 engine must reproduce its tokens exactly."""
     eng = ServeEngine(model, n_slots=1, max_len=max_len, params=params,
                       bucket_prompts=False, paged=paged, wdtype=wdtype,
                       kv_dtype=kv_dtype)

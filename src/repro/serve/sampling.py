@@ -1,0 +1,63 @@
+"""Per-slot token sampling for the serving engine's jitted decode step.
+
+One vmapped sampler over the decode batch: every slot carries its own
+(temperature, top_k, top_p) parameters and its own PRNG stream, all as plain
+arrays, so the whole batch samples inside the SINGLE decode jit — no retrace
+when requests with different sampling configs share the batch, no extra host
+sync (only the sampled (B,) tokens cross the device boundary, exactly like
+the old argmax path).
+
+PRNG determinism: a slot's key for its i-th output token is
+`fold_in(key(seed), i)` — a pure function of the REQUEST's (seed, token
+index), independent of slot assignment, batch composition, or how prefill
+was chunked. Same seed → same tokens, re-run to re-run and engine to engine.
+
+Greedy is the `temperature <= 0` fast path: those rows take `argmax` of the
+RAW logits (not the masked/scaled ones), bit-identical to the pre-sampling
+engine — the equivalence the temperature=0 ≡ greedy tests pin.
+
+One descending argsort serves both filters (sorting twice — logits for
+top-k, probs for top-p — would double the sampler's dominant O(V log V)
+cost): top-k keeps the first k sorted positions (ties at the k-th value
+resolve by the stable sort's token-id order), and top-p keeps the smallest
+sorted prefix whose softmax mass reaches p (the top token always
+survives). top_k=0 and top_p>=1 disable their filters.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import NEG_INF
+
+
+def _sample_one(logits, temperature, top_k, top_p, seed, counter):
+    """logits (V,) f32 → sampled token () int32."""
+    v = logits.shape[-1]
+    greedy = jnp.argmax(logits).astype(jnp.int32)
+    # ONE descending sort; both filters run in rank space, and the sampled
+    # rank maps back to a token id through `order`
+    order = jnp.argsort(-logits)
+    ld = logits[order]
+    ranks = jnp.arange(v)
+    lk = jnp.where((top_k > 0) & (ranks >= jnp.clip(top_k, 1, v)),
+                   NEG_INF, ld)
+    lt = lk / jnp.maximum(temperature, 1e-6)
+    probs = jax.nn.softmax(lt)                    # already descending
+    keep = (jnp.cumsum(probs) - probs) < top_p    # exclusive prefix mass
+    lt = jnp.where((top_p < 1.0) & ~keep, NEG_INF, lt)
+    key = jax.random.fold_in(jax.random.key(seed), counter)
+    sampled = order[jax.random.categorical(key, lt)].astype(jnp.int32)
+    return jnp.where(temperature > 0, sampled, greedy)
+
+
+def sample_tokens(logits, temperature, top_k, top_p, seed, counter):
+    """Batched per-slot sampling.
+
+    logits (B, V) f32; temperature/top_p (B,) f32; top_k/seed/counter (B,)
+    int32 — `counter` is the slot's output-token index (engine-maintained),
+    which keys the per-token PRNG stream. Returns (B,) int32 tokens.
+    """
+    return jax.vmap(_sample_one)(logits, temperature, top_k, top_p,
+                                 seed, counter)

@@ -1,0 +1,6 @@
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long interpret-mode kernel sweeps and wide engine matrices — "
+        "excluded from the tier-1 run (pytest -m 'not slow'); the CI "
+        "int8-interpret job runs the full suite including them")

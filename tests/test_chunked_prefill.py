@@ -1,0 +1,371 @@
+"""Chunked page-granular prefill + per-slot sampling (PR 4).
+
+The chunked engine streams fixed-size prefill chunks straight into the page
+pool, interleaved with the decode batch. These tests pin:
+  * token-exactness vs the dense `generate_greedy` oracle for all four
+    attention families × {f32, bf16, int8} KV, at chunk sizes that do and
+    don't divide the prompt length;
+  * the capacity edges under chunked admission (page-boundary prompt
+    lengths ±1, plen == max_len, max_new_tokens = 1) — no extra page
+    reserved, none leaked;
+  * pool reuse under pressure while chunks are still queued (slots that
+    retire mid-prefill-of-others must free pages the queue can take without
+    corrupting the in-flight chunk stream);
+  * windowed slots hold O(window) pages while PREFILLING a prompt longer
+    than the window;
+  * sampling determinism (same seed → same tokens; temperature=0 ≡ greedy)
+    and the head-of-line-blocking metrics (chunked stall ticks = 0, pad
+    waste ≤ one chunk per prompt).
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import ExecOptions, build_model
+from repro.serve.engine import ServeEngine, generate_greedy
+
+
+def _prompt(seed, n, vocab=512):
+    return np.asarray(
+        jax.random.randint(jax.random.key(seed), (n,), 0, vocab), np.int32)
+
+
+def _build(arch, key=1):
+    cfg = get_config(arch).smoke()
+    model = build_model(cfg, ExecOptions(attn_impl="reference", ce_chunk=32))
+    params = model.init(jax.random.key(key))
+    extras = None
+    if cfg.family == "encdec":
+        extras = {"frames": np.asarray(jax.random.normal(
+            jax.random.key(9), (cfg.cross_len, cfg.d_model)), np.float32)}
+    if cfg.family == "vlm":
+        extras = {"patch_embeds": np.asarray(jax.random.normal(
+            jax.random.key(8), (cfg.n_image_tokens, cfg.d_model)),
+            np.float32)}
+    return cfg, model, params, extras
+
+
+@pytest.fixture(scope="module")
+def smol():
+    return _build("smollm-360m")
+
+
+# ---------------------------------------------------------------- equivalence
+def test_chunked_exact_across_chunk_divisibility(smol):
+    """Chunk sizes that do (8 | 16) and don't (8 ∤ 13, 16 ∤ 17) divide the
+    prompt must all reproduce the dense oracle exactly, with ONE chunk
+    compile regardless of how many prompts/chunks ran."""
+    cfg, model, params, _ = smol
+    lengths = (8, 13, 16, 17, 31, 33)
+    solo = {n: generate_greedy(model, params, _prompt(n, n), n_tokens=4,
+                               max_len=64)
+            for n in lengths}
+    for chunk_pages in (1, 2):
+        eng = ServeEngine(model, n_slots=2, max_len=64, params=params,
+                          page_size=8, chunk_pages=chunk_pages)
+        assert eng.chunked and eng.chunk_tokens == 8 * chunk_pages
+        reqs = {n: eng.submit(_prompt(n, n), max_new_tokens=4)
+                for n in lengths}
+        eng.run_to_completion()
+        for n in lengths:
+            assert reqs[n].done
+            assert reqs[n].out_tokens == solo[n], \
+                (chunk_pages, n, reqs[n].out_tokens, solo[n])
+        assert eng.stats.chunk_compiles == 1
+        assert eng.stats.prefill_compiles == 0
+        assert eng.stats.pages_in_use == 0
+        assert len(eng._free_pages) == eng.n_pages - 1
+
+
+@pytest.mark.parametrize("kv_dtype", [None, "bf16", "int8"])
+def test_chunked_dense_family_kv_dtypes(smol, kv_dtype):
+    """f32 / bf16 / int8 KV pools all stay token-exact: prefill attends the
+    rounded values the cache stores (models/transformer._round_kv), so the
+    chunk path (which reads the pool) and the monolithic oracle see
+    identical numerics."""
+    cfg, model, params, _ = smol
+    for n in (9, 17):
+        solo = generate_greedy(model, params, _prompt(n, n), n_tokens=4,
+                               max_len=64, kv_dtype=kv_dtype)
+        eng = ServeEngine(model, n_slots=2, max_len=64, params=params,
+                          page_size=8, kv_dtype=kv_dtype)
+        r = eng.submit(_prompt(n, n), max_new_tokens=4)
+        eng.run_to_completion()
+        assert r.out_tokens == solo, (kv_dtype, n, r.out_tokens, solo)
+
+
+@pytest.mark.parametrize("arch", ["qwen2-moe-a2.7b", "llava-next-mistral-7b",
+                                  "seamless-m4t-medium"])
+def test_chunked_families_exact(arch):
+    """moe / vlm / encdec chunked engines == their dense oracles, across a
+    chunk boundary (prompt 17 > chunk 16). vlm chunks slice the patch
+    embeddings per chunk; encdec computes cross K/V once at admission."""
+    cfg, model, params, extras = _build(arch)
+    for n in (9, 17):
+        solo = generate_greedy(model, params, _prompt(n, n), n_tokens=3,
+                               max_len=64, extras=extras)
+        eng = ServeEngine(model, n_slots=2, max_len=64, params=params,
+                          page_size=8)
+        assert eng.chunked
+        r = eng.submit(_prompt(n, n), max_new_tokens=3, extras=extras)
+        eng.run_to_completion()
+        assert r.out_tokens == solo, (arch, n, r.out_tokens, solo)
+        assert eng.stats.pages_in_use == 0
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["qwen2-moe-a2.7b", "llava-next-mistral-7b",
+                                  "seamless-m4t-medium"])
+@pytest.mark.parametrize("kv_dtype", ["bf16", "int8"])
+def test_chunked_families_kv_matrix(arch, kv_dtype):
+    """Full family × KV-dtype matrix (the tier-1 run carries the f32 legs
+    and the dense-family dtype legs; this sweep completes the grid)."""
+    cfg, model, params, extras = _build(arch)
+    solo = generate_greedy(model, params, _prompt(17, 17), n_tokens=3,
+                           max_len=64, kv_dtype=kv_dtype, extras=extras)
+    eng = ServeEngine(model, n_slots=2, max_len=64, params=params,
+                      page_size=8, kv_dtype=kv_dtype)
+    r = eng.submit(_prompt(17, 17), max_new_tokens=3, extras=extras)
+    eng.run_to_completion()
+    assert r.out_tokens == solo, (arch, kv_dtype, r.out_tokens, solo)
+
+
+# -------------------------------------------------- capacity / page-boundary
+def test_chunked_page_boundary_reservation_exact(smol):
+    """Satellite 1: prompts whose last chunk exactly fills its final page
+    (±1) must reserve exactly ceil(min(max_len, plen+max_new)/ps) pages —
+    no extra page for chunk padding — and leak none on retirement."""
+    cfg, model, params, _ = smol
+    ps, max_new = 8, 4
+    eng = ServeEngine(model, n_slots=1, max_len=64, params=params,
+                      page_size=ps)
+    for plen in (15, 16, 17, 23, 24, 25):
+        want_pages = -(-min(64, plen + max_new) // ps)
+        solo = generate_greedy(model, params, _prompt(plen, plen),
+                               n_tokens=max_new, max_len=64)
+        r = eng.submit(_prompt(plen, plen), max_new_tokens=max_new)
+        eng._admit()                      # reserve-only under chunking
+        assert eng.stats.pages_in_use == want_pages, \
+            (plen, eng.stats.pages_in_use, want_pages)
+        eng.run_to_completion()
+        assert r.out_tokens == solo, (plen, r.out_tokens, solo)
+        assert eng.stats.pages_in_use == 0
+        assert len(eng._free_pages) == eng.n_pages - 1
+    assert eng.stats.chunk_compiles == 1
+
+
+def test_chunked_capacity_edges(smol):
+    """plen == max_len still yields exactly one (replayed) token; chunked
+    max_new_tokens=1 yields exactly one token; capacity stays
+    max_len - plen + 1 on the chunked path."""
+    cfg, model, params, _ = smol
+    p = _prompt(99, 32)
+    solo = generate_greedy(model, params, p, n_tokens=4, max_len=32)
+    eng = ServeEngine(model, n_slots=1, max_len=32, params=params,
+                      page_size=8)
+    assert eng.chunked
+    r = eng.submit(p, max_new_tokens=4)
+    eng.run_to_completion()
+    assert r.done and len(r.out_tokens) == 1 and r.out_tokens == solo
+    # max_new_tokens=1 through the chunk queue
+    eng = ServeEngine(model, n_slots=1, max_len=64, params=params,
+                      page_size=8)
+    r = eng.submit(_prompt(3, 9), max_new_tokens=1)
+    eng.run_to_completion()
+    assert r.done and len(r.out_tokens) == 1
+    # capacity fill: max_len - plen + 1 tokens, token-exact
+    for plen in (15, 16):
+        max_len = 16
+        want_n = max_len - plen + 1
+        solo = generate_greedy(model, params, _prompt(plen, plen),
+                               n_tokens=32, max_len=max_len)
+        eng = ServeEngine(model, n_slots=1, max_len=max_len, params=params,
+                          page_size=8)
+        r = eng.submit(_prompt(plen, plen), max_new_tokens=32)
+        eng.run_to_completion()
+        assert len(r.out_tokens) == want_n == len(solo)
+        assert r.out_tokens == solo
+
+
+# --------------------------------------------- retire-while-chunks-queued
+def test_pool_reuse_while_chunks_queued(smol):
+    """Satellite 2: a slot that retires while another slot still has chunks
+    queued must free its pages for the waiting queue WITHOUT perturbing the
+    in-flight chunk stream; the mid-prefill slot's frozen pos / null table
+    row keep the batched decode step's garbage writes off its pages."""
+    cfg, model, params, _ = smol
+    long_p = _prompt(50, 40)              # 3 chunks at chunk_tokens=16
+    solo = {
+        "short": generate_greedy(model, params, _prompt(51, 6), n_tokens=2,
+                                 max_len=64),
+        "long": generate_greedy(model, params, long_p, n_tokens=4,
+                                max_len=64),
+        "third": generate_greedy(model, params, _prompt(52, 6), n_tokens=2,
+                                 max_len=64),
+    }
+    # pool: long needs ceil(44/8)=6 pages, short/third 1 each; 7 usable
+    # pages force the third request to wait for the short one's page
+    eng = ServeEngine(model, n_slots=2, max_len=64, params=params,
+                      page_size=8, n_pages=8)
+    r_short = eng.submit(_prompt(51, 6), max_new_tokens=2)
+    r_long = eng.submit(long_p, max_new_tokens=4)
+    r_third = eng.submit(_prompt(52, 6), max_new_tokens=2)
+    saw_reuse = False
+    for _ in range(200):
+        if not eng.step() and not eng._queue:
+            break
+        # the third request admits only after the short one's retirement,
+        # while the long prompt is still mid-prefill
+        if r_third in eng._slots and not r_long.done \
+                and eng._prefill_fifo:
+            saw_reuse = True
+    assert r_short.out_tokens == solo["short"]
+    assert r_long.out_tokens == solo["long"]
+    assert r_third.out_tokens == solo["third"]
+    assert saw_reuse, "third request never overlapped the long prefill"
+    assert eng.stats.pages_in_use == 0
+    assert len(eng._free_pages) == eng.n_pages - 1
+
+
+# ------------------------------------------------------- windowed + chunked
+def test_windowed_chunked_holds_o_window_pages(smol):
+    """Satellite 3: a prompt LONGER than the attention window prefills in
+    O(window) pages — out-of-window pages recycle forward between chunks —
+    and stays token-exact; occupancy never exceeds ceil(window/page)+2."""
+    cfg, model, params, _ = smol
+    cfgw = dataclasses.replace(cfg, window=16)
+    mw = build_model(cfgw, ExecOptions(attn_impl="reference", ce_chunk=32))
+    pw = mw.init(jax.random.key(2))
+    p = _prompt(21, 48)                   # prompt 3x the window
+    solo = generate_greedy(mw, pw, p, n_tokens=8, max_len=64)
+    eng = ServeEngine(mw, n_slots=1, max_len=64, params=pw, page_size=8)
+    assert eng.chunked and eng.chunk_tokens == eng.page_size  # 1-page chunks
+    r = eng.submit(p, max_new_tokens=8)
+    while not r.done:
+        eng.step()
+        assert eng.stats.pages_in_use <= eng._window_pages(), \
+            "windowed prefill held more than O(window) pages"
+    assert r.out_tokens == solo
+    assert eng.stats.peak_pages_in_use <= eng._window_pages() < 8
+    assert eng.stats.pages_in_use == 0
+
+
+@pytest.mark.slow
+def test_windowed_chunked_int8(smol):
+    """Window recycling composes with the int8 pool under chunked prefill."""
+    cfg, model, params, _ = smol
+    cfgw = dataclasses.replace(cfg, window=16)
+    mw = build_model(cfgw, ExecOptions(attn_impl="reference", ce_chunk=32))
+    pw = mw.init(jax.random.key(4))
+    p = _prompt(33, 40)
+    solo = generate_greedy(mw, pw, p, n_tokens=8, max_len=64,
+                           kv_dtype="int8")
+    eng = ServeEngine(mw, n_slots=1, max_len=64, params=pw, page_size=8,
+                      kv_dtype="int8")
+    r = eng.submit(p, max_new_tokens=8)
+    eng.run_to_completion()
+    assert r.out_tokens == solo
+    assert eng.stats.peak_pages_in_use <= eng._window_pages()
+
+
+# ------------------------------------------------------------------ sampling
+def test_sampling_deterministic_and_temp0_is_greedy(smol):
+    """Same seed → same tokens (engine-run to engine-run); temperature=0 ≡
+    the greedy oracle bit-for-bit; a hot sampled stream actually diverges
+    from greedy (deterministic for a fixed seed)."""
+    cfg, model, params, _ = smol
+    greedy = generate_greedy(model, params, _prompt(3, 9), n_tokens=6,
+                             max_len=64)
+    eng = ServeEngine(model, n_slots=2, max_len=64, params=params,
+                      page_size=8)
+    r1 = eng.submit(_prompt(3, 9), max_new_tokens=6,
+                    sample_params=(0.8, 20, 0.9), seed=7)
+    r2 = eng.submit(_prompt(3, 9), max_new_tokens=6,
+                    sample_params=(0.8, 20, 0.9), seed=7)
+    r0 = eng.submit(_prompt(3, 9), max_new_tokens=6,
+                    sample_params=(0.0, 0, 1.0), seed=3)
+    eng.run_to_completion()
+    assert r1.out_tokens == r2.out_tokens          # same seed, same stream
+    assert r0.out_tokens == greedy                 # temp 0 == greedy argmax
+    assert r1.out_tokens != greedy                 # fixed-seed divergence
+    # sampling lives in-jit: at most the greedy + sampled decode variants
+    # trace, never one compile per request/step
+    assert eng.stats.decode_compiles <= 2
+    # a fresh engine reproduces the same sampled stream (PRNG is keyed by
+    # (request seed, token index), not slot/batch state)
+    eng2 = ServeEngine(model, n_slots=1, max_len=64, params=params,
+                       page_size=8)
+    r3 = eng2.submit(_prompt(3, 9), max_new_tokens=6,
+                     sample_params=(0.8, 20, 0.9), seed=7)
+    eng2.run_to_completion()
+    assert r3.out_tokens == r1.out_tokens
+
+
+def test_sampling_recurrent_first_token_path():
+    """ssm engines sample their FIRST token from the prefill logits (the
+    non-replay admission path) — deterministic under the same seed, greedy
+    when temperature=0."""
+    cfg = get_config("mamba2-780m").smoke()
+    model = build_model(cfg, ExecOptions(attn_impl="reference", ce_chunk=32))
+    params = model.init(jax.random.key(0))
+    greedy = generate_greedy(model, params, _prompt(7, 7), n_tokens=4,
+                             max_len=64)
+    outs = []
+    for _ in range(2):
+        eng = ServeEngine(model, n_slots=1, max_len=64, params=params)
+        r = eng.submit(_prompt(7, 7), max_new_tokens=4,
+                       sample_params=(1.2, 0, 1.0), seed=11)
+        eng.run_to_completion()
+        outs.append(r.out_tokens)
+    assert outs[0] == outs[1]
+    eng = ServeEngine(model, n_slots=1, max_len=64, params=params)
+    r0 = eng.submit(_prompt(7, 7), max_new_tokens=4)
+    eng.run_to_completion()
+    assert r0.out_tokens == greedy
+
+
+# ------------------------------------------------------- scheduling metrics
+def test_chunked_eliminates_decode_stall(smol):
+    """Mixed long/short traffic: the monolithic engine stalls the decode
+    batch on long prefills (stall ticks > 0); the chunked engine never
+    exceeds its one-chunk budget (stall ticks == 0) and wastes at most one
+    chunk of padding per prompt."""
+    cfg, model, params, _ = smol
+    def traffic(eng):
+        reqs = [eng.submit(_prompt(60, 6), max_new_tokens=12)]
+        eng.step()                        # short request starts decoding
+        for i, n in enumerate((60, 9, 50, 7)):
+            reqs.append(eng.submit(_prompt(61 + i, n), max_new_tokens=4))
+        eng.run_to_completion()
+        return reqs
+    mono = ServeEngine(model, n_slots=4, max_len=64, params=params,
+                       page_size=8, chunked_prefill=False)
+    traffic(mono)
+    chunked = ServeEngine(model, n_slots=4, max_len=64, params=params,
+                          page_size=8)
+    reqs = traffic(chunked)
+    assert mono.stats.decode_stall_ticks > 0
+    assert chunked.stats.decode_stall_ticks == 0
+    assert chunked.stats.decode_stall_ticks < mono.stats.decode_stall_ticks
+    # pad waste: at most chunk_tokens-1 padded rows per prompt
+    n_prompts = len(reqs)
+    assert chunked.stats.prefill_pad_tokens \
+        <= n_prompts * (chunked.chunk_tokens - 1)
+
+
+def test_chunked_validation(smol):
+    cfg, model, params, _ = smol
+    with pytest.raises(ValueError):
+        ServeEngine(model, params=params, paged=False, chunked_prefill=True)
+    cfg2 = get_config("mamba2-780m").smoke()
+    m2 = build_model(cfg2, ExecOptions(attn_impl="reference", ce_chunk=32))
+    p2 = m2.init(jax.random.key(0))
+    with pytest.raises(ValueError):
+        ServeEngine(m2, params=p2, chunked_prefill=True)
+    with pytest.raises(ValueError):
+        ServeEngine(model, params=params).submit(
+            _prompt(0, 5), sample_params=(-1.0, 0, 1.0))

@@ -7,7 +7,8 @@ import jax.numpy as jnp
 import pytest
 
 from repro.kernels.decode_attention import decode_attention as pallas_decode
-from repro.models.attention import decode_attention
+from repro.kernels.flash_attention import flash_attention_paged
+from repro.models.attention import chunk_attention_paged, decode_attention
 
 
 def _inputs(seed, b, kv, g, d, smax, dtype=jnp.float32):
@@ -36,8 +37,10 @@ def _paged_inputs(seed, b, kv, g, d, ps, pages_per_seq, dtype=jnp.float32):
 
 @pytest.mark.parametrize("b,kv,g,d,smax", [
     (2, 2, 4, 64, 256),     # GQA, multi-block sweep
-    (3, 1, 1, 64, 128),     # MQA single head, one block
-    (1, 4, 2, 32, 512),     # many kv heads, deep cache
+    pytest.param(3, 1, 1, 64, 128,      # MQA single head, one block
+                 marks=pytest.mark.slow),
+    pytest.param(1, 4, 2, 32, 512,      # many kv heads, deep cache
+                 marks=pytest.mark.slow),
 ])
 def test_matches_reference(b, kv, g, d, smax):
     q, k, v, kv_len = _inputs(b * smax + d, b, kv, g, d, smax)
@@ -46,7 +49,8 @@ def test_matches_reference(b, kv, g, d, smax):
     assert jnp.max(jnp.abs(want - got)) < 2e-5
 
 
-@pytest.mark.parametrize("window", [32, 128])
+@pytest.mark.parametrize("window", [
+    32, pytest.param(128, marks=pytest.mark.slow)])
 def test_sliding_window(window):
     q, k, v, kv_len = _inputs(7, 2, 2, 2, 64, 256)
     want = decode_attention(q, k, v, kv_len, window=window, impl="reference")
@@ -246,3 +250,70 @@ def test_dispatch_stays_reference_off_tpu():
     a = decode_attention(q, k, v, kv_len)            # impl='auto'
     b = decode_attention(q, k, v, kv_len, impl="reference")
     assert jnp.array_equal(a, b) or jax.default_backend() == "tpu"
+
+
+# ------------------------------------------- chunk-prefill kernel (paged)
+def _chunk_inputs(seed, b, kv, g, d, ps, pages_per_seq, cq, dtype=jnp.float32):
+    n_pages = 1 + b * pages_per_seq
+    ks = jax.random.split(jax.random.key(seed), 4)
+    q = jax.random.normal(ks[0], (b, cq, kv, g, d), jnp.float32).astype(dtype)
+    pk = jax.random.normal(ks[1], (n_pages, ps, kv, d),
+                           jnp.float32).astype(dtype)
+    pv = jax.random.normal(ks[2], (n_pages, ps, kv, d),
+                           jnp.float32).astype(dtype)
+    perm = jax.random.permutation(ks[3], jnp.arange(1, n_pages))
+    pt = perm.reshape(b, pages_per_seq).astype(jnp.int32)
+    return q, pk, pv, pt
+
+
+def test_chunk_prefill_kernel_matches_reference():
+    """flash_attention_paged (interpret) == the jnp gather reference at a
+    mid-stream chunk offset: causal masking by GLOBAL position, live-length
+    masking of stale pool rows beyond kv_len."""
+    b, kv, g, d, ps, pps, cq = 2, 2, 2, 32, 16, 6, 32
+    q, pk, pv, pt = _chunk_inputs(11, b, kv, g, d, ps, pps, cq)
+    off = jnp.asarray([16, 40], jnp.int32)
+    kv_len = off + jnp.asarray([cq, 20], jnp.int32)   # partial final chunk
+    want = chunk_attention_paged(q, pk, pv, pt, off, kv_len=kv_len,
+                                 impl="reference")
+    got = flash_attention_paged(q, pk, pv, pt, off, kv_len, interpret=True)
+    assert jnp.max(jnp.abs(want - got)) < 2e-5
+
+
+def test_chunk_prefill_kernel_first_chunk_and_window():
+    """Offset-0 chunks and sliding windows: rows with no in-window keys
+    below their own position must not pick up garbage (the all-masked-tile
+    guard), matching the reference bit-for-bit in structure."""
+    b, kv, g, d, ps, pps, cq = 1, 2, 2, 32, 16, 6, 32
+    q, pk, pv, pt = _chunk_inputs(12, b, kv, g, d, ps, pps, cq)
+    off = jnp.zeros((1,), jnp.int32)
+    kv_len = jnp.asarray([cq], jnp.int32)
+    want = chunk_attention_paged(q, pk, pv, pt, off, kv_len=kv_len,
+                                 impl="reference")
+    got = flash_attention_paged(q, pk, pv, pt, off, kv_len, interpret=True)
+    assert jnp.max(jnp.abs(want - got)) < 2e-5
+    off = jnp.asarray([48], jnp.int32)
+    kv_len = off + cq
+    for window in (8, 24):
+        want = chunk_attention_paged(q, pk, pv, pt, off, kv_len=kv_len,
+                                     window=window, impl="reference")
+        got = flash_attention_paged(q, pk, pv, pt, off, kv_len,
+                                    window=window, interpret=True)
+        assert jnp.max(jnp.abs(want - got)) < 2e-5, window
+
+
+def test_chunk_prefill_kernel_int8_fused_dequant():
+    """int8 pools: dequant fused into the chunk kernel's tile loads == the
+    dequantized-gather reference."""
+    from repro.models.quantized import quantize_kv_rows
+    b, kv, g, d, ps, pps, cq = 1, 2, 2, 32, 16, 4, 16
+    q, pk, pv, pt = _chunk_inputs(13, b, kv, g, d, ps, pps, cq)
+    k8, ks = quantize_kv_rows(pk)
+    v8, vs = quantize_kv_rows(pv)
+    off = jnp.asarray([24], jnp.int32)
+    kv_len = off + cq
+    want = chunk_attention_paged(q, k8, v8, pt, off, kv_len=kv_len,
+                                 k_scale=ks, v_scale=vs, impl="reference")
+    got = flash_attention_paged(q, k8, v8, pt, off, kv_len,
+                                k_scale=ks, v_scale=vs, interpret=True)
+    assert jnp.max(jnp.abs(want - got)) < 2e-5

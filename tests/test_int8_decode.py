@@ -172,6 +172,7 @@ def test_int8_engine_token_exact_vs_int8_oracle(smol, wdtype, kv_dtype):
     assert eng.stats.pages_in_use == 0      # pool fully returned
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["qwen2-moe-a2.7b", "llava-next-mistral-7b",
                                   "seamless-m4t-medium"])
 def test_int8_engine_families_exact(arch):
@@ -193,6 +194,7 @@ def test_int8_engine_families_exact(arch):
 
 
 # ------------------------------------------------------- quality vs f32 oracle
+@pytest.mark.slow
 @pytest.mark.parametrize("arch,tol", [
     ("smollm-360m", 0.5), ("qwen2-moe-a2.7b", 0.5),
     ("llava-next-mistral-7b", 0.6),
@@ -215,6 +217,7 @@ def test_int8_prefill_logits_close_to_f32(arch, tol):
     assert rms < tol, (arch, rms)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch,tol", [
     ("smollm-360m", 0.7),            # the serve-bench config: tighter
     ("qwen2-moe-a2.7b", 0.9),

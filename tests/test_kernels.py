@@ -14,8 +14,11 @@ def _rand(key, shape, dtype):
 
 # --- int8 matmul -------------------------------------------------------------
 
-@pytest.mark.parametrize("m,k,n", [(128, 512, 128), (256, 1024, 384),
-                                   (128, 2048, 256), (384, 512, 512)])
+@pytest.mark.parametrize("m,k,n", [
+    (128, 512, 128),
+    pytest.param(256, 1024, 384, marks=pytest.mark.slow),
+    pytest.param(128, 2048, 256, marks=pytest.mark.slow),
+    pytest.param(384, 512, 512, marks=pytest.mark.slow)])
 @pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
 def test_int8_matmul_sweep(m, k, n, dtype):
     kx, kw = jax.random.split(jax.random.key(m * k + n))
@@ -71,8 +74,10 @@ def test_int8_quantization_error_bounded():
 
 # --- flash attention ---------------------------------------------------------
 
-@pytest.mark.parametrize("b,h,s,d", [(1, 2, 256, 64), (2, 1, 512, 128),
-                                     (1, 4, 384, 64)])
+@pytest.mark.parametrize("b,h,s,d", [
+    (1, 2, 256, 64),
+    pytest.param(2, 1, 512, 128, marks=pytest.mark.slow),
+    pytest.param(1, 4, 384, 64, marks=pytest.mark.slow)])
 @pytest.mark.parametrize("causal", [True, False])
 def test_flash_attention_sweep(b, h, s, d, causal):
     kq, kk, kv = jax.random.split(jax.random.key(b + s), 3)
@@ -86,7 +91,9 @@ def test_flash_attention_sweep(b, h, s, d, causal):
                                rtol=2e-3, atol=2e-3)
 
 
-@pytest.mark.parametrize("window", [64, 128, 256])
+@pytest.mark.parametrize("window", [
+    64, pytest.param(128, marks=pytest.mark.slow),
+    pytest.param(256, marks=pytest.mark.slow)])
 def test_flash_attention_window(window):
     q = _rand(jax.random.key(1), (1, 2, 512, 64), jnp.float32)
     k = _rand(jax.random.key(2), (1, 2, 512, 64), jnp.float32)

@@ -34,21 +34,32 @@ def test_bucket_length():
 
 
 def test_prefill_compiles_log_in_max_len(smol):
-    """N requests of distinct prompt lengths must trigger at most
-    ceil(log2(max_len)) prefill traces (one per power-of-two bucket)."""
+    """Compile-count hierarchy over N requests of distinct prompt lengths:
+    chunked prefill (the paged default) traces ONE chunk program total;
+    monolithic bucketed prefill traces at most ceil(log2(max_len)) buckets;
+    the seed path (no bucketing, no chunking) retraces per length."""
     cfg, model, params = smol
     max_len = 64
-    eng = ServeEngine(model, n_slots=2, max_len=max_len, params=params)
     lengths = list(range(3, 21))          # 18 distinct lengths
+    eng = ServeEngine(model, n_slots=2, max_len=max_len, params=params)
+    assert eng.chunked
     for i, n in enumerate(lengths):
         eng.submit(_prompt(i, n), max_new_tokens=2)
     eng.run_to_completion()
-    budget = math.ceil(math.log2(max_len))
-    assert eng.stats.prefill_compiles <= budget, eng.stats.summary()
+    assert eng.stats.chunk_compiles == 1, eng.stats.summary()
+    assert eng.stats.prefill_compiles == 0
     assert eng.stats.prefills == len(lengths)
+    # monolithic bucketed: one trace per power-of-two bucket
+    engb = ServeEngine(model, n_slots=2, max_len=max_len, params=params,
+                       chunked_prefill=False)
+    for i, n in enumerate(lengths):
+        engb.submit(_prompt(i, n), max_new_tokens=2)
+    engb.run_to_completion()
+    budget = math.ceil(math.log2(max_len))
+    assert engb.stats.prefill_compiles <= budget, engb.stats.summary()
     # the seed path retraces per length
     eng0 = ServeEngine(model, n_slots=2, max_len=max_len, params=params,
-                       bucket_prompts=False)
+                       bucket_prompts=False, chunked_prefill=False)
     for i, n in enumerate(lengths):
         eng0.submit(_prompt(i, n), max_new_tokens=2)
     eng0.run_to_completion()
