@@ -6,11 +6,22 @@ Each BENCH_<section>.json is a flat {metric: number} dict (benchmarks/run.py
 --json). Only metrics named in GATES are gated — everything else is
 informational (absolute latencies wobble on shared CI runners; throughputs
 and wall-times are what the roadmap tracks PR-over-PR). Each gated metric
-carries its OWN tolerance — tight on deterministic same-run ratios (memory
-shrinks are exact byte math; a 5% drift there is a real layout change),
-loose on wall-clock metrics that inherit shared-runner scheduler noise. A
-gated metric fails when it regresses by more than its tolerance in its bad
-direction:
+carries its OWN tolerance AND its measurement class:
+
+  * 'det'  — deterministic math (byte ratios, tick/token counts, token
+    parity): machine-free, enforced on EVERY comparison. A drift here is a
+    real layout/scheduler/numerics change, never runner noise.
+  * 'wall' — anything a clock touched, including RATIOS OF TWO TIMINGS
+    (bucketing_speedup, int8_vs_f32_decode_ratio): enforced only when the
+    baseline's `env_id` fingerprint matches the fresh run's, advisory
+    otherwise. Timing ratios looked machine-free but fire spuriously on
+    fresh CI hardware — different core counts / cache hierarchies move the
+    two legs by different factors, so cross-env they only report
+    (`env_mismatch_info`), they never fail the gate. Refresh the committed
+    BENCH_*.json from a CI run's bench-json artifact to arm them in CI.
+
+A gated metric fails when it regresses by more than its tolerance in its
+bad direction:
 
     higher-is-better (tokens/s)  : new < (1 - tol) * baseline
     lower-is-better  (wall-time) : new > (1 + tol) * baseline
@@ -21,15 +32,6 @@ comparisons across very different machines); omit it to use the table.
 Metrics present only in the new snapshot pass (they become the next
 baseline); gated metrics missing from the new snapshot fail — a deleted
 number is a silent regression.
-
-Absolute metrics (tokens/s, wall-seconds) only compare meaningfully when the
-baseline was captured on the same runner class as the new run, so they are
-enforced only when the snapshots' `env_id` fingerprints match (they report
-informationally otherwise) — refresh the committed BENCH_*.json from a CI
-run's bench-json artifact to arm them in CI. Same-run ratios
-(bucketing_speedup, paged_kv_shrink, int8_kv_shrink,
-int8_vs_f32_decode_ratio) cancel machine speed and are enforced
-unconditionally.
 """
 
 from __future__ import annotations
@@ -39,47 +41,47 @@ import json
 import pathlib
 import sys
 
-# section -> {metric: ('higher' | 'lower', tolerance)}
+# section -> {metric: ('higher' | 'lower', tolerance, 'det' | 'wall')}
 GATES = {
     "serve": {
         # wall-clock tokens/s: shared runners swing these ±20% run-to-run
         # even with the bench's best-window measurement — gate loosely
-        "fast_tokens_per_s": ("higher", 0.25),
-        "decode_tokens_per_s": ("higher", 0.25),
-        "paged_longctx_tokens_per_s": ("higher", 0.25),
-        "int8_decode_tokens_per_s": ("higher", 0.25),
-        "paged_kv_shrink": ("lower", 0.05),   # pool / dense memory ratio:
-        "int8_kv_shrink": ("lower", 0.05),    # deterministic byte math
-        # same-run ratio, machine-free in expectation — but its two legs
-        # include compile time, so shared-runner noise still moves it ±13%
-        "bucketing_speedup": ("higher", 0.15),
-        # same-run but dequant work makes the CPU reference path noisy; the
-        # TPU kernels are the real datapath, so gate loosely here
-        "int8_vs_f32_decode_ratio": ("higher", 0.35),
+        "fast_tokens_per_s": ("higher", 0.25, "wall"),
+        "decode_tokens_per_s": ("higher", 0.25, "wall"),
+        "paged_longctx_tokens_per_s": ("higher", 0.25, "wall"),
+        "int8_decode_tokens_per_s": ("higher", 0.25, "wall"),
+        "paged_kv_shrink": ("lower", 0.05, "det"),   # pool / dense memory
+        "int8_kv_shrink": ("lower", 0.05, "det"),    # deterministic bytes
+        # ratios of two timings: machine-free in expectation, but both legs
+        # inherit scheduler noise and runner-class differences — wall class
+        "bucketing_speedup": ("higher", 0.15, "wall"),
+        "int8_vs_f32_decode_ratio": ("higher", 0.35, "wall"),
         # chunked prefill (PR 4): stall ticks and pad waste are DETERMINISTIC
         # tick/token counts on fixed traffic — any increase is a scheduler
         # regression (stall must stay 0: the one-chunk-per-tick invariant)
-        "chunked_prefill_stall_ticks": ("lower", 0.0),
-        "chunked_pad_waste": ("lower", 0.05),
-        "chunked_mixed_tokens_per_s": ("higher", 0.25),
-        "sampled_tokens_per_s": ("higher", 0.25),
+        "chunked_prefill_stall_ticks": ("lower", 0.0, "det"),
+        "chunked_pad_waste": ("lower", 0.05, "det"),
+        "chunked_mixed_tokens_per_s": ("higher", 0.25, "wall"),
+        "sampled_tokens_per_s": ("higher", 0.25, "wall"),
         # greedy int8-vs-f32 prefix divergence: deterministic on a fixed
-        # runner/jax build (env-gated), drifts only if quantization quality
-        # actually moves
-        "int8_token_divergence": ("lower", 0.25),
+        # runner/jax build, so env-gated — drifts only if quantization
+        # quality actually moves
+        "int8_token_divergence": ("lower", 0.25, "wall"),
+        # sharded serving (PR 5): parity and occupancy balance are
+        # deterministic (same-run engine pair, fixed traffic, deterministic
+        # least-loaded placement); the throughputs are clocks
+        "sharded_token_divergence": ("lower", 0.0, "det"),
+        "sharded_occupancy_imbalance": ("lower", 0.10, "det"),
+        "sharded_tokens_per_s": ("higher", 0.30, "wall"),
+        "sharded_vs_single_host_ratio": ("higher", 0.30, "wall"),
     },
     "soc": {
-        "sweep_wall_s": ("lower", 0.20),
+        "sweep_wall_s": ("lower", 0.20, "wall"),
     },
     "kernels": {
-        "decode_attention_us": ("lower", 0.25),
+        "decode_attention_us": ("lower", 0.25, "wall"),
     },
 }
-
-# machine-speed-free metrics: enforced even across runner classes
-RATIO_METRICS = {"paged_kv_shrink", "bucketing_speedup", "int8_kv_shrink",
-                 "int8_vs_f32_decode_ratio", "chunked_prefill_stall_ticks",
-                 "chunked_pad_waste"}
 
 # absolute slack on top of the fractional tolerance, for metrics whose
 # baseline can legitimately be 0.0 (a multiplicative gate at b=0 would fail
@@ -89,7 +91,11 @@ ABS_SLACK = {"int8_token_divergence": 0.05,
              # half-tick of slack only exists to let the multiplicative
              # form evaluate; an increase to >= 1 tick still fails
              "chunked_prefill_stall_ticks": 0.5,
-             "chunked_pad_waste": 0.02}
+             "chunked_pad_waste": 0.02,
+             # sharded parity baseline is exactly 0 — ZERO slack: a single
+             # diverging request stream fails the gate
+             "sharded_token_divergence": 0.0,
+             "sharded_occupancy_imbalance": 0.10}
 
 
 def load(d: pathlib.Path, section: str):
@@ -118,7 +124,7 @@ def main() -> int:
             continue
         same_env = base.get("env_id") is not None \
             and base.get("env_id") == new.get("env_id")
-        for metric, (direction, tol) in gates.items():
+        for metric, (direction, tol, kind) in gates.items():
             if args.tol is not None:
                 tol = args.tol
             if metric not in base:
@@ -134,11 +140,13 @@ def main() -> int:
             else:
                 ok = n <= (1.0 + tol) * b + slack
             delta_s = f"{n / b - 1.0:+.1%}" if b else f"{n - b:+.4g}abs"
-            enforced = same_env or metric in RATIO_METRICS
+            # deterministic metrics gate everywhere; wall-clock-class
+            # metrics (including timing ratios) only on matching hardware
+            enforced = kind == "det" or same_env
             status = "pass" if ok else (
                 "FAIL" if enforced else "env_mismatch_info")
             print(f"compare,{section},{metric},base={b:.4g},new={n:.4g},"
-                  f"delta={delta_s},tol={tol:.0%},{status}")
+                  f"delta={delta_s},tol={tol:.0%},{kind},{status}")
             if not ok and enforced:
                 failures.append(
                     f"{section}.{metric}: {b:.4g} -> {n:.4g} "

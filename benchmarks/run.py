@@ -428,6 +428,19 @@ def bench_serve():
           f"{metrics['monolithic_pad_waste']:.3f}->"
           f"{metrics['chunked_pad_waste']:.3f}")
 
+    # ---- sharded multi-chiplet serving (PR 5) -----------------------------
+    # Device-partitioned paged pool + shard_map decode on a 4-device CPU
+    # mesh vs the single-host engine on the SAME traffic, both legs inside
+    # one forked process (device count is fixed at jax import, and the
+    # same-process pairing keeps the ratio machine-free). Token divergence
+    # is a DETERMINISTIC parity gate (must stay 0); the occupancy imbalance
+    # is deterministic tick math on fixed traffic.
+    metrics.update(_bench_sharded_serve())
+    print(f"serve,sharded,tokens_per_s={metrics['sharded_tokens_per_s']:.1f},"
+          f"vs_single_host={metrics['sharded_vs_single_host_ratio']:.2f},"
+          f"occupancy_imbalance={metrics['sharded_occupancy_imbalance']:.3f},"
+          f"token_divergence={metrics['sharded_token_divergence']:.3f}")
+
     # ---- per-slot sampling overhead ---------------------------------------
     # sampled decode vs greedy decode, same engine config: the sampler rides
     # the same single decode jit, so the delta is the vmapped sort/cumsum
@@ -447,6 +460,71 @@ def bench_serve():
     metrics["bucketing_speedup"] = (metrics["fast_tokens_per_s"]
                                     / metrics["no_bucketing_tokens_per_s"])
     return metrics
+
+
+_SHARDED_BENCH = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import json, time
+import jax, numpy as np
+from repro.configs import get_config
+from repro.models import ExecOptions, build_model
+from repro.launch.mesh import make_serve_mesh
+from repro.serve.engine import ServeEngine
+from repro.serve.sharded import ShardedServeEngine
+
+cfg = get_config("smollm-360m").smoke()
+model = build_model(cfg, ExecOptions(attn_impl="reference", ce_chunk=32))
+params = model.init(jax.random.key(0))
+
+def prompts(n_req=12):
+    out = []
+    for i in range(n_req):
+        n = 5 + (i * 7) % 23
+        out.append(np.asarray(jax.random.randint(
+            jax.random.key(i), (n,), 0, cfg.vocab_size), np.int32))
+    return out
+
+def leg(eng):
+    reqs = [eng.submit(p, max_new_tokens=8) for p in prompts()]
+    t0 = time.perf_counter()
+    stats = eng.run_to_completion()
+    return reqs, stats.tokens_out / (time.perf_counter() - t0)
+
+single = ServeEngine(model, n_slots=8, max_len=64, params=params, page_size=8)
+s_reqs, s_tps = leg(single)
+sharded = ShardedServeEngine(model, mesh=make_serve_mesh(4), n_slots=8,
+                             max_len=64, params=params, page_size=8)
+d_reqs, d_tps = leg(sharded)
+sharded.assert_local_page_tables()
+div = sum(a.out_tokens != b.out_tokens
+          for a, b in zip(s_reqs, d_reqs)) / len(s_reqs)
+print("SHARDED_JSON " + json.dumps({
+    "sharded_tokens_per_s": d_tps,
+    "sharded_vs_single_host_ratio": d_tps / s_tps,
+    "sharded_occupancy_imbalance":
+        sharded.shard_summary()["occupancy_imbalance"],
+    "sharded_token_divergence": div,
+}))
+"""
+
+
+def _bench_sharded_serve():
+    """Fork the sharded-vs-single-host pair onto a 4-device CPU mesh (the
+    forced device count must be set before jax imports, so this can't run
+    in the harness process)."""
+    import subprocess
+    import sys
+    src = pathlib.Path(__file__).resolve().parent.parent / "src"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = f"{src}:{env.get('PYTHONPATH', '')}".rstrip(":")
+    r = subprocess.run([sys.executable, "-c", _SHARDED_BENCH], env=env,
+                       capture_output=True, text=True)
+    if r.returncode != 0:
+        raise RuntimeError(f"sharded serve bench failed:\n{r.stderr[-3000:]}")
+    line = [l for l in r.stdout.splitlines()
+            if l.startswith("SHARDED_JSON ")][-1]
+    return json.loads(line[len("SHARDED_JSON "):])
 
 
 # -------------------------------------------------------------------- kernels

@@ -20,9 +20,21 @@ from repro.models import ExecOptions, build_model  # noqa: E402
 from repro.serve.engine import ServeEngine   # noqa: E402
 
 
-def run(params, model, label, sample_params=None, **engine_kw):
-    eng = ServeEngine(model, n_slots=4, max_len=96, params=params,
-                      **engine_kw)
+def run(params, model, label, sample_params=None, sharded=False, **engine_kw):
+    if sharded:
+        # the sharded multi-chiplet engine on this host's devices (a 1-shard
+        # mesh on plain CPU — token-identical to the single-host engine;
+        # force more fake devices via XLA_FLAGS to see real sharding)
+        from repro.launch.mesh import make_serve_mesh
+        from repro.serve.sharded import ShardedServeEngine
+        mesh = make_serve_mesh()
+        n_shards = mesh.shape["data"]
+        eng = ShardedServeEngine(model, mesh=mesh,
+                                 n_slots=4 * n_shards, max_len=96,
+                                 params=params, page_size=32, **engine_kw)
+    else:
+        eng = ServeEngine(model, n_slots=4, max_len=96, params=params,
+                          **engine_kw)
     rng = np.random.default_rng(0)
     reqs = []
     for i in range(10):
@@ -61,6 +73,7 @@ def main():
             wdtype="int8", kv_dtype="int8")
     s = run(params, model, "f32, sampled (T=0.8 top_k=40 top_p=0.95)",
             sample_params=(0.8, 40, 0.95))
+    d = run(params, model, "f32, sharded multi-chiplet engine", sharded=True)
     same = sum(x.out_tokens == y.out_tokens for x, y in zip(a, b))
     print(f"\nint8 vs full precision: {same}/10 requests decode identically "
           f"(greedy; small models amplify quantization flips)")
@@ -70,6 +83,9 @@ def main():
     diff = sum(x.out_tokens != y.out_tokens for x, y in zip(a, s))
     print(f"sampled vs greedy: {diff}/10 requests differ "
           f"(deterministic per seed)")
+    par = sum(x.out_tokens == y.out_tokens for x, y in zip(a, d))
+    print(f"sharded vs single-host: {par}/10 requests identical "
+          f"(device-partitioned pool, token-exact)")
 
 
 if __name__ == "__main__":

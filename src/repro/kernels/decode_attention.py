@@ -65,7 +65,18 @@ def paged_index_maps(bpp: int, *, n_prefetch: int, g: int = 1):
     LAST among grid dims and the PAGE TABLE LAST among the `n_prefetch`
     scalar-prefetch refs. `bpp` is k-blocks per page; `g` divides a flattened
     query-head grid index down to its KV head (1 when the grid already runs
-    over KV heads, as in the decode kernel)."""
+    over KV heads, as in the decode kernel).
+
+    Device-locality contract (sharded serving, PR 5): the table values these
+    maps read become DMA source pages, so every entry must address the pool
+    operand THIS kernel instance was handed. Under the sharded engine the
+    global pool is partitioned page-wise across the mesh's data axis and the
+    kernel runs inside shard_map — each shard's table holds LOCAL ids into
+    its own (n_pages, page_size, ...) partition (shard-local null page 0
+    included), so the scalar-prefetch gather can never name another device's
+    page. Feeding a GLOBAL page id here would index past the local pool —
+    keep tables device-local (serve/scheduler reserves pages per shard and
+    ShardedServeEngine.assert_local_page_tables pins the invariant)."""
 
     def kv_map(ib, ih, *rest):
         ik, pt_ref = rest[len(rest) - n_prefetch - 1], rest[-1]

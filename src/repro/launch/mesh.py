@@ -36,3 +36,18 @@ def make_host_mesh(model: int = 1) -> jax.sharding.Mesh:
     n = len(jax.devices())
     assert n % model == 0, (n, model)
     return make_mesh((n // model, model), ("data", "model"))
+
+
+def make_serve_mesh(n_shards: int = 0,
+                    axis: str = "data") -> jax.sharding.Mesh:
+    """1-D slot-sharding mesh for the sharded serving engine.
+
+    One shard per device along `axis` (the production mesh's data axis);
+    n_shards=0 takes every local device. Built directly (not via make_mesh)
+    so a PREFIX of the host's devices can back a smaller serving tier —
+    CPU parity tests force 8 fake devices and shard over all of them."""
+    import numpy as np
+    devs = jax.devices()
+    n = n_shards or len(devs)
+    assert 1 <= n <= len(devs), (n, len(devs))
+    return jax.sharding.Mesh(np.asarray(devs[:n]), (axis,))

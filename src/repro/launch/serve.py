@@ -8,6 +8,13 @@ numerics: weight-only int8 projections (Pallas int8_matmul on TPU) plus an
 int8 paged KV pool with dequant fused into the decode-attention kernel —
 the 15 TOPS INT8 NPU datapath (§II) as the measured configuration.
 
+`--shards N` serves through the sharded multi-chiplet engine instead
+(serve/sharded.py): slots and the paged KV pool partition over a 1-D data
+mesh of N local devices — one shard per chiplet — with device-local page
+tables and one shard_map'd global decode step. Token streams are identical
+to the single-host engine. On CPU, force fake devices first:
+XLA_FLAGS=--xla_force_host_platform_device_count=N.
+
 On a pod the same engine runs against the mesh-sharded prefill/decode steps
 from `launch/steps.py`; on CPU it serves the reduced configs (examples +
 tests exercise this path).
@@ -62,13 +69,18 @@ def main():
     ap.add_argument("--page-size", type=int, default=32,
                     help="KV page size (0 = dense per-slot cache)")
     ap.add_argument("--pages", type=int, default=0,
-                    help="pool pages incl. the null page (0 = worst case)")
+                    help="pool pages incl. the null page (0 = worst case); "
+                         "with --shards this is PER-SHARD (each shard owns "
+                         "its own pool + local null page)")
     ap.add_argument("--no-chunked-prefill", action="store_true",
                     help="monolithic bucketed prefill instead of the "
                          "chunked page-granular default (paged engines)")
     ap.add_argument("--chunk-pages", type=int, default=2,
                     help="prefill chunk size in pages (chunk = "
                          "chunk_pages x page_size tokens)")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="shard slots + KV pages over N local devices "
+                         "(sharded multi-chiplet engine; 0 = single-host)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature (0 = greedy argmax)")
     ap.add_argument("--top-k", type=int, default=0,
@@ -92,15 +104,38 @@ def main():
             params = quantize_params_int8(params)
             wdtype = None
         kv_dtype = None if kv_dtype in ("int8", "bf16") else kv_dtype
-    paged_kw = {"paged": False} if args.page_size == 0 else {
-        "page_size": args.page_size,
-        "n_pages": args.pages or None,
-        "chunked_prefill": False if args.no_chunked_prefill else None,
-        "chunk_pages": args.chunk_pages,
-    }
-    eng = ServeEngine(model, n_slots=args.slots, max_len=args.max_len,
-                      params=params, wdtype=wdtype, kv_dtype=kv_dtype,
-                      **paged_kw)
+    if args.shards:
+        # the sharded engine is paged + chunked by construction — reject the
+        # flags that name a different engine instead of reinterpreting them
+        if args.page_size == 0:
+            ap.error("--shards requires a paged cache; --page-size 0 (dense "
+                     "rows) only exists on the single-host engine")
+        if args.no_chunked_prefill:
+            ap.error("--shards prefills in per-shard interleaved chunks; "
+                     "--no-chunked-prefill only exists on the single-host "
+                     "engine")
+        from repro.launch.mesh import make_serve_mesh
+        from repro.serve.sharded import ShardedServeEngine
+        n_slots = args.slots
+        if n_slots % args.shards:
+            n_slots = args.shards * max(1, n_slots // args.shards)
+            print(f"[serve] rounding slots to {n_slots} "
+                  f"({args.shards} shards)")
+        eng = ShardedServeEngine(
+            model, mesh=make_serve_mesh(args.shards), n_slots=n_slots,
+            max_len=args.max_len, params=params, wdtype=wdtype,
+            kv_dtype=kv_dtype, page_size=args.page_size,
+            n_pages=args.pages or None, chunk_pages=args.chunk_pages)
+    else:
+        paged_kw = {"paged": False} if args.page_size == 0 else {
+            "page_size": args.page_size,
+            "n_pages": args.pages or None,
+            "chunked_prefill": False if args.no_chunked_prefill else None,
+            "chunk_pages": args.chunk_pages,
+        }
+        eng = ServeEngine(model, n_slots=args.slots, max_len=args.max_len,
+                          params=params, wdtype=wdtype, kv_dtype=kv_dtype,
+                          **paged_kw)
     sample = None if args.temperature == 0 else (
         args.temperature, args.top_k, args.top_p)
     rng = np.random.default_rng(args.seed)
@@ -118,6 +153,11 @@ def main():
     print(f"[serve] {done}/{len(reqs)} done  {stats.summary()}")
     print(f"[serve] {stats.tokens_out / wall:.1f} tok/s  "
           f"mean TTFT {1e3 * sum(ttft) / len(ttft):.0f} ms  wall {wall:.1f}s")
+    if args.shards:
+        ss = eng.shard_summary()
+        print(f"[serve] shards={args.shards}  "
+              f"tokens/shard={ss['shard_tokens']}  "
+              f"occupancy_imbalance={ss['occupancy_imbalance']:.3f}")
 
 
 if __name__ == "__main__":

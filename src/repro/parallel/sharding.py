@@ -73,6 +73,25 @@ PLAN_RULES: Dict[str, Dict[str, Tuple[Axis, ...]]] = {
         "experts": ("model", None),
         "layers": (None,),
     },
+    # Sharded serving engine (serve/sharded.py): the data axis partitions
+    # SLOTS and KV pages (device-local page tables under shard_map), so it is
+    # retired from every param rule — weights are shard-stationary replicas
+    # on that axis (serve_ws minus its ff→data entry: per-step weight traffic
+    # stays zero, which was serve_ws's point). 'model'-axis entries survive
+    # for meshes that carry a TP axis, but intra-shard TP inside the
+    # shard_map'd decode step needs manual collectives — recorded follow-on.
+    "serve_sharded": {
+        "batchlike": ("data", None),
+        "embed": (None,),
+        "vocab": ("model", None),
+        "heads": ("model", None),
+        "heads_flat": ("model", None),
+        "kv_or_seq": ("model", None),
+        "seq": ("model", None),
+        "ff": (None,),
+        "experts": ("model", None),
+        "layers": (None,),
+    },
 }
 
 

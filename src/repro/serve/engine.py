@@ -134,7 +134,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.quantized import quantize_kv_rows
-from repro.serve.sampling import sample_tokens
+from repro.serve.sampling import clamp_sample_params, sample_tokens
 
 _ATTN_FAMILIES = ("dense", "moe", "vlm", "encdec")
 
@@ -149,6 +149,66 @@ def bucket_length(plen: int, max_len: int) -> int:
     while b < plen:
         b <<= 1
     return min(b, max_len)
+
+
+# ---------------------------------------------------------------------------
+# Paged-pool bookkeeping shared by the single-host engine and the sharded
+# scheduler (serve/scheduler.py) — ONE copy of the reservation and
+# sliding-window recycle math, so a fix in either engine cannot silently
+# break the other's token-parity invariant.
+# ---------------------------------------------------------------------------
+
+def window_page_budget(window: int, page_size: int) -> int:
+    """Mapped pages that always cover [pos-window, pos] plus one page of
+    write-ahead slack while the window slides."""
+    return (window - 1) // page_size + 3
+
+
+def reserve_page_count(plen: int, max_new: int, *, max_len: int,
+                       page_size: int, window: int, lo: int = 0) -> int:
+    """Pages reserved at admission: every row the request can ever write,
+    or — for window configs — the O(window) live span from logical page `lo`
+    (0 under chunked prefill: the first chunk writes row 0 and recycling
+    slides the mapping forward)."""
+    rows = min(max_len, plen + max_new)
+    full = -(-rows // page_size)
+    if not window:
+        return full
+    return min(full - lo, window_page_budget(window, page_size))
+
+
+def recycle_dead_pages(mapping: Dict[int, int], free_pages: List[int],
+                       cap: int, page_size: int, window: int, progress: int):
+    """Sliding-window recycle core: pages fully below `progress - window`
+    either become the slot's next logical page (remap forward while the
+    request still has unwritten pages below `cap`) or return to `free_pages`
+    once its span is covered. Mutates `mapping`/`free_pages` in place;
+    returns ([(j_dead, j_new, phys)] remaps, [j_dead] unmaps) for the caller
+    to mirror into its page table."""
+    dead = sorted(j for j in mapping
+                  if (j + 1) * page_size <= progress - window)
+    remaps, unmaps = [], []
+    if not dead:
+        return remaps, unmaps
+    nxt = max(mapping) + 1
+    for j in dead:
+        phys = mapping.pop(j)
+        if nxt < cap:
+            mapping[nxt] = phys
+            remaps.append((j, nxt, phys))
+            nxt += 1
+        else:
+            free_pages.append(phys)
+            unmaps.append(j)
+    return remaps, unmaps
+
+
+def page_row_of(mapping: Dict[int, int], pages_per_seq: int) -> np.ndarray:
+    """(pages_per_seq,) physical-page row: mapped pages, null page 0 rest."""
+    row = np.zeros((pages_per_seq,), np.int32)
+    for j, p in mapping.items():
+        row[j] = p
+    return row
 
 
 @dataclasses.dataclass
@@ -555,11 +615,10 @@ class ServeEngine:
                     f"request needs {need} pages; pool has {self.n_pages - 1}")
         temperature, top_k, top_p = 0.0, 0, 1.0
         if sample_params is not None:
-            temperature, top_k, top_p = sample_params
-            if temperature < 0 or not 0 < top_p <= 1 or top_k < 0:
-                raise ValueError(
-                    f"bad sample_params {(temperature, top_k, top_p)}: need "
-                    "temperature >= 0, 0 < top_p <= 1, top_k >= 0")
+            # degenerate params clamp to well-defined behavior (PR 5):
+            # temperature < 0 → greedy, top_p=0 → filtered argmax, top_k out
+            # of range → filter off — see serve/sampling.clamp_sample_params
+            temperature, top_k, top_p = clamp_sample_params(*sample_params)
         self._next_rid += 1
         req = Request(rid=self._next_rid, prompt=prompt,
                       max_new_tokens=max_new_tokens, extras=extras,
@@ -581,12 +640,10 @@ class ServeEngine:
         starts its mapping at logical page 0 (the first chunk writes row 0)
         and recycles forward between chunks, so it needs the same
         ceil(window/page)+2 budget but no live_lo offset."""
-        rows = min(self.max_len, plen + max_new)
-        full = -(-rows // self.page_size)
-        if not self._window:
-            return full
-        lo = 0 if self.chunked else self._live_lo(plen)
-        return min(full - lo, self._window_pages())
+        lo = 0 if (self.chunked or not self._window) else self._live_lo(plen)
+        return reserve_page_count(plen, max_new, max_len=self.max_len,
+                                  page_size=self.page_size,
+                                  window=self._window, lo=lo)
 
     def _live_lo(self, plen: int) -> int:
         """First logical page a window request can still read or write at its
@@ -594,9 +651,7 @@ class ServeEngine:
         return max(0, plen - 1 - self._window) // self.page_size
 
     def _window_pages(self) -> int:
-        """Mapped pages that always cover [pos-window, pos] plus one page of
-        write-ahead slack while the window slides."""
-        return (self._window - 1) // self.page_size + 3
+        return window_page_budget(self._window, self.page_size)
 
     def kv_cache_bytes(self) -> int:
         return sum(x.size * x.dtype.itemsize
@@ -716,15 +771,34 @@ class ServeEngine:
             self._slots[slot] = r
             self._active[slot] = True
 
+    def cancel(self, req: Request) -> None:
+        """Retire a request at ANY lifecycle stage with exact pool
+        accounting: queued → dequeue (nothing reserved yet); mid-prefill →
+        drain its remaining chunk queue and return EVERY reserved page to
+        the pool (the reservation-leak path this fixes: a slot released with
+        chunks still queued used to be assumed unreachable); decoding →
+        release the slot like a normal retirement."""
+        if req.done:
+            return
+        if req in self._queue:
+            self._queue.remove(req)
+        elif req in self._slots:
+            self._release(self._slots.index(req))
+        req.done = True
+        req.t_done = time.time()
+
     def _release(self, slot: int):
-        """Return a finished slot to the pool (called with the request
-        already removed from / never placed in `_slots`)."""
+        """Return a finished slot to the pool and drain any queued prefill
+        work it still holds (mid-prefill retirement must leak nothing)."""
         self._slots[slot] = None
         self._active[slot] = False
+        self._fresh[slot] = False
         self._temp[slot], self._topk[slot] = 0.0, 0
         self._topp[slot], self._sseed[slot] = 1.0, 0
-        if slot in self._prefill_fifo:          # defensive: never mid-chunk
+        if slot in self._prefill_fifo:          # mid-prefill: drain chunks
             self._prefill_fifo.remove(slot)
+        if self.chunked:
+            self._chunk_next[slot] = 0
         if self.paged:
             freed = self._slot_pages[slot]
             if freed:
@@ -735,10 +809,7 @@ class ServeEngine:
 
     # ---------------------------------------------------------------- prefill
     def _page_row(self, slot: int) -> np.ndarray:
-        row = np.zeros((self.pages_per_seq,), np.int32)
-        for j, p in self._slot_pages[slot].items():
-            row[j] = p
-        return row
+        return page_row_of(self._slot_pages[slot], self.pages_per_seq)
 
     def _prefill_tick(self) -> bool:
         """Run AT MOST ONE fixed-size prefill chunk (FIFO over mid-prefill
@@ -871,27 +942,18 @@ class ServeEngine:
         index (decode: synced pos; chunked prefill: the next chunk's start).
         `in_cache` mirrors the remap/unmap into the cache's page-table row —
         False while the slot is mid-prefill and its row is still null."""
-        ps = self.page_size
-        m = self._slot_pages[slot]
-        dead = sorted(j for j in m if (j + 1) * ps <= progress - self._window)
-        if not dead:
-            return
-        nxt = max(m) + 1
-        for j in dead:
-            phys = m.pop(j)
-            if nxt < self._slot_cap[slot]:
-                m[nxt] = phys
-                if in_cache:
-                    self._cache = self._remap_entry_jit(
-                        self._cache, jnp.int32(slot), jnp.int32(j),
-                        jnp.int32(nxt), jnp.int32(phys))
-                nxt += 1
-            else:
-                self._free_pages.append(phys)
-                self.stats.pages_in_use -= 1
-                if in_cache:
-                    self._cache = self._unmap_entry_jit(
-                        self._cache, jnp.int32(slot), jnp.int32(j))
+        remaps, unmaps = recycle_dead_pages(
+            self._slot_pages[slot], self._free_pages, self._slot_cap[slot],
+            self.page_size, self._window, progress)
+        self.stats.pages_in_use -= len(unmaps)
+        if in_cache:
+            for j, nxt, phys in remaps:
+                self._cache = self._remap_entry_jit(
+                    self._cache, jnp.int32(slot), jnp.int32(j),
+                    jnp.int32(nxt), jnp.int32(phys))
+            for j in unmaps:
+                self._cache = self._unmap_entry_jit(
+                    self._cache, jnp.int32(slot), jnp.int32(j))
 
     def run_to_completion(self, max_ticks: int = 10_000) -> EngineStats:
         ticks = 0

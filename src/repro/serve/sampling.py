@@ -22,6 +22,17 @@ cost): top-k keeps the first k sorted positions (ties at the k-th value
 resolve by the stable sort's token-id order), and top-p keeps the smallest
 sorted prefix whose softmax mass reaches p (the top token always
 survives). top_k=0 and top_p>=1 disable their filters.
+
+Degenerate parameters clamp to well-defined behavior (PR 5) instead of
+producing NaN / all-NEG_INF rows:
+  * top_k >= vocab: no rank can be filtered — identical to top_k=0 (off);
+  * top_p == 0.0: the exclusive-prefix-mass rule would drop EVERY rank
+    (rank 0's prefix mass is 0, and 0 < 0 is false) leaving an all-NEG_INF
+    categorical → the top sorted token is always kept, so top_p=0 is the
+    argmax of the top-k-filtered, temperature-scaled distribution;
+  * temperature < 0: treated as 0 — the greedy raw-argmax fast path
+    (`clamp_sample_params` normalizes host-side params the same way so
+    engine validation and the in-jit sampler agree).
 """
 
 from __future__ import annotations
@@ -30,6 +41,16 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.attention import NEG_INF
+
+
+def clamp_sample_params(temperature, top_k, top_p):
+    """Host-side normalization of degenerate sampling params to the
+    well-defined behaviors `_sample_one` implements: negative temperature →
+    0 (greedy), negative top_k → 0 (off; >= vocab is equivalent to off
+    in-kernel), top_p clipped into [0, 1] (0 = argmax of the filtered
+    distribution, 1 = off)."""
+    return (max(0.0, float(temperature)), max(0, int(top_k)),
+            min(1.0, max(0.0, float(top_p))))
 
 
 def _sample_one(logits, temperature, top_k, top_p, seed, counter):
@@ -45,7 +66,9 @@ def _sample_one(logits, temperature, top_k, top_p, seed, counter):
                    NEG_INF, ld)
     lt = lk / jnp.maximum(temperature, 1e-6)
     probs = jax.nn.softmax(lt)                    # already descending
-    keep = (jnp.cumsum(probs) - probs) < top_p    # exclusive prefix mass
+    # exclusive prefix mass; rank 0 is ALWAYS kept so top_p=0 degrades to
+    # the argmax of the filtered distribution instead of an all-NEG_INF row
+    keep = ((jnp.cumsum(probs) - probs) < top_p) | (ranks == 0)
     lt = jnp.where((top_p < 1.0) & ~keep, NEG_INF, lt)
     key = jax.random.fold_in(jax.random.key(seed), counter)
     sampled = order[jax.random.categorical(key, lt)].astype(jnp.int32)

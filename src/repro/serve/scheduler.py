@@ -1,0 +1,238 @@
+"""Async shard scheduler: admission, placement and prefill interleaving for
+the sharded serving engine (PR 5).
+
+The single-host `ServeEngine` folds admission control into the engine tick:
+one free list, one FIFO of mid-prefill slots, one chunk per tick. Sharded
+serving over `make_production_mesh`'s data axis breaks that shape in three
+ways, and this object is where the differences live:
+
+  * **Per-shard free lists.** Every shard owns a private page pool (local
+    page ids; page 0 is the shard's null page) — a request's reservation must
+    come from ONE shard's pool so its page-table row stays device-local and
+    `decode_attention`'s scalar-prefetch gathers never cross devices. The
+    scheduler never mixes pages across shards.
+  * **Least-loaded placement.** The queue head admits onto the shard with a
+    free slot, enough free pages, and the least load (fewest pages in use,
+    then fewest busy slots, then lowest shard id — a deterministic total
+    order, so identical traffic schedules identically run-to-run). Admission
+    stays FIFO: if no shard can take the head, nothing overtakes it.
+  * **Interleaved prefill ticks.** Each shard advances AT MOST ONE chunk of
+    its own oldest mid-prefill slot per engine tick, independently of every
+    other shard — a 4k-token prompt admitted to shard 3 costs shard 3 a
+    chunk per tick and costs shards 0-2 nothing, so one long prompt can
+    never stall decode on another shard (the multi-chiplet analog of PR 4's
+    head-of-line fix: chiplets prefill behind their own FCU queues while the
+    others keep streaming decode traffic).
+
+Token streams are schedule-independent (PR 4 pinned chunk/batch-composition
+invariance), so none of these policies can change WHAT a request generates —
+only when. That is what makes the sharded engine token-identical to the
+single-host one under completely different admission orders.
+
+Retirement — including mid-prefill retirement (`cancel`) — drains the slot's
+chunk queue and returns EVERY reserved page to its shard's free list in one
+step; the pool-accounting regression tests pin that no reservation survives
+a retirement at any lifecycle stage (queued / mid-prefill / decoding).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from repro.serve.engine import (
+    Request, page_row_of, recycle_dead_pages, reserve_page_count,
+    window_page_budget)
+
+
+@dataclasses.dataclass
+class ShardState:
+    """Host-side bookkeeping for one shard's slots and page pool."""
+    free_pages: List[int]                 # LOCAL ids, 1..n_pages-1 (0 = null)
+    slots: List[Optional[Request]]
+    prefill_fifo: List[int]               # local slot ids mid-prefill, FIFO
+    chunk_next: List[int]                 # next chunk start per local slot
+    slot_pages: List[Dict[int, int]]      # logical page -> LOCAL physical
+    slot_cap: List[int]                   # highest writable logical page (excl)
+    pages_in_use: int = 0
+
+
+@dataclasses.dataclass
+class ChunkWork:
+    """One shard's prefill work for this tick."""
+    shard: int
+    slot: int                             # local slot id
+    req: Request
+    start: int                            # chunk's first global position
+    length: int                           # real rows in this chunk
+    final: bool                           # last chunk — slot goes live after
+
+
+class ShardScheduler:
+    def __init__(self, *, n_shards: int, slots_per_shard: int, n_pages: int,
+                 page_size: int, pages_per_seq: int, max_len: int,
+                 chunk_tokens: int, window: int = 0):
+        assert n_pages >= 2, n_pages     # local null page + ≥1 usable
+        self.n_shards = n_shards
+        self.slots_per_shard = slots_per_shard
+        self.n_pages = n_pages           # per shard, incl. the local null page
+        self.page_size = page_size
+        self.pages_per_seq = pages_per_seq
+        self.max_len = max_len
+        self.chunk_tokens = chunk_tokens
+        self.window = window
+        self.queue: List[Request] = []
+        self.shards = [
+            ShardState(free_pages=list(range(n_pages - 1, 0, -1)),
+                       slots=[None] * slots_per_shard,
+                       prefill_fifo=[],
+                       chunk_next=[0] * slots_per_shard,
+                       slot_pages=[{} for _ in range(slots_per_shard)],
+                       slot_cap=[0] * slots_per_shard)
+            for _ in range(n_shards)]
+
+    # ------------------------------------------------------------ reservation
+    def _window_pages(self) -> int:
+        return window_page_budget(self.window, self.page_size)
+
+    def pages_for(self, plen: int, max_new: int) -> int:
+        """Pages one request reserves at admission — the single-host chunked
+        engine's math (engine.reserve_page_count, ONE shared copy): full
+        span, or O(window) when a sliding window recycles pages forward."""
+        return reserve_page_count(plen, max_new, max_len=self.max_len,
+                                  page_size=self.page_size,
+                                  window=self.window)
+
+    @property
+    def pages_in_use(self) -> int:
+        return sum(s.pages_in_use for s in self.shards)
+
+    def shard_pages_in_use(self) -> List[int]:
+        return [s.pages_in_use for s in self.shards]
+
+    # -------------------------------------------------------------- placement
+    def _eligible(self, need: int) -> Optional[int]:
+        """Least-loaded shard with a free slot and `need` free pages."""
+        best = None
+        for i, s in enumerate(self.shards):
+            if len(s.free_pages) < need or None not in s.slots:
+                continue
+            busy = sum(r is not None for r in s.slots)
+            key = (s.pages_in_use, busy, i)
+            if best is None or key < best[0]:
+                best = (key, i)
+        return None if best is None else best[1]
+
+    def admit(self) -> List[Tuple[int, int, Request]]:
+        """Admit queued requests FIFO onto least-loaded shards.
+
+        Returns [(shard, local_slot, request)] placements; pages are already
+        reserved and mapped in `slot_pages` (logical page 0 upward — chunked
+        prefill writes row 0 first; windowed slots recycle forward from
+        there). Stalls — without overtaking — when the head fits nowhere."""
+        placed = []
+        while self.queue:
+            r = self.queue[0]
+            need = self.pages_for(r.prompt.shape[0], r.max_new_tokens)
+            shard = self._eligible(need)
+            if shard is None:
+                break
+            s = self.shards[shard]
+            slot = s.slots.index(None)
+            pages = [s.free_pages.pop() for _ in range(need)]
+            s.slot_pages[slot] = {j: p for j, p in enumerate(pages)}
+            s.slot_cap[slot] = -(-min(self.max_len,
+                                      r.prompt.shape[0] + r.max_new_tokens)
+                                 // self.page_size)
+            s.pages_in_use += need
+            s.slots[slot] = r
+            s.chunk_next[slot] = 0
+            s.prefill_fifo.append(slot)
+            self.queue.pop(0)
+            placed.append((shard, slot, r))
+        return placed
+
+    # ---------------------------------------------------------------- prefill
+    def next_chunks(self) -> List[ChunkWork]:
+        """One chunk of work per shard that has any (oldest slot first) —
+        the per-shard interleaving: no shard's prefill costs another shard
+        a tick."""
+        work = []
+        for i, s in enumerate(self.shards):
+            if not s.prefill_fifo:
+                continue
+            slot = s.prefill_fifo[0]
+            r = s.slots[slot]
+            st = s.chunk_next[slot]
+            plen = r.prompt.shape[0]
+            if self.window and st:
+                # recycle pages no chunk row >= st can still read; the cache
+                # table row is still null, so this is host bookkeeping only
+                self.recycle(i, slot, st)
+            work.append(ChunkWork(
+                shard=i, slot=slot, req=r, start=st,
+                length=min(self.chunk_tokens, plen - st),
+                final=st + self.chunk_tokens >= plen))
+        return work
+
+    def advance_chunk(self, w: ChunkWork) -> None:
+        s = self.shards[w.shard]
+        if w.final:
+            s.prefill_fifo.pop(0)
+        else:
+            s.chunk_next[w.slot] = w.start + self.chunk_tokens
+
+    def page_row(self, shard: int, slot: int):
+        """The slot's (pages_per_seq,) LOCAL-physical page row (null page 0
+        beyond the mapping) — what rides the chunk call and, once the slot is
+        live, the device-local page table."""
+        return page_row_of(self.shards[shard].slot_pages[slot],
+                           self.pages_per_seq)
+
+    # --------------------------------------------------------------- windowing
+    def recycle(self, shard: int, slot: int, progress: int):
+        """Free pages fully below `progress - window` — the single-host
+        engine's recycle core (engine.recycle_dead_pages, ONE shared copy)
+        against this shard's free list. Returns [(j_dead, j_new, phys)]
+        remap and [j_dead] unmap events so the engine can mirror them into
+        the device-local page table for live slots."""
+        s = self.shards[shard]
+        remaps, unmaps = recycle_dead_pages(
+            s.slot_pages[slot], s.free_pages, s.slot_cap[slot],
+            self.page_size, self.window, progress)
+        s.pages_in_use -= len(unmaps)
+        return remaps, unmaps
+
+    # -------------------------------------------------------------- retirement
+    def release(self, shard: int, slot: int) -> None:
+        """Retire a slot at ANY lifecycle stage: drain its chunk queue and
+        return every reserved page to the shard's free list (the mid-prefill
+        leak fix — a slot cancelled with chunks still queued must not keep
+        its reservation)."""
+        s = self.shards[shard]
+        s.slots[slot] = None
+        if slot in s.prefill_fifo:
+            s.prefill_fifo.remove(slot)
+        s.chunk_next[slot] = 0
+        freed = s.slot_pages[slot]
+        if freed:
+            s.free_pages.extend(freed.values())
+            s.pages_in_use -= len(freed)
+            s.slot_pages[slot] = {}
+        s.slot_cap[slot] = 0
+
+    def find(self, req: Request) -> Optional[Tuple[int, int]]:
+        for i, s in enumerate(self.shards):
+            for slot, r in enumerate(s.slots):
+                if r is req:
+                    return i, slot
+        return None
+
+    def assert_local(self) -> None:
+        """Device-locality invariant: every mapped physical page id is a
+        LOCAL id inside its own shard's pool — no table entry can ever name
+        another device's page."""
+        for i, s in enumerate(self.shards):
+            for slot, m in enumerate(s.slot_pages):
+                for j, p in m.items():
+                    assert 0 < p < self.n_pages, (i, slot, j, p)

@@ -1,0 +1,470 @@
+"""Sharded multi-chiplet serving: slot- and page-partitioned engine (PR 5).
+
+The paper's scale-out story (§II: dual NPU chiplets behind an AI-aware UCIe
+interconnect) as a serving runtime: `ShardedServeEngine` partitions the
+decode batch's slots AND the paged KV pool across a mesh axis (the
+production mesh's 'data' axis — one shard per chiplet/device) via
+`parallel/shmap.shard_map`, so the whole fleet decodes in ONE jitted global
+step while every byte of KV traffic stays on the device that owns it.
+
+Layout invariants (what makes this GSPMD-proof instead of GSPMD-hostile):
+  * **Contiguous page ranges per device.** The global K/V pools are
+    (L, n_shards · n_pages, page_size, KV, D), sharded on the page axis —
+    each device physically owns pages [shard·n_pages, (shard+1)·n_pages).
+    Inside `shard_map` a device sees only its local (L, n_pages, ...) pool.
+  * **Device-local page tables.** Table entries are LOCAL page ids
+    (0..n_pages-1; local page 0 is each shard's null page). A slot's pages
+    are reserved from its own shard's free list only, so the decode kernel's
+    scalar-prefetch gathers (kernels/decode_attention.paged_index_maps) and
+    the chunk-prefill pool writes are local by construction — never a
+    cross-device gather, which is exactly what the paged pool's scatter
+    write pattern would otherwise force GSPMD to emit collectives for
+    (ROADMAP: "a sharded pool wants pages partitioned by device with
+    device-local tables").
+  * **Tokens are the only per-step collective.** The global decode step runs
+    per-shard decode attention + sampling under `shard_map` and all-gathers
+    only the emitted (n_slots,) int32 tokens. Page tables and stream
+    positions are HOST-authoritative (small int32 arrays fed in per tick),
+    so there is no per-step cache sync at all and window-recycling needs no
+    device-side remap programs.
+  * **Weights are shard-stationary.** Params are replicated across the slot
+    axis (the `serve_sharded` plan in parallel/sharding.py: the weight-
+    stationary placement of `serve_ws` with the slot axis retired from every
+    param rule — nothing is gathered per step). Intra-shard tensor
+    parallelism over a 'model' axis inside shard_map needs manual
+    collectives and is a recorded follow-on.
+
+Admission runs through `serve/scheduler.ShardScheduler`: per-shard free
+lists, least-loaded placement, and per-shard interleaved chunk prefill — a
+long prompt admitted to one shard costs only that shard a chunk per tick, so
+it can never stall decode on another shard.
+
+Token parity: per-request token streams are schedule-independent (PR 4
+pinned chunk-size/batch-composition invariance; sampling is keyed by
+(request seed, token index)), so this engine is token-IDENTICAL to the
+single-host `ServeEngine` for the same submissions — the equivalence
+`tests/test_sharded_serve.py` pins on an 8-device CPU mesh for dense/moe ×
+{f32, int8} KV, windowed configs, and mid-stream retirements.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.parallel.shmap import shard_map
+from repro.serve.engine import _ATTN_FAMILIES, _KV_DTYPES, EngineStats, Request
+from repro.serve.sampling import clamp_sample_params, sample_tokens
+from repro.serve.scheduler import ShardScheduler
+
+
+def _replicated_specs(tree):
+    """Full-rank replicated PartitionSpecs matching a pytree of arrays."""
+    return jax.tree.map(lambda x: P(*([None] * jnp.ndim(x))), tree)
+
+
+class ShardedServeEngine:
+    """Continuous batching over a device-partitioned paged KV pool.
+
+    API mirrors `ServeEngine` (submit / step / run_to_completion / cancel /
+    stats); `n_slots` is the GLOBAL decode batch (must divide by the mesh's
+    shard count) and `n_pages` is the PER-SHARD pool size including each
+    shard's local null page.
+    """
+
+    def __init__(self, model, *, mesh: Mesh, axis: str = "data",
+                 n_slots: int = 4, max_len: int = 128, params=None,
+                 page_size: int = 32, n_pages: Optional[int] = None,
+                 wdtype: Optional[str] = None,
+                 kv_dtype: Optional[str] = None,
+                 chunk_pages: int = 2):
+        self.model = model
+        self.cfg = model.cfg
+        if self.cfg.family not in ("dense", "moe", "vlm"):
+            raise ValueError(
+                "ShardedServeEngine shards paged attention-family caches "
+                f"(dense/moe/vlm), not {self.cfg.family!r} (encdec needs a "
+                "sharded cross-cache paste — recorded follow-on)")
+        if model.prefill_chunk is None:
+            raise ValueError("sharded serving requires chunked prefill")
+        if axis not in mesh.shape:
+            raise ValueError(f"mesh has no {axis!r} axis: {dict(mesh.shape)}")
+        for a, n in mesh.shape.items():
+            if a != axis and n != 1:
+                raise ValueError(
+                    f"mesh axis {a!r} (size {n}) is unsupported: intra-shard "
+                    "tensor parallelism inside the shard_map'd decode step "
+                    "needs manual collectives (recorded follow-on) — shard "
+                    f"slots over a 1-D {axis!r} mesh (launch/mesh."
+                    "make_serve_mesh)")
+        self.mesh, self.axis = mesh, axis
+        self.n_shards = mesh.shape[axis]
+        if n_slots % self.n_shards:
+            raise ValueError(f"n_slots {n_slots} must divide over "
+                             f"{self.n_shards} shards")
+        self.n_slots = n_slots
+        self.slots_per_shard = n_slots // self.n_shards
+        if max_len % page_size:
+            raise ValueError(f"max_len {max_len} % page_size {page_size} != 0")
+        self.max_len = max_len
+        self.page_size = page_size
+        self.pages_per_seq = max_len // page_size
+
+        if wdtype not in (None, "bf16", "int8"):
+            raise ValueError(f"wdtype must be None/'bf16'/'int8', got {wdtype!r}")
+        if wdtype == "int8":
+            from repro.models.quantized import quantize_params
+            params = quantize_params(params, self.cfg)
+        elif wdtype == "bf16":
+            params = jax.tree.map(
+                lambda p: p.astype(jnp.bfloat16)
+                if jnp.issubdtype(p.dtype, jnp.floating) else p, params)
+        self.wdtype = wdtype
+        if kv_dtype not in _KV_DTYPES:
+            raise ValueError(f"unknown kv_dtype {kv_dtype!r}")
+        self.kv_dtype = _KV_DTYPES[kv_dtype]
+        # shard-stationary weights: placed by the serve_sharded plan (the
+        # slot axis is retired from every param rule, so on a 1-D slot mesh
+        # everything resolves to a replica per shard — one device_put at
+        # init, never a per-step gather). Quantized pytrees ({int8_q, s}
+        # leaves) no longer match the schema the plan maps over, and their
+        # plan-resolved placement is replication anyway — place directly.
+        from repro.parallel import sharding as sh
+        if wdtype == "int8":
+            param_specs = _replicated_specs(params)
+        else:
+            param_specs = sh.schema_pspecs(
+                model.schema, mesh, sh.rules_for_plan("serve_sharded"))
+        self.params = jax.device_put(params, sh.named(mesh, param_specs))
+        self._param_specs = param_specs
+
+        self._window = self.cfg.window or 0
+        # windowed slots chunk one page at a time (the single-host invariant:
+        # the ceil(window/page)+2 reservation must cover the chunk write-ahead)
+        self.chunk_pages = 1 if self._window else max(1, int(chunk_pages))
+        self.chunk_tokens = self.chunk_pages * page_size
+        # per-shard pool: local null page + worst case for the shard's slots
+        self.n_pages = (1 + self.slots_per_shard * self.pages_per_seq
+                        if n_pages is None else n_pages)
+        assert self.n_pages >= 2, self.n_pages
+
+        self._sched = ShardScheduler(
+            n_shards=self.n_shards, slots_per_shard=self.slots_per_shard,
+            n_pages=self.n_pages, page_size=page_size,
+            pages_per_seq=self.pages_per_seq, max_len=max_len,
+            chunk_tokens=self.chunk_tokens, window=self._window)
+
+        self.stats = EngineStats()
+        self.shard_tokens = [0] * self.n_shards
+        self.shard_occupancy_sum = [0.0] * self.n_shards
+        self._slots: List[Optional[Request]] = [None] * n_slots
+        self._fresh = [False] * n_slots
+        self._next_rid = 0
+        # HOST-authoritative per-slot state, fed to the device programs each
+        # tick (device-local LOCAL page ids; null rows for free/mid-prefill
+        # slots so decode's garbage writes land on each shard's null page)
+        self._page_table = np.zeros((n_slots, self.pages_per_seq), np.int32)
+        self._pos = np.zeros((n_slots,), np.int32)
+        self._active = np.zeros((n_slots,), bool)
+        self._next_tok = np.zeros((n_slots, 1), np.int32)
+        self._temp = np.zeros((n_slots,), np.float32)
+        self._topk = np.zeros((n_slots,), np.int32)
+        self._topp = np.ones((n_slots,), np.float32)
+        self._sseed = np.zeros((n_slots,), np.int32)
+
+        # ---- device-partitioned pools --------------------------------------
+        abs_cache = model.cache_shape(
+            n_slots, max_len, self.kv_dtype, page_size=page_size,
+            n_pages=self.n_shards * self.n_pages)
+        pool_keys = [k for k in abs_cache if k not in ("page_table", "pos")]
+        ax = self.axis
+
+        def _pool_spec(sds):
+            # pools are (L, pages, ...) — pages partitioned over the shard
+            # axis, each device owning one contiguous local range
+            return P(None, ax, *([None] * (len(sds.shape) - 2)))
+
+        self._pool_specs = {k: _pool_spec(abs_cache[k]) for k in pool_keys}
+        self._pools = {
+            k: jax.device_put(
+                jnp.zeros(abs_cache[k].shape, abs_cache[k].dtype),
+                NamedSharding(mesh, self._pool_specs[k]))
+            for k in pool_keys}
+
+        # ---- the jitted global programs ------------------------------------
+        vocab = self.cfg.vocab_size
+        pspecs = self._param_specs
+        donate = {} if jax.default_backend() == "cpu" else \
+            {"donate_argnums": (2,)}
+
+        def _decode_core(params, tokens, pools, pt, pos):
+            cache = dict(pools, page_table=pt, pos=pos)
+            logits, new_cache = model.decode(params, {"tokens": tokens}, cache)
+            return (logits[:, -1, :vocab],
+                    {k: new_cache[k] for k in pools})
+
+        def _decode_greedy(params, tokens, pools, pt, pos):
+            self.stats.decode_compiles += 1     # trace time only
+            lv, new_pools = _decode_core(params, tokens, pools, pt, pos)
+            return jnp.argmax(lv, axis=-1).astype(jnp.int32), new_pools
+
+        def _decode_sample(params, tokens, pools, pt, pos, sample):
+            self.stats.decode_compiles += 1
+            lv, new_pools = _decode_core(params, tokens, pools, pt, pos)
+            toks = sample_tokens(
+                lv.astype(jnp.float32),
+                sample["temperature"], sample["top_k"], sample["top_p"],
+                sample["seed"], sample["counter"])
+            return toks, new_pools
+
+        tok_spec = P(ax, None)
+        pt_spec = P(ax, None)
+        vec_spec = P(ax)
+        sample_specs = {k: vec_spec for k in
+                        ("temperature", "top_k", "top_p", "seed", "counter")}
+
+        self._decode_jit = jax.jit(shard_map(
+            _decode_greedy, mesh=mesh,
+            in_specs=(pspecs, tok_spec, self._pool_specs, pt_spec, vec_spec),
+            out_specs=(vec_spec, self._pool_specs)), **donate)
+        self._decode_sample_jit = jax.jit(shard_map(
+            _decode_sample, mesh=mesh,
+            in_specs=(pspecs, tok_spec, self._pool_specs, pt_spec, vec_spec,
+                      sample_specs),
+            out_specs=(vec_spec, self._pool_specs)), **donate)
+
+        def _chunk(params, batch, pools):
+            self.stats.chunk_compiles += 1      # trace time only
+            sub = {"tokens": batch["tokens"], "start": batch["start"],
+                   "length": batch["length"],
+                   "page_row": batch["page_row"][0]}
+            if self.cfg.family == "vlm":
+                sub["patch_rows"] = batch["patch_rows"]
+                sub["n_patch"] = batch["n_patch"]
+            new_cache = model.prefill_chunk(params, sub, dict(pools))
+            return {k: new_cache[k] for k in pools}
+
+        chunk_specs = {"tokens": P(ax, None), "start": vec_spec,
+                       "length": vec_spec, "page_row": P(ax, None)}
+        if self.cfg.family == "vlm":
+            chunk_specs["patch_rows"] = P(ax, None, None)
+            chunk_specs["n_patch"] = vec_spec
+        self._chunk_specs = chunk_specs
+        self._chunk_jit = jax.jit(shard_map(
+            _chunk, mesh=mesh,
+            in_specs=(pspecs, chunk_specs, self._pool_specs),
+            out_specs=self._pool_specs), **donate)
+
+    # ------------------------------------------------------------- lifecycle
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
+               extras: Optional[Dict[str, np.ndarray]] = None,
+               sample_params: Optional[tuple] = None,
+               seed: int = 0) -> Request:
+        prompt = np.asarray(prompt, np.int32)
+        assert 1 <= prompt.shape[0] <= self.max_len, prompt.shape
+        assert max_new_tokens >= 1, max_new_tokens
+        need = self._sched.pages_for(prompt.shape[0], max_new_tokens)
+        if need > self.n_pages - 1:
+            raise ValueError(f"request needs {need} pages; each shard's pool "
+                             f"has {self.n_pages - 1}")
+        temperature, top_k, top_p = 0.0, 0, 1.0
+        if sample_params is not None:
+            temperature, top_k, top_p = clamp_sample_params(*sample_params)
+        self._next_rid += 1
+        req = Request(rid=self._next_rid, prompt=prompt,
+                      max_new_tokens=max_new_tokens, extras=extras,
+                      temperature=temperature, top_k=top_k, top_p=top_p,
+                      seed=int(seed), t_enqueue=time.time())
+        self._sched.queue.append(req)
+        return req
+
+    def cancel(self, req: Request) -> None:
+        """Retire a request at any stage: queued → dequeue; mid-prefill →
+        drain its chunk queue and free every reserved page; decoding →
+        release the slot. Pool accounting is exact in all three."""
+        if req.done:
+            return
+        if req in self._sched.queue:
+            self._sched.queue.remove(req)
+        else:
+            at = self._sched.find(req)
+            if at is not None:
+                self._release(at[0] * self.slots_per_shard + at[1])
+        req.done = True
+        req.t_done = time.time()
+
+    def _gslot(self, shard: int, slot: int) -> int:
+        return shard * self.slots_per_shard + slot
+
+    def _release(self, g: int):
+        shard, slot = divmod(g, self.slots_per_shard)
+        self._sched.release(shard, slot)
+        self._slots[g] = None
+        self._active[g] = False
+        self._fresh[g] = False
+        self._page_table[g] = 0         # back on the shard's null page
+        self._temp[g], self._topk[g] = 0.0, 0
+        self._topp[g], self._sseed[g] = 1.0, 0
+        self.stats.pages_in_use = self._sched.pages_in_use
+
+    def kv_cache_bytes(self) -> int:
+        return sum(x.size * x.dtype.itemsize for x in self._pools.values())
+
+    def assert_local_page_tables(self) -> None:
+        """The zero-cross-device-reference invariant: every page-table entry
+        is a LOCAL id addressing its own shard's pool partition."""
+        self._sched.assert_local()
+        assert int(self._page_table.max(initial=0)) < self.n_pages, \
+            self._page_table.max()
+        assert int(self._page_table.min(initial=0)) >= 0
+
+    # ---------------------------------------------------------------- prefill
+    def _prefill_tick(self) -> bool:
+        work = self._sched.next_chunks()
+        if not work:
+            return False
+        S, C = self.n_shards, self.chunk_tokens
+        tokens = np.zeros((S, C), np.int32)
+        start = np.zeros((S,), np.int32)
+        length = np.zeros((S,), np.int32)
+        page_rows = np.zeros((S, self.pages_per_seq), np.int32)
+        batch = {"tokens": tokens, "start": start, "length": length,
+                 "page_row": page_rows}
+        if self.cfg.family == "vlm":
+            batch["patch_rows"] = np.zeros((S, C, self.cfg.d_model),
+                                           np.float32)
+            batch["n_patch"] = np.zeros((S,), np.int32)
+        for w in work:
+            tokens[w.shard, :w.length] = w.req.prompt[w.start:w.start + w.length]
+            start[w.shard] = w.start
+            length[w.shard] = w.length
+            page_rows[w.shard] = self._sched.page_row(w.shard, w.slot)
+            if self.cfg.family == "vlm":
+                pe = np.asarray((w.req.extras or {}).get(
+                    "patch_embeds",
+                    np.zeros((0, self.cfg.d_model), np.float32)))
+                if w.start < pe.shape[0]:
+                    m = min(C, pe.shape[0] - w.start)
+                    batch["patch_rows"][w.shard, :m] = pe[w.start:w.start + m]
+                batch["n_patch"][w.shard] = pe.shape[0]
+        self._pools = self._chunk_jit(
+            self.params, {k: jnp.asarray(v) for k, v in batch.items()},
+            self._pools)
+        self.stats.prefill_chunks += len(work)
+        self.stats.prefill_pad_tokens += sum(C - w.length for w in work)
+        for w in work:
+            self._sched.advance_chunk(w)
+            if w.final:
+                g = self._gslot(w.shard, w.slot)
+                # the slot goes live: stamp its DEVICE-LOCAL table row and
+                # replay position into the host-authoritative state
+                self._page_table[g] = self._sched.page_row(w.shard, w.slot)
+                self._pos[g] = w.req.prompt.shape[0] - 1
+                self._next_tok[g, 0] = int(w.req.prompt[-1])
+                self._fresh[g] = True
+                self._active[g] = True
+        return True
+
+    # ----------------------------------------------------------------- decode
+    def step(self) -> bool:
+        for shard, slot, r in self._sched.admit():
+            g = self._gslot(shard, slot)
+            self._slots[g] = r
+            self._active[g] = False
+            self._fresh[g] = False
+            self._temp[g], self._topk[g] = r.temperature, r.top_k
+            self._topp[g], self._sseed[g] = r.top_p, r.seed
+            self.stats.prefills += 1
+            self.stats.prefill_tokens += r.prompt.shape[0]
+        self.stats.pages_in_use = self._sched.pages_in_use
+        self.stats.peak_pages_in_use = max(self.stats.peak_pages_in_use,
+                                           self.stats.pages_in_use)
+        chunk_ran = self._prefill_tick()
+        decoding = [g for g in range(self.n_slots) if self._active[g]]
+        if not decoding:
+            return chunk_ran
+        args = (self.params, jnp.asarray(self._next_tok), self._pools,
+                jnp.asarray(self._page_table), jnp.asarray(self._pos))
+        if any(self._temp[g] > 0 for g in decoding):
+            counter = np.asarray(
+                [len(r.out_tokens) if r is not None else 0
+                 for r in self._slots], np.int32)
+            sample = {"temperature": jnp.asarray(self._temp),
+                      "top_k": jnp.asarray(self._topk),
+                      "top_p": jnp.asarray(self._topp),
+                      "seed": jnp.asarray(self._sseed),
+                      "counter": jnp.asarray(counter)}
+            toks, self._pools = self._decode_sample_jit(*args, sample)
+        else:
+            toks, self._pools = self._decode_jit(*args)
+        self.stats.decode_steps += 1
+        self.stats.occupancy_sum += len(decoding) / self.n_slots
+        for shard in range(self.n_shards):
+            busy = sum(1 for g in decoding
+                       if g // self.slots_per_shard == shard)
+            self.shard_occupancy_sum[shard] += busy / self.slots_per_shard
+        nxt = np.asarray(toks, np.int32)     # tokens: the ONLY per-step sync
+        self._pos[self._active] += 1         # host-authoritative positions
+        for g in decoding:
+            r = self._slots[g]
+            r.out_tokens.append(int(nxt[g]))
+            self._next_tok[g, 0] = nxt[g]
+            self.stats.tokens_out += 1
+            self.shard_tokens[g // self.slots_per_shard] += 1
+            if self._fresh[g]:
+                r.t_first_token = time.time()
+                self._fresh[g] = False
+            if len(r.out_tokens) >= r.max_new_tokens \
+                    or int(self._pos[g]) >= self.max_len:
+                r.done = True
+                r.t_done = time.time()
+                self._release(g)
+        if self._window:
+            self._recycle_window_pages()
+        return True
+
+    def _recycle_window_pages(self):
+        """Slide live slots' windows: scheduler bookkeeping + mirroring the
+        remap/unmap events into the host-authoritative page table (the next
+        decode tick sees the moved entries — same ordering as the
+        single-host engine's post-decode recycling)."""
+        for g in range(self.n_slots):
+            if self._slots[g] is None or not self._active[g]:
+                continue
+            shard, slot = divmod(g, self.slots_per_shard)
+            if not self._sched.shards[shard].slot_pages[slot]:
+                continue
+            remaps, unmaps = self._sched.recycle(shard, slot,
+                                                 int(self._pos[g]))
+            for j_dead, j_new, phys in remaps:
+                self._page_table[g, j_dead] = 0
+                self._page_table[g, j_new] = phys
+            for j_dead in unmaps:
+                self._page_table[g, j_dead] = 0
+        self.stats.pages_in_use = self._sched.pages_in_use
+
+    def run_to_completion(self, max_ticks: int = 10_000) -> EngineStats:
+        ticks = 0
+        while (self._sched.queue
+               or any(r is not None for r in self._slots)) \
+                and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        return self.stats
+
+    # ------------------------------------------------------------------ stats
+    def shard_summary(self) -> Dict[str, float]:
+        """Per-shard balance metrics for the bench's sharded section."""
+        toks = self.shard_tokens
+        mean = sum(toks) / max(1, len(toks))
+        imb = (max(toks) - min(toks)) / mean if mean else 0.0
+        return {"shard_tokens": list(toks),
+                "occupancy_imbalance": imb,
+                "shard_occupancy": [
+                    s / self.stats.decode_steps if self.stats.decode_steps
+                    else 0.0 for s in self.shard_occupancy_sum]}

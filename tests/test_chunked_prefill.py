@@ -366,6 +366,94 @@ def test_chunked_validation(smol):
     p2 = m2.init(jax.random.key(0))
     with pytest.raises(ValueError):
         ServeEngine(m2, params=p2, chunked_prefill=True)
-    with pytest.raises(ValueError):
-        ServeEngine(model, params=params).submit(
-            _prompt(0, 5), sample_params=(-1.0, 0, 1.0))
+
+
+def test_degenerate_sample_params_clamp(smol):
+    """Satellite (PR 5): degenerate sampling params clamp to well-defined
+    behavior instead of raising / NaN-ing — temperature < 0 is greedy,
+    top_k >= vocab disables the filter, top_p = 0 is the filtered argmax."""
+    cfg, model, params, _ = smol
+    greedy = generate_greedy(model, params, _prompt(3, 9), n_tokens=4,
+                             max_len=64)
+    eng = ServeEngine(model, n_slots=2, max_len=64, params=params,
+                      page_size=8)
+    # negative temperature → clamped to the greedy fast path
+    r_neg = eng.submit(_prompt(3, 9), max_new_tokens=4,
+                       sample_params=(-1.0, 0, 1.0))
+    # top_p = 0 with temperature > 0 → argmax of the (unfiltered, scaled)
+    # distribution — same tokens as greedy, but through the sampler
+    r_p0 = eng.submit(_prompt(3, 9), max_new_tokens=4,
+                      sample_params=(0.8, 0, 0.0), seed=5)
+    # top_k >= vocab ≡ top_k off: same stream as the top_k=0 submission
+    r_kbig = eng.submit(_prompt(3, 9), max_new_tokens=4,
+                        sample_params=(0.8, cfg.vocab_size + 7, 1.0), seed=9)
+    r_k0 = eng.submit(_prompt(3, 9), max_new_tokens=4,
+                      sample_params=(0.8, 0, 1.0), seed=9)
+    eng.run_to_completion()
+    assert r_neg.out_tokens == greedy
+    assert r_p0.out_tokens == greedy
+    assert r_kbig.out_tokens == r_k0.out_tokens
+    assert all(0 <= t < cfg.vocab_size for t in r_p0.out_tokens)
+
+
+def test_sample_tokens_vmapped_edge_cases():
+    """The vmapped sampler itself: one batch mixing every degenerate corner
+    must emit finite in-range tokens — top_p=0 rows take the argmax of the
+    top-k-filtered distribution (never an all-NEG_INF categorical)."""
+    import jax.numpy as jnp
+    from repro.serve.sampling import clamp_sample_params, sample_tokens
+    v = 64
+    logits = jax.random.normal(jax.random.key(0), (5, v), jnp.float32)
+    params = [clamp_sample_params(*p) for p in
+              [(-2.0, 0, 1.0),        # negative temp → greedy
+               (0.7, v + 9, 1.0),     # top_k >= vocab → filter off
+               (0.7, 0, 0.0),         # top_p = 0 → argmax
+               (0.7, 3, 0.0),         # top_p = 0 under top-k → argmax
+               (1e-9, 1, 1e-9)]]      # everything tiny at once
+    temps = jnp.asarray([p[0] for p in params], jnp.float32)
+    ks = jnp.asarray([p[1] for p in params], jnp.int32)
+    ps = jnp.asarray([p[2] for p in params], jnp.float32)
+    seeds = jnp.zeros((5,), jnp.int32)
+    ctr = jnp.zeros((5,), jnp.int32)
+    toks = np.asarray(sample_tokens(logits, temps, ks, ps, seeds, ctr))
+    arg = np.argmax(np.asarray(logits), axis=-1)
+    assert ((toks >= 0) & (toks < v)).all(), toks
+    assert toks[0] == arg[0]          # greedy row
+    assert toks[2] == arg[2]          # top_p=0 → argmax
+    assert toks[3] == arg[3]          # top_p=0 survives the top-k filter
+    assert toks[4] == arg[4]
+
+
+def test_cancel_drains_reservations_at_every_stage(smol):
+    """Satellite (PR 5): retiring a request mid-prefill must drain its chunk
+    queue and return EVERY reserved page; queued and decoding cancels keep
+    the same exact accounting, and survivors stay token-exact."""
+    cfg, model, params, _ = smol
+    solo = generate_greedy(model, params, _prompt(51, 9), n_tokens=4,
+                           max_len=64)
+    eng = ServeEngine(model, n_slots=2, max_len=64, params=params,
+                      page_size=8)
+    long_p = _prompt(50, 40)                   # several chunks of prefill
+    r_long = eng.submit(long_p, max_new_tokens=4)
+    r_short = eng.submit(_prompt(51, 9), max_new_tokens=4)
+    r_queued = eng.submit(_prompt(52, 9), max_new_tokens=4)
+    eng.step()                                 # long admits, first chunk runs
+    assert eng._prefill_fifo, "long prompt should be mid-prefill"
+    held = eng.stats.pages_in_use
+    assert held > 0
+    eng.cancel(r_long)                         # mid-prefill retirement
+    assert r_long.done
+    assert eng._prefill_fifo == [] or 0 not in eng._prefill_fifo
+    eng.cancel(r_queued)                       # queued: nothing was reserved
+    eng.run_to_completion()
+    assert r_short.out_tokens == solo
+    assert eng.stats.pages_in_use == 0
+    assert len(eng._free_pages) == eng.n_pages - 1
+    # cancel while decoding releases the slot's pages too
+    r = eng.submit(_prompt(53, 9), max_new_tokens=30)
+    for _ in range(6):
+        eng.step()
+    assert len(r.out_tokens) > 0 and not r.done
+    eng.cancel(r)
+    assert eng.stats.pages_in_use == 0
+    assert len(eng._free_pages) == eng.n_pages - 1

@@ -12,7 +12,8 @@ from repro.train.governor import GovernorState, govern, step_governor
 
 
 def test_plan_registry():
-    assert set(PLAN_RULES) == {"tp16", "dp_heavy", "serve_ws"}
+    assert set(PLAN_RULES) == {"tp16", "dp_heavy", "serve_ws",
+                               "serve_sharded"}
     for p in PLAN_RULES:
         rules = rules_for_plan(p)
         assert "batchlike" in rules and "ff" in rules

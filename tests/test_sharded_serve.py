@@ -1,0 +1,204 @@
+"""Sharded multi-chiplet serving (PR 5): token parity vs the single-host
+engine on a multi-device CPU mesh, plus the device-locality and
+pool-accounting invariants.
+
+The sharded engine partitions slots and the paged KV pool across the mesh's
+data axis (shard_map; device-local page tables) — these tests pin:
+  * same submissions + same seeds ⇒ IDENTICAL tokens to the single-host
+    `ServeEngine` on an 8-device mesh, for dense/moe × {f32, int8} KV,
+    greedy and seeded-sampled, a windowed config, and mid-stream
+    retirements (different budgets + an explicit cancel);
+  * zero cross-device page-table references (every table entry is a LOCAL
+    page id into its own shard's pool partition);
+  * exact pool accounting after every retirement path, including a
+    mid-prefill cancel that must drain the slot's chunk queue.
+
+Multi-device runs fork a subprocess with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 (the repo-wide idiom —
+device count is fixed at jax import). The single-device-mesh test runs
+in-process: a 1-shard sharded engine must degenerate to the single-host
+engine exactly.
+"""
+
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import ExecOptions, build_model
+from repro.launch.mesh import make_serve_mesh
+from repro.serve.engine import ServeEngine
+from repro.serve.sharded import ShardedServeEngine
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_PRELUDE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses
+import jax, numpy as np
+from repro.configs import get_config
+from repro.models import ExecOptions, build_model
+from repro.serve.engine import ServeEngine
+from repro.serve.sharded import ShardedServeEngine
+from repro.launch.mesh import make_serve_mesh
+
+mesh = make_serve_mesh(8)
+assert mesh.shape["data"] == 8, dict(mesh.shape)
+
+def prompt(seed, n, vocab=512):
+    return np.asarray(jax.random.randint(
+        jax.random.key(seed), (n,), 0, vocab), np.int32)
+
+def parity(model, params, lens, *, kw=None, sample=None, new_tokens=None,
+           max_len=64, ps=8, n_slots=8):
+    # same submissions, same seeds, both engines; returns the sharded engine
+    kw = kw or {}
+    new_tokens = new_tokens or [4] * len(lens)
+    single = ServeEngine(model, n_slots=n_slots, max_len=max_len,
+                         params=params, page_size=ps, **kw)
+    sr = [single.submit(prompt(i, n), max_new_tokens=m, sample_params=sample,
+                        seed=100 + i) for i, (n, m) in
+          enumerate(zip(lens, new_tokens))]
+    single.run_to_completion()
+    eng = ShardedServeEngine(model, mesh=mesh, n_slots=n_slots,
+                             max_len=max_len, params=params, page_size=ps,
+                             **kw)
+    rr = [eng.submit(prompt(i, n), max_new_tokens=m, sample_params=sample,
+                     seed=100 + i) for i, (n, m) in
+          enumerate(zip(lens, new_tokens))]
+    eng.run_to_completion()
+    eng.assert_local_page_tables()
+    for a, b in zip(sr, rr):
+        assert a.done and b.done
+        assert a.out_tokens == b.out_tokens, (a.out_tokens, b.out_tokens)
+    assert eng.stats.pages_in_use == 0
+    assert all(len(s.free_pages) == eng.n_pages - 1
+               for s in eng._sched.shards)
+    # pages are physically partitioned over the data axis
+    spec = eng._pools["k"].sharding.spec
+    assert spec[1] == "data", spec
+    return eng
+"""
+
+
+def _run(script: str):
+    env = {**os.environ, "PYTHONPATH": "src"}
+    r = subprocess.run([sys.executable, "-c", _PRELUDE + script], env=env,
+                       capture_output=True, text=True, cwd=REPO)
+    assert r.returncode == 0, (r.stdout[-2000:], r.stderr[-4000:])
+    return r.stdout
+
+
+def test_sharded_parity_dense_8dev():
+    """dense × {f32, int8} parity, seeded sampling, a windowed config, and
+    mid-stream retirements (mixed budgets + an explicit mid-prefill cancel)
+    on an 8-device mesh."""
+    out = _run(r"""
+cfg = get_config("smollm-360m").smoke()
+model = build_model(cfg, ExecOptions(attn_impl="reference", ce_chunk=32))
+params = model.init(jax.random.key(1))
+
+# greedy f32, mixed budgets: short-budget slots retire mid-stream while
+# long ones keep decoding
+parity(model, params, [9, 17, 6, 23, 13, 31],
+       new_tokens=[2, 8, 4, 1, 6, 3])
+print("DENSE_F32_OK")
+parity(model, params, [9, 17, 6], kw=dict(wdtype="int8", kv_dtype="int8"))
+print("DENSE_INT8_OK")
+parity(model, params, [9, 17, 6], sample=(0.8, 20, 0.9))
+print("DENSE_SAMPLED_OK")
+
+# windowed config: prompts longer than the window, O(window) occupancy
+cfgw = dataclasses.replace(cfg, window=16)
+mw = build_model(cfgw, ExecOptions(attn_impl="reference", ce_chunk=32))
+pw = mw.init(jax.random.key(2))
+eng = parity(mw, pw, [40, 30], new_tokens=[8, 8])
+assert eng.stats.peak_pages_in_use <= 8 * eng._sched._window_pages()
+print("WINDOWED_OK")
+
+# explicit mid-prefill cancel: the drained slot's pages return to its
+# shard's free list and the survivor stays token-exact
+eng = ShardedServeEngine(model, mesh=mesh, n_slots=8, max_len=64,
+                         params=params, page_size=8)
+r_long = eng.submit(prompt(0, 40), max_new_tokens=4)
+r_short = eng.submit(prompt(1, 9), max_new_tokens=4)
+eng.step()                     # admits; first chunk of the long prompt
+eng.cancel(r_long)             # mid-prefill retirement
+eng.run_to_completion()
+eng.assert_local_page_tables()
+assert eng.stats.pages_in_use == 0
+assert all(len(s.free_pages) == eng.n_pages - 1 for s in eng._sched.shards)
+single = ServeEngine(model, n_slots=2, max_len=64, params=params, page_size=8)
+s_short = single.submit(prompt(1, 9), max_new_tokens=4)
+single.run_to_completion()
+assert r_short.out_tokens == s_short.out_tokens
+print("CANCEL_OK")
+""")
+    for tag in ("DENSE_F32_OK", "DENSE_INT8_OK", "DENSE_SAMPLED_OK",
+                "WINDOWED_OK", "CANCEL_OK"):
+        assert tag in out, out[-2000:]
+
+
+def test_sharded_parity_moe_8dev():
+    """moe × {f32, int8} parity on an 8-device mesh (per-expert int8 weights
+    + int8 KV pool ride the shard_map'd decode step unchanged)."""
+    out = _run(r"""
+cfg = get_config("qwen2-moe-a2.7b").smoke()
+model = build_model(cfg, ExecOptions(attn_impl="reference", ce_chunk=32))
+params = model.init(jax.random.key(3))
+parity(model, params, [9, 17], new_tokens=[3, 3])
+print("MOE_F32_OK")
+parity(model, params, [17], kw=dict(wdtype="int8", kv_dtype="int8"),
+       new_tokens=[3])
+print("MOE_INT8_OK")
+""")
+    assert "MOE_F32_OK" in out and "MOE_INT8_OK" in out, out[-2000:]
+
+
+def test_sharded_single_shard_degenerates_to_single_host():
+    """A 1-shard sharded engine on the host's own device must reproduce the
+    single-host engine exactly (fast in-process sanity: no XLA_FLAGS fork)."""
+    cfg = get_config("smollm-360m").smoke()
+    model = build_model(cfg, ExecOptions(attn_impl="reference", ce_chunk=32))
+    params = model.init(jax.random.key(1))
+
+    def prompt(seed, n):
+        return np.asarray(jax.random.randint(
+            jax.random.key(seed), (n,), 0, 512), np.int32)
+
+    single = ServeEngine(model, n_slots=2, max_len=64, params=params,
+                         page_size=8)
+    sr = [single.submit(prompt(i, n), max_new_tokens=4)
+          for i, n in enumerate((9, 17, 6))]
+    single.run_to_completion()
+    eng = ShardedServeEngine(model, mesh=make_serve_mesh(1), n_slots=2,
+                             max_len=64, params=params, page_size=8)
+    rr = [eng.submit(prompt(i, n), max_new_tokens=4)
+          for i, n in enumerate((9, 17, 6))]
+    eng.run_to_completion()
+    eng.assert_local_page_tables()
+    for a, b in zip(sr, rr):
+        assert a.out_tokens == b.out_tokens
+    assert eng.stats.pages_in_use == 0
+    assert eng.shard_tokens == [12]
+
+
+def test_sharded_validation():
+    cfg = get_config("smollm-360m").smoke()
+    model = build_model(cfg, ExecOptions(attn_impl="reference", ce_chunk=32))
+    params = model.init(jax.random.key(0))
+    mesh = make_serve_mesh(1)
+    with pytest.raises(ValueError):          # pages must tile max_len
+        ShardedServeEngine(model, mesh=mesh, n_slots=2, max_len=60,
+                           params=params, page_size=8)
+    with pytest.raises(ValueError):          # recurrent families don't shard
+        cfg2 = get_config("mamba2-780m").smoke()
+        m2 = build_model(cfg2, ExecOptions(attn_impl="reference", ce_chunk=32))
+        ShardedServeEngine(m2, mesh=mesh, params=m2.init(jax.random.key(0)))
+    with pytest.raises(ValueError):          # unknown mesh axis
+        ShardedServeEngine(model, mesh=mesh, axis="model", params=params)
