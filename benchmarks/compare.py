@@ -74,6 +74,15 @@ GATES = {
         "sharded_occupancy_imbalance": ("lower", 0.10, "det"),
         "sharded_tokens_per_s": ("higher", 0.30, "wall"),
         "sharded_vs_single_host_ratio": ("higher", 0.30, "wall"),
+        # chaos serving (PR 6): the FaultPlan is seeded and tick-indexed and
+        # token streams are schedule-independent, so the fault leg must emit
+        # EXACTLY the fault-free tokens — zero divergence, zero slack — and
+        # the preemption / recovery-latency numbers are pinned replay
+        # arithmetic: any drift is a scheduler-semantics change, not noise
+        "chaos_token_divergence": ("lower", 0.0, "det"),
+        "chaos_preemptions": ("lower", 0.0, "det"),
+        "chaos_mean_recovery_ticks": ("lower", 0.10, "det"),
+        "chaos_tokens_per_s": ("higher", 0.30, "wall"),
     },
     "soc": {
         "sweep_wall_s": ("lower", 0.20, "wall"),
@@ -95,7 +104,14 @@ ABS_SLACK = {"int8_token_divergence": 0.05,
              # sharded parity baseline is exactly 0 — ZERO slack: a single
              # diverging request stream fails the gate
              "sharded_token_divergence": 0.0,
-             "sharded_occupancy_imbalance": 0.10}
+             "sharded_occupancy_imbalance": 0.10,
+             # chaos parity baseline is exactly 0 — ZERO slack: a surviving
+             # engine that drops or reorders even one token fails
+             "chaos_token_divergence": 0.0,
+             # preemption count is an exact integer under replay; half a
+             # preemption of slack only lets the multiplicative form
+             # evaluate — any real increase still fails
+             "chaos_preemptions": 0.5}
 
 
 def load(d: pathlib.Path, section: str):

@@ -441,6 +441,22 @@ def bench_serve():
           f"occupancy_imbalance={metrics['sharded_occupancy_imbalance']:.3f},"
           f"token_divergence={metrics['sharded_token_divergence']:.3f}")
 
+    # ---- chaos serving: fault injection + recovery (PR 6) -----------------
+    # Same 4-device mesh, mixed dense×f32 + moe×int8 traffic, a seeded
+    # FaultPlan (shard deaths/rejoins + page squeezes) vs a fault-free twin
+    # on identical submissions. The headline is the chaos-parity gate:
+    # token streams are schedule-independent, so the surviving engine must
+    # emit EXACTLY the fault-free tokens (divergence 0, det-gated at zero
+    # slack). Preemption/recovery counts are deterministic tick math on the
+    # fixed plan — any drift is a scheduler change, never noise.
+    metrics.update(_bench_chaos_serve())
+    print(f"serve,chaos,token_divergence="
+          f"{metrics['chaos_token_divergence']:.3f},"
+          f"preemptions={metrics['chaos_preemptions']:.0f},"
+          f"recoveries={metrics['chaos_recoveries']:.0f},"
+          f"mean_recovery_ticks={metrics['chaos_mean_recovery_ticks']:.1f},"
+          f"faults={metrics['chaos_faults_injected']:.0f}")
+
     # ---- per-slot sampling overhead ---------------------------------------
     # sampled decode vs greedy decode, same engine config: the sampler rides
     # the same single decode jit, so the delta is the vmapped sort/cumsum
@@ -525,6 +541,102 @@ def _bench_sharded_serve():
     line = [l for l in r.stdout.splitlines()
             if l.startswith("SHARDED_JSON ")][-1]
     return json.loads(line[len("SHARDED_JSON "):])
+
+
+_CHAOS_BENCH = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import json, time
+import jax, numpy as np
+from repro.configs import get_config
+from repro.models import ExecOptions, build_model
+from repro.launch.mesh import make_serve_mesh
+from repro.serve.faults import chaos_plan
+from repro.serve.sharded import ShardedServeEngine
+
+mesh = make_serve_mesh(4)
+
+# Tight pool (12 usable pages/shard) + 2 deaths with long dwell: recovery
+# re-prefills displaced requests onto surviving shards, whose requeued (old)
+# rids then out-rank decoding slots and trigger free-list preemption. Tuned
+# so the plan exercises deaths, rejoins, squeezes AND >=3 preemptions.
+PLAN = chaos_plan(2, n_shards=4, n_ticks=56, deaths=2, death_dwell=16,
+                  squeezes=8, squeeze_pages=10, squeeze_dwell=14)
+
+def prompts(cfg, n_req):
+    out = []
+    for i in range(n_req):
+        n = 5 + (i * 7) % 23
+        out.append(np.asarray(jax.random.randint(
+            jax.random.key(i), (n,), 0, cfg.vocab_size), np.int32))
+    return out
+
+def leg(model, params, cfg, n_req, max_new, eng_kw, plan):
+    eng = ShardedServeEngine(model, mesh=mesh, n_slots=8, max_len=64,
+                             params=params, page_size=8, n_pages=13,
+                             fault_plan=plan, **eng_kw)
+    reqs = [eng.submit(p, max_new_tokens=max_new, seed=100 + i)
+            for i, p in enumerate(prompts(cfg, n_req))]
+    t0 = time.perf_counter()
+    eng.run_to_completion()
+    dt = time.perf_counter() - t0
+    eng.assert_pool_accounting()
+    eng.assert_local_page_tables()
+    assert all(r.done and not r.timed_out for r in reqs)
+    return eng.stats, [list(r.out_tokens) for r in reqs], dt
+
+tot = {"preempt": 0, "recov": 0, "rec_ticks": 0, "faults": 0, "div": 0,
+       "n": 0, "toks": 0, "dt": 0.0}
+for arch, eng_kw, n_req, max_new in (
+        ("smollm-360m", {}, 16, 16),
+        ("qwen2-moe-a2.7b", {"wdtype": "int8", "kv_dtype": "int8"}, 8, 8)):
+    cfg = get_config(arch).smoke()
+    model = build_model(cfg, ExecOptions(attn_impl="reference", ce_chunk=32))
+    params = model.init(jax.random.key(0))
+    _, base_toks, _ = leg(model, params, cfg, n_req, max_new, eng_kw, None)
+    st, chaos_toks, dt = leg(model, params, cfg, n_req, max_new, eng_kw, PLAN)
+    tot["div"] += sum(a != b for a, b in zip(base_toks, chaos_toks))
+    tot["n"] += n_req
+    tot["preempt"] += st.preemptions
+    tot["recov"] += st.recoveries
+    tot["rec_ticks"] += st.recovery_ticks_sum
+    tot["faults"] += st.faults_injected
+    tot["toks"] += st.tokens_out
+    tot["dt"] += dt
+
+counts = PLAN.counts()
+assert counts["shard_death"] >= 1 and counts["shard_rejoin"] >= 1, counts
+assert tot["recov"] >= 1, tot
+assert tot["preempt"] >= 3, tot
+print("CHAOS_JSON " + json.dumps({
+    "chaos_token_divergence": tot["div"] / tot["n"],
+    "chaos_preemptions": tot["preempt"],
+    "chaos_recoveries": tot["recov"],
+    "chaos_mean_recovery_ticks": tot["rec_ticks"] / max(1, tot["recov"]),
+    "chaos_faults_injected": tot["faults"],
+    "chaos_tokens_per_s": tot["toks"] / tot["dt"],
+}))
+"""
+
+
+def _bench_chaos_serve():
+    """Fork the chaos-vs-fault-free pair onto a 4-device CPU mesh. The
+    FaultPlan is seeded and tick-indexed, the traffic is fixed, and token
+    streams are schedule-independent — so every metric except tokens/s is
+    exact replay arithmetic: divergence must be 0 and the preemption /
+    recovery counts are pinned integers."""
+    import subprocess
+    import sys
+    src = pathlib.Path(__file__).resolve().parent.parent / "src"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = f"{src}:{env.get('PYTHONPATH', '')}".rstrip(":")
+    r = subprocess.run([sys.executable, "-c", _CHAOS_BENCH], env=env,
+                       capture_output=True, text=True)
+    if r.returncode != 0:
+        raise RuntimeError(f"chaos serve bench failed:\n{r.stderr[-3000:]}")
+    line = [l for l in r.stdout.splitlines()
+            if l.startswith("CHAOS_JSON ")][-1]
+    return json.loads(line[len("CHAOS_JSON "):])
 
 
 # -------------------------------------------------------------------- kernels

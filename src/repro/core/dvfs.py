@@ -70,6 +70,18 @@ class DVFSState:
         return cls(*children)
 
 
+def uniform_power_model(n_chiplets: int, peak_dyn_mw: float = 400.0,
+                        static_mw: float = 40.0
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-chiplet power-model arrays for a fleet of identical NPU chiplets.
+
+    serve/health feeds per-shard serving occupancy through the controller
+    with this model (one NPU chiplet per shard), so simulated chiplets
+    heat — and boost — with real serving load."""
+    return (jnp.full((n_chiplets,), peak_dyn_mw, jnp.float32),
+            jnp.full((n_chiplets,), static_mw, jnp.float32))
+
+
 def init_state(n_chiplets: int, cfg: DVFSConfig) -> DVFSState:
     # pure-python argmin: the P-state table is static config, and staging it
     # through jnp would make init_state unusable inside jit/vmap

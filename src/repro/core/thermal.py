@@ -76,6 +76,18 @@ def _dTdt(temp: jnp.ndarray, power_w: jnp.ndarray, cfg: ThermalConfig) -> jnp.nd
     return (power_w - (temp - cfg.t_ambient_c) / r + lateral) / c
 
 
+def predict(state: ThermalState, power_mw: jnp.ndarray, cfg: ThermalConfig,
+            tick_ms: float) -> jnp.ndarray:
+    """Per-chiplet SENSOR reading: next-tick temperature plus the linear
+    extrapolation over the predictive horizon — the value the paper's
+    migration policy (and serve/health's shard state machine) act on,
+    exposed separately from `step` so a serving-side health monitor can
+    read the sensors without advancing the RC state."""
+    deriv = _dTdt(state.temp_c, power_mw / 1e3, cfg)
+    temp = state.temp_c + deriv * (tick_ms / 1e3)
+    return temp + deriv * (cfg.predict_horizon_ms / 1e3)
+
+
 def step(
     state: ThermalState,
     power_mw: jnp.ndarray,

@@ -81,6 +81,19 @@ def main():
     ap.add_argument("--shards", type=int, default=0,
                     help="shard slots + KV pages over N local devices "
                          "(sharded multi-chiplet engine; 0 = single-host)")
+    ap.add_argument("--fault-seed", type=int, default=None,
+                    help="inject a seeded chaos FaultPlan (serve/faults."
+                         "chaos_plan): shard death/rejoin + page squeezes; "
+                         "same seed replays the same schedule bit-for-bit")
+    ap.add_argument("--fault-rate", type=float, default=1.0,
+                    help="chaos intensity multiplier: scales the plan's "
+                         "death and page-squeeze counts")
+    ap.add_argument("--ttl-ticks", type=int, default=None,
+                    help="retire requests older than this many engine ticks "
+                         "(graceful timeout instead of unbounded waiting)")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="admission-queue cap; submits beyond it raise "
+                         "EngineOverloaded (graceful backpressure)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature (0 = greedy argmax)")
     ap.add_argument("--top-k", type=int, default=0,
@@ -104,6 +117,25 @@ def main():
             params = quantize_params_int8(params)
             wdtype = None
         kv_dtype = None if kv_dtype in ("int8", "bf16") else kv_dtype
+    fault_plan = None
+    if args.fault_seed is not None:
+        from repro.serve.faults import chaos_plan
+        n_shards = args.shards or 1
+        # single-host engines honor only the page events ("shard 0" of a
+        # one-shard fleet), so chaos there is squeezes only
+        # spread events over the run's expected tick span (decode ticks ≈
+        # requests × new_tokens / slots, plus prefill) so they actually land
+        n_ticks = max(16, args.requests * args.new_tokens
+                      // max(1, args.slots) + 8)
+        fault_plan = chaos_plan(
+            args.fault_seed, n_shards=n_shards, n_ticks=n_ticks,
+            deaths=max(1, round(args.fault_rate)) if n_shards > 1 else 0,
+            death_dwell=max(2, n_ticks // 4),
+            squeezes=max(1, round(3 * args.fault_rate)))
+        print(f"[serve] fault plan seed={args.fault_seed}: "
+              f"{fault_plan.counts()}")
+    ft_kw = {"fault_plan": fault_plan, "ttl_ticks": args.ttl_ticks,
+             "max_queue": args.max_queue}
     if args.shards:
         # the sharded engine is paged + chunked by construction — reject the
         # flags that name a different engine instead of reinterpreting them
@@ -125,7 +157,8 @@ def main():
             model, mesh=make_serve_mesh(args.shards), n_slots=n_slots,
             max_len=args.max_len, params=params, wdtype=wdtype,
             kv_dtype=kv_dtype, page_size=args.page_size,
-            n_pages=args.pages or None, chunk_pages=args.chunk_pages)
+            n_pages=args.pages or None, chunk_pages=args.chunk_pages,
+            **ft_kw)
     else:
         paged_kw = {"paged": False} if args.page_size == 0 else {
             "page_size": args.page_size,
@@ -135,7 +168,7 @@ def main():
         }
         eng = ServeEngine(model, n_slots=args.slots, max_len=args.max_len,
                           params=params, wdtype=wdtype, kv_dtype=kv_dtype,
-                          **paged_kw)
+                          **paged_kw, **ft_kw)
     sample = None if args.temperature == 0 else (
         args.temperature, args.top_k, args.top_p)
     rng = np.random.default_rng(args.seed)
@@ -158,6 +191,15 @@ def main():
         print(f"[serve] shards={args.shards}  "
               f"tokens/shard={ss['shard_tokens']}  "
               f"occupancy_imbalance={ss['occupancy_imbalance']:.3f}")
+    if args.fault_seed is not None or args.ttl_ticks is not None:
+        s = stats
+        print(f"[serve] faults={s.faults_injected} recoveries={s.recoveries} "
+              f"preemptions={s.preemptions} retries={s.retries} "
+              f"timeouts={s.timeouts} "
+              f"mean_recovery_ticks={s.summary()['mean_recovery_ticks']:.1f}")
+        hs = getattr(eng, "health_summary", lambda: None)()
+        if hs is not None:
+            print(f"[serve] shard health: {hs['state']}")
 
 
 if __name__ == "__main__":

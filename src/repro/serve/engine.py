@@ -134,9 +134,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.quantized import quantize_kv_rows
+from repro.serve.faults import FaultPlan
 from repro.serve.sampling import clamp_sample_params, sample_tokens
 
 _ATTN_FAMILIES = ("dense", "moe", "vlm", "encdec")
+
+
+class EngineOverloaded(RuntimeError):
+    """Graceful backpressure: submit() refused because the admission queue
+    is at its cap. Callers shed load (retry later / route elsewhere)
+    instead of growing an unbounded queue."""
 
 _KV_DTYPES = {None: jnp.float32, "f32": jnp.float32, "float32": jnp.float32,
               "bf16": jnp.bfloat16, "bfloat16": jnp.bfloat16,
@@ -230,6 +237,26 @@ class Request:
     t_enqueue: float = 0.0
     t_first_token: Optional[float] = None
     t_done: Optional[float] = None
+    # ---- fault tolerance (PR 6) ----------------------------------------
+    preemptions: int = 0            # times this request was preempted
+    timed_out: bool = False         # retired by TTL, not by completion
+    submit_tick: int = 0            # engine tick at submit (TTL clock)
+    ttl_ticks: Optional[int] = None  # per-request TTL override
+
+    def live_prompt(self) -> np.ndarray:
+        """The token prefix a resumed request re-prefills: prompt plus every
+        already-emitted token. Schedule-independent KV rounding (PR 4) makes
+        the re-prefilled cache byte-identical to the one the decode steps
+        wrote, and the fold_in(seed, token_index) sampling streams continue
+        at counter=len(out_tokens) — so a preempted/recovered stream is
+        token-exact with its uninterrupted twin."""
+        if not self.out_tokens:
+            return self.prompt
+        return np.concatenate(
+            [self.prompt, np.asarray(self.out_tokens, np.int32)])
+
+    def remaining_new(self) -> int:
+        return self.max_new_tokens - len(self.out_tokens)
 
 
 @dataclasses.dataclass
@@ -251,15 +278,29 @@ class EngineStats:
     decode_stall_ticks: int = 0
     prefill_tokens: int = 0     # real prompt tokens prefilled
     prefill_pad_tokens: int = 0  # padded prefill rows (bucket or chunk waste)
+    # ---- fault tolerance & backpressure (PR 6) -------------------------
+    preemptions: int = 0        # decoding slots evicted for a starving head
+    retries: int = 0            # re-admissions (preempted or recovered work)
+    timeouts: int = 0           # requests retired by TTL
+    rejected: int = 0           # submits refused at the queue cap
+    faults_injected: int = 0    # FaultPlan events applied
+    recoveries: int = 0         # slots migrated off a draining/dead shard
+    recovery_ticks_sum: int = 0  # requeue -> back-live latency, summed
 
     def summary(self) -> Dict[str, float]:
         d = dataclasses.asdict(self)
-        # always emitted: an engine that only prefilled has no decode steps,
-        # and bench/report consumers index this key unconditionally
+        # Every derived metric is guarded: zero-tick / zero-token runs (an
+        # engine that only rejected or timed out, an early-return bench leg)
+        # must report well-defined zeros, never a ZeroDivisionError or NaN.
+        # Consumers index these keys unconditionally.
         d["mean_occupancy"] = (self.occupancy_sum / self.decode_steps
                                if self.decode_steps else 0.0)
         d["pad_waste_ratio"] = (self.prefill_pad_tokens / self.prefill_tokens
                                 if self.prefill_tokens else 0.0)
+        d["mean_recovery_ticks"] = (self.recovery_ticks_sum / self.recoveries
+                                    if self.recoveries else 0.0)
+        assert all(math.isfinite(v) for v in d.values()
+                   if isinstance(v, (int, float))), d
         return d
 
 
@@ -367,7 +408,12 @@ class ServeEngine:
                  wdtype: Optional[str] = None,
                  kv_dtype: Optional[str] = None,
                  chunked_prefill: Optional[bool] = None,
-                 chunk_pages: int = 2):
+                 chunk_pages: int = 2,
+                 max_queue: Optional[int] = None,
+                 ttl_ticks: Optional[int] = None,
+                 preempt_after: int = 2,
+                 max_preemptions: int = 3,
+                 fault_plan: Optional[FaultPlan] = None):
         self.model = model
         self.cfg = model.cfg
         self.n_slots = n_slots
@@ -397,6 +443,17 @@ class ServeEngine:
         self.params = params
         self.stats = EngineStats()
         self._queue: List[Request] = []
+        # ---- fault tolerance & backpressure (PR 6) -------------------------
+        self.max_queue = max_queue
+        self.ttl_ticks = ttl_ticks
+        self.preempt_after = max(1, int(preempt_after))
+        self.max_preemptions = max(0, int(max_preemptions))
+        self.fault_plan = fault_plan
+        self._tick = 0               # engine tick counter (fault/TTL clock)
+        self._starved = 0            # consecutive page-starved ticks
+        self._page_blocked = False   # head blocked on pages w/ a free slot
+        self._stolen_pages: List[int] = []   # page_squeeze stash (shard 0)
+        self._any_ttl = ttl_ticks is not None
         self._slots: List[Optional[Request]] = [None] * n_slots
         self._fresh: List[bool] = [False] * n_slots  # replaying last prompt tok
         self._active = np.zeros((n_slots,), bool)
@@ -601,18 +658,37 @@ class ServeEngine:
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
                extras: Optional[Dict[str, np.ndarray]] = None,
                sample_params: Optional[tuple] = None,
-               seed: int = 0) -> Request:
+               seed: int = 0, ttl_ticks: Optional[int] = None) -> Request:
         """Queue a request. sample_params=(temperature, top_k, top_p) turns
         on per-slot sampling for this request (None = greedy argmax, the
-        temperature=0 fast path); `seed` keys its PRNG stream."""
+        temperature=0 fast path); `seed` keys its PRNG stream; `ttl_ticks`
+        overrides the engine TTL for this request.
+
+        Malformed requests raise ValueError (nothing is enqueued, no state
+        changes); a full admission queue raises EngineOverloaded — graceful
+        backpressure instead of unbounded queue growth."""
         prompt = np.asarray(prompt, np.int32)
-        assert 1 <= prompt.shape[0] <= self.max_len, prompt.shape
-        assert max_new_tokens >= 1, max_new_tokens
+        if prompt.ndim != 1:
+            raise ValueError(
+                f"prompt must be a 1-D token array, got shape {prompt.shape}")
+        if prompt.shape[0] < 1:
+            raise ValueError("prompt must hold at least one token")
+        if prompt.shape[0] > self.max_len:
+            raise ValueError(
+                f"prompt length {prompt.shape[0]} exceeds engine max_len "
+                f"{self.max_len}")
+        if max_new_tokens < 1:
+            raise ValueError(
+                f"max_new_tokens must be >= 1, got {max_new_tokens}")
         if self.paged:
             need = self._pages_for(prompt.shape[0], max_new_tokens)
             if need > self.n_pages - 1:
                 raise ValueError(
                     f"request needs {need} pages; pool has {self.n_pages - 1}")
+        if self.max_queue is not None and len(self._queue) >= self.max_queue:
+            self.stats.rejected += 1
+            raise EngineOverloaded(
+                f"admission queue at cap ({self.max_queue}); retry later")
         temperature, top_k, top_p = 0.0, 0, 1.0
         if sample_params is not None:
             # degenerate params clamp to well-defined behavior (PR 5):
@@ -624,7 +700,10 @@ class ServeEngine:
                       max_new_tokens=max_new_tokens, extras=extras,
                       temperature=float(temperature), top_k=int(top_k),
                       top_p=float(top_p), seed=int(seed),
-                      t_enqueue=time.time())
+                      t_enqueue=time.time(),
+                      submit_tick=self._tick, ttl_ticks=ttl_ticks)
+        if ttl_ticks is not None:
+            self._any_ttl = True
         self._queue.append(req)
         return req
 
@@ -671,24 +750,35 @@ class ServeEngine:
         stalls (FIFO — no small-request overtaking) until retirements return
         pages. Chunked engines only reserve + (encdec) compute cross K/V
         here — the prompt itself prefills one chunk per tick in
-        `_prefill_tick`, so admission never stalls the decode batch."""
+        `_prefill_tick`, so admission never stalls the decode batch.
+
+        Resumed requests (preempted with emitted tokens) admit on their
+        `live_prompt()` — prompt + out_tokens — and `remaining_new()` budget;
+        the page reservation is invariant under resume
+        (min(max_len, (plen+k) + (max_new-k)) == min(max_len, plen+max_new)),
+        so a preempted request never needs more pages than it first did."""
+        self._page_blocked = False
         for slot in [i for i, r in enumerate(self._slots) if r is None]:
             if not self._queue:
                 return
             r = self._queue[0]
-            plen = r.prompt.shape[0]
+            lp = r.live_prompt()
+            plen = lp.shape[0]
+            rem = r.remaining_new()
             page_row = None
             if self.paged:
-                need = self._pages_for(plen, r.max_new_tokens)
+                need = self._pages_for(plen, rem)
                 if len(self._free_pages) < need:
+                    # head starved on pages while a slot sits free: the
+                    # signal step() counts toward preemption
+                    self._page_blocked = True
                     return
                 pages = [self._free_pages.pop() for _ in range(need)]
                 lo = self._live_lo(plen) \
                     if (self._window and not self.chunked) else 0
                 self._slot_pages[slot] = {lo + i: p
                                           for i, p in enumerate(pages)}
-                self._slot_cap[slot] = -(-min(self.max_len,
-                                              plen + r.max_new_tokens)
+                self._slot_cap[slot] = -(-min(self.max_len, plen + rem)
                                          // self.page_size)
                 self.stats.pages_in_use += need
                 self.stats.peak_pages_in_use = max(
@@ -718,7 +808,7 @@ class ServeEngine:
             blen = bucket_length(plen, self.max_len) if self.bucket_prompts \
                 else plen
             toks = np.zeros((1, blen), np.int32)
-            toks[0, :plen] = r.prompt
+            toks[0, :plen] = lp
             batch = {"tokens": jnp.asarray(toks)}
             if self.kv_dtype != jnp.float32:
                 # lossy KV storage: prefill attends the rounded values the
@@ -738,7 +828,7 @@ class ServeEngine:
                 self._cache = self._paste_jit(
                     self._cache, pf_cache, jnp.int32(slot),
                     jnp.int32(plen - 1), *paste_args)
-                self._next_tok[slot, 0] = int(r.prompt[-1])
+                self._next_tok[slot, 0] = int(lp[-1])
             else:
                 lv = jnp.asarray(logits[:, -1, :self.cfg.vocab_size],
                                  jnp.float32)
@@ -820,7 +910,11 @@ class ServeEngine:
         slot = self._prefill_fifo[0]
         r = self._slots[slot]
         s = self._chunk_next[slot]
-        plen = r.prompt.shape[0]
+        # resumed requests re-prefill prompt + already-emitted tokens; stable
+        # across chunks because a mid-prefill slot is inactive (no decode
+        # appends to out_tokens until finalize)
+        lp = r.live_prompt()
+        plen = lp.shape[0]
         C = self.chunk_tokens
         if self._window and s:
             # free/remap pages that no chunk row >= s can still read — a
@@ -830,7 +924,7 @@ class ServeEngine:
             self._recycle_slot_pages(slot, s, in_cache=False)
         n = min(C, plen - s)
         toks = np.zeros((1, C), np.int32)
-        toks[0, :n] = r.prompt[s:s + n]
+        toks[0, :n] = lp[s:s + n]
         page_row = self._page_row(slot)
         batch = {"tokens": jnp.asarray(toks),
                  "start": jnp.full((1,), s, jnp.int32),
@@ -856,7 +950,7 @@ class ServeEngine:
             self._cache = self._finalize_jit(
                 self._cache, jnp.int32(slot), jnp.int32(plen - 1),
                 jnp.asarray(page_row))
-            self._next_tok[slot, 0] = int(r.prompt[-1])
+            self._next_tok[slot, 0] = int(lp[-1])
             self._fresh[slot] = True
             self._active[slot] = True
         else:
@@ -865,11 +959,24 @@ class ServeEngine:
 
     # ----------------------------------------------------------------- decode
     def step(self) -> bool:
-        """One engine tick: admit new work, run at most one prefill chunk,
-        then one batched decode step over the live slots."""
+        """One engine tick: apply scheduled faults, expire TTLs, admit new
+        work (preempting a young decoding slot if the head has starved on
+        pages), run at most one prefill chunk, then one batched decode step
+        over the live slots."""
+        self._tick += 1
+        if self.fault_plan is not None:
+            self._apply_faults()
+        if self._any_ttl:
+            self._expire_ttl()
         had_decode = bool(np.any(self._active))
         self._tick_prefill_tokens = 0
         self._admit()
+        if self._page_blocked:
+            self._starved += 1
+            if self._starved >= self.preempt_after and self._preempt_once():
+                self._admit()
+        else:
+            self._starved = 0
         chunk_ran = self._prefill_tick() if self.chunked else False
         if had_decode and self._tick_prefill_tokens > self.chunk_tokens:
             # decode batch waited on more than one chunk's worth of prefill
@@ -906,7 +1013,8 @@ class ServeEngine:
             self._next_tok[slot, 0] = nxt[slot]
             self.stats.tokens_out += 1
             if self._fresh[slot]:
-                r.t_first_token = time.time()
+                if r.t_first_token is None:   # resumed slots keep the original
+                    r.t_first_token = time.time()
                 self._fresh[slot] = False
             # retire when out of budget OR out of cache: `pos` is the next
             # write index, so the slot can take another decode step iff
@@ -954,6 +1062,93 @@ class ServeEngine:
             for j in unmaps:
                 self._cache = self._unmap_entry_jit(
                     self._cache, jnp.int32(slot), jnp.int32(j))
+
+    # ------------------------------------------- fault tolerance (PR 6)
+    def _apply_faults(self):
+        """Apply this tick's FaultPlan events. The single-host engine is
+        "shard 0" of a one-shard fleet: it honors the page-pool events and
+        ignores shard-level ones (death/rejoin/sensor need a fleet — see
+        serve/sharded)."""
+        for e in self.fault_plan.events_at(self._tick):
+            if not self.paged or e.shard != 0:
+                continue
+            if e.kind == "page_squeeze":
+                take = min(e.pages, len(self._free_pages))
+                for _ in range(take):
+                    self._stolen_pages.append(self._free_pages.pop())
+                self.stats.faults_injected += 1
+            elif e.kind == "page_restore":
+                self._free_pages.extend(self._stolen_pages)
+                self._stolen_pages.clear()
+                self.stats.faults_injected += 1
+
+    def _expire_ttl(self):
+        """Retire queued and live requests past their TTL (ticks since
+        submit). Timed-out requests release their pages/slot exactly like a
+        completed one; `timed_out` marks them for the caller."""
+        def expired(r: Request) -> bool:
+            ttl = r.ttl_ticks if r.ttl_ticks is not None else self.ttl_ticks
+            return ttl is not None and self._tick - r.submit_tick > ttl
+
+        for r in [q for q in self._queue if expired(q)]:
+            self._queue.remove(r)
+            r.done = True
+            r.timed_out = True
+            r.t_done = time.time()
+            self.stats.timeouts += 1
+        for slot, r in enumerate(self._slots):
+            if r is not None and expired(r):
+                r.done = True
+                r.timed_out = True
+                r.t_done = time.time()
+                self.stats.timeouts += 1
+                self._release(slot)
+
+    def _requeue(self, r: Request):
+        """Re-enqueue a preempted request in rid order — it rejoins the FIFO
+        exactly where its age puts it, ahead of anything younger."""
+        i = 0
+        while i < len(self._queue) and self._queue[i].rid < r.rid:
+            i += 1
+        self._queue.insert(i, r)
+
+    def _preempt_once(self) -> bool:
+        """Evict ONE decoding slot so the starving queue head can admit.
+
+        Victim: the YOUNGEST (max rid) active decoding slot that is strictly
+        younger than the head, still under its preemption budget, and whose
+        pages (plus the free list) actually cover the head's need. Strict
+        rid ordering makes progress monotone — a preempted request that
+        becomes head can never preempt something older, so there is no
+        preemption livelock. The victim's emitted tokens ride along in
+        out_tokens and re-enter as prefill (see live_prompt), so its stream
+        resumes token-exact."""
+        if not self._queue:
+            return False
+        head = self._queue[0]
+        need = self._pages_for(head.live_prompt().shape[0],
+                               head.remaining_new())
+        best = None
+        for slot, r in enumerate(self._slots):
+            if r is None or not self._active[slot] \
+                    or slot in self._prefill_fifo:
+                continue
+            if r.rid <= head.rid or r.preemptions >= self.max_preemptions:
+                continue
+            if len(self._slot_pages[slot]) + len(self._free_pages) < need:
+                continue
+            if best is None or r.rid > self._slots[best].rid:
+                best = slot
+        if best is None:
+            return False
+        victim = self._slots[best]
+        victim.preemptions += 1
+        self._release(best)
+        self._requeue(victim)
+        self.stats.preemptions += 1
+        self.stats.retries += 1
+        self._starved = 0
+        return True
 
     def run_to_completion(self, max_ticks: int = 10_000) -> EngineStats:
         ticks = 0

@@ -37,6 +37,8 @@ producing NaN / all-NEG_INF rows:
 
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 
@@ -48,9 +50,18 @@ def clamp_sample_params(temperature, top_k, top_p):
     well-defined behaviors `_sample_one` implements: negative temperature →
     0 (greedy), negative top_k → 0 (off; >= vocab is equivalent to off
     in-kernel), top_p clipped into [0, 1] (0 = argmax of the filtered
-    distribution, 1 = off)."""
-    return (max(0.0, float(temperature)), max(0, int(top_k)),
-            min(1.0, max(0.0, float(top_p))))
+    distribution, 1 = off). NaNs map to the same safe ends (temperature →
+    greedy, top_p → filter off) instead of poisoning the device-side
+    softmax/cumsum — max/min comparisons against NaN would otherwise leak
+    it straight through the clamps."""
+    temperature = float(temperature)
+    top_p = float(top_p)
+    if math.isnan(temperature):
+        temperature = 0.0
+    if math.isnan(top_p):
+        top_p = 1.0
+    return (max(0.0, temperature), max(0, int(top_k)),
+            min(1.0, max(0.0, top_p)))
 
 
 def _sample_one(logits, temperature, top_k, top_p, seed, counter):

@@ -90,6 +90,13 @@ class ShardScheduler:
                        slot_pages=[{} for _ in range(slots_per_shard)],
                        slot_cap=[0] * slots_per_shard)
             for _ in range(n_shards)]
+        # ---- fault tolerance (PR 6) ----------------------------------------
+        # placement mask, driven by serve/health's state machine: only
+        # HEALTHY shards take new admissions (degraded/draining/dead/rejoining
+        # shards are skipped, without touching their live slots)
+        self.placeable: List[bool] = [True] * n_shards
+        # pages stolen by page_squeeze faults, per shard, until restored
+        self.stolen: List[List[int]] = [[] for _ in range(n_shards)]
 
     # ------------------------------------------------------------ reservation
     def _window_pages(self) -> int:
@@ -112,9 +119,12 @@ class ShardScheduler:
 
     # -------------------------------------------------------------- placement
     def _eligible(self, need: int) -> Optional[int]:
-        """Least-loaded shard with a free slot and `need` free pages."""
+        """Least-loaded PLACEABLE shard with a free slot and `need` free
+        pages."""
         best = None
         for i, s in enumerate(self.shards):
+            if not self.placeable[i]:
+                continue
             if len(s.free_pages) < need or None not in s.slots:
                 continue
             busy = sum(r is not None for r in s.slots)
@@ -133,7 +143,12 @@ class ShardScheduler:
         placed = []
         while self.queue:
             r = self.queue[0]
-            need = self.pages_for(r.prompt.shape[0], r.max_new_tokens)
+            # resumed requests (preempted / recovered off a dead shard) admit
+            # on prompt + emitted tokens and the remaining budget; the page
+            # need is invariant under resume (see engine._admit)
+            plen = r.live_prompt().shape[0]
+            rem = r.remaining_new()
+            need = self.pages_for(plen, rem)
             shard = self._eligible(need)
             if shard is None:
                 break
@@ -141,8 +156,7 @@ class ShardScheduler:
             slot = s.slots.index(None)
             pages = [s.free_pages.pop() for _ in range(need)]
             s.slot_pages[slot] = {j: p for j, p in enumerate(pages)}
-            s.slot_cap[slot] = -(-min(self.max_len,
-                                      r.prompt.shape[0] + r.max_new_tokens)
+            s.slot_cap[slot] = -(-min(self.max_len, plen + rem)
                                  // self.page_size)
             s.pages_in_use += need
             s.slots[slot] = r
@@ -164,7 +178,7 @@ class ShardScheduler:
             slot = s.prefill_fifo[0]
             r = s.slots[slot]
             st = s.chunk_next[slot]
-            plen = r.prompt.shape[0]
+            plen = r.live_prompt().shape[0]
             if self.window and st:
                 # recycle pages no chunk row >= st can still read; the cache
                 # table row is still null, so this is host bookkeeping only
@@ -220,6 +234,101 @@ class ShardScheduler:
             s.pages_in_use -= len(freed)
             s.slot_pages[slot] = {}
         s.slot_cap[slot] = 0
+
+    # ------------------------------------------- fault tolerance (PR 6)
+    def steal_pages(self, shard: int, n: int) -> int:
+        """page_squeeze fault: up to `n` pages vanish from the shard's FREE
+        list (never from live reservations — stealing mapped pages would
+        corrupt live KV; squeezing free ones starves admission, which is the
+        backpressure path under test). Returns pages actually taken."""
+        s = self.shards[shard]
+        take = min(n, len(s.free_pages))
+        for _ in range(take):
+            self.stolen[shard].append(s.free_pages.pop())
+        return take
+
+    def restore_pages(self, shard: int) -> int:
+        """page_restore fault: every page stolen from the shard returns."""
+        s = self.shards[shard]
+        n = len(self.stolen[shard])
+        s.free_pages.extend(self.stolen[shard])
+        self.stolen[shard].clear()
+        return n
+
+    def drain_shard(self, shard: int) -> List[Request]:
+        """Evacuate a draining/dead shard: release EVERY live slot (pages
+        back to its free list, chunk queues drained) and hand the displaced
+        requests back, oldest first, for re-admission elsewhere."""
+        s = self.shards[shard]
+        live = [(slot, r) for slot, r in enumerate(s.slots) if r is not None]
+        for slot, _ in live:
+            self.release(shard, slot)
+        return [r for _, r in sorted(live, key=lambda t: t[1].rid)]
+
+    def reset_shard(self, shard: int) -> None:
+        """Rejoining shard: its pool comes back fresh — full free list, no
+        mappings, no stolen stash (whatever a squeeze took died with the
+        shard). Must only run on a drained shard."""
+        s = self.shards[shard]
+        assert all(r is None for r in s.slots), \
+            f"reset of shard {shard} with live slots"
+        s.free_pages = list(range(self.n_pages - 1, 0, -1))
+        s.prefill_fifo = []
+        s.chunk_next = [0] * self.slots_per_shard
+        s.slot_pages = [{} for _ in range(self.slots_per_shard)]
+        s.slot_cap = [0] * self.slots_per_shard
+        s.pages_in_use = 0
+        self.stolen[shard].clear()
+
+    def requeue(self, reqs: List[Request]) -> None:
+        """Re-enqueue displaced requests in rid order — each rejoins the
+        FIFO exactly where its age puts it, ahead of anything younger."""
+        for r in reqs:
+            i = 0
+            while i < len(self.queue) and self.queue[i].rid < r.rid:
+                i += 1
+            self.queue.insert(i, r)
+
+    def page_starved(self, need: int) -> bool:
+        """True when the head fits nowhere but at least one placeable shard
+        exists — preempting a young decoding slot there can unblock it
+        (frees that slot AND its pages)."""
+        if self._eligible(need) is not None:
+            return False
+        return any(self.placeable)
+
+    def preempt_candidate(self, need: int, head_rid: int,
+                          max_preemptions: int) -> Optional[Tuple[int, int]]:
+        """The YOUNGEST (max rid) decoding slot on a placeable shard that is
+        strictly younger than the head, under its preemption budget, and
+        whose release leaves the shard able to take the head (its pages plus
+        the shard's free list cover `need`). Strict rid ordering keeps
+        progress monotone — no preemption livelock."""
+        best = None
+        for i, s in enumerate(self.shards):
+            if not self.placeable[i]:
+                continue
+            for slot, r in enumerate(s.slots):
+                if r is None or slot in s.prefill_fifo:
+                    continue
+                if r.rid <= head_rid or r.preemptions >= max_preemptions:
+                    continue
+                if len(s.slot_pages[slot]) + len(s.free_pages) < need:
+                    continue
+                if best is None or r.rid > best[0]:
+                    best = (r.rid, i, slot)
+        return None if best is None else (best[1], best[2])
+
+    def assert_accounting(self) -> None:
+        """Pool-accounting invariant under faults: per shard,
+        free + mapped + stolen == n_pages - 1 (page 0 is the null page) and
+        `pages_in_use` matches the mappings exactly."""
+        for i, s in enumerate(self.shards):
+            mapped = sum(len(m) for m in s.slot_pages)
+            assert mapped == s.pages_in_use, (i, mapped, s.pages_in_use)
+            total = len(s.free_pages) + mapped + len(self.stolen[i])
+            assert total == self.n_pages - 1, \
+                (i, len(s.free_pages), mapped, len(self.stolen[i]))
 
     def find(self, req: Request) -> Optional[Tuple[int, int]]:
         for i, s in enumerate(self.shards):

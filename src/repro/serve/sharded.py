@@ -58,7 +58,11 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.parallel.shmap import shard_map
-from repro.serve.engine import _ATTN_FAMILIES, _KV_DTYPES, EngineStats, Request
+from repro.serve.engine import (
+    _ATTN_FAMILIES, _KV_DTYPES, EngineOverloaded, EngineStats, Request)
+from repro.serve.faults import FaultPlan
+from repro.serve.health import (
+    EVACUATED, Health, HealthConfig, ShardHealthMonitor)
 from repro.serve.sampling import clamp_sample_params, sample_tokens
 from repro.serve.scheduler import ShardScheduler
 
@@ -82,7 +86,13 @@ class ShardedServeEngine:
                  page_size: int = 32, n_pages: Optional[int] = None,
                  wdtype: Optional[str] = None,
                  kv_dtype: Optional[str] = None,
-                 chunk_pages: int = 2):
+                 chunk_pages: int = 2,
+                 max_queue: Optional[int] = None,
+                 ttl_ticks: Optional[int] = None,
+                 preempt_after: int = 2,
+                 max_preemptions: int = 3,
+                 fault_plan: Optional[FaultPlan] = None,
+                 health_cfg: Optional[HealthConfig] = None):
         self.model = model
         self.cfg = model.cfg
         if self.cfg.family not in ("dense", "moe", "vlm"):
@@ -160,6 +170,22 @@ class ShardedServeEngine:
             chunk_tokens=self.chunk_tokens, window=self._window)
 
         self.stats = EngineStats()
+        # ---- fault tolerance & backpressure (PR 6) -------------------------
+        self.max_queue = max_queue
+        self.ttl_ticks = ttl_ticks
+        self.preempt_after = max(1, int(preempt_after))
+        self.max_preemptions = max(0, int(max_preemptions))
+        self.fault_plan = fault_plan
+        # the health monitor (and its thermal/DVFS sensor integration) only
+        # exists when fault injection or health tracking is requested — the
+        # default engine path stays bit-identical to the pre-fault engine
+        self._monitor = (ShardHealthMonitor(self.n_shards, health_cfg)
+                         if fault_plan is not None or health_cfg is not None
+                         else None)
+        self._tick = 0               # engine tick counter (fault/TTL clock)
+        self._starved = 0            # consecutive page-starved ticks
+        self._any_ttl = ttl_ticks is not None
+        self._recover_started: Dict[int, int] = {}  # rid -> requeue tick
         self.shard_tokens = [0] * self.n_shards
         self.shard_occupancy_sum = [0.0] * self.n_shards
         self._slots: List[Optional[Request]] = [None] * n_slots
@@ -264,14 +290,32 @@ class ShardedServeEngine:
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
                extras: Optional[Dict[str, np.ndarray]] = None,
                sample_params: Optional[tuple] = None,
-               seed: int = 0) -> Request:
+               seed: int = 0, ttl_ticks: Optional[int] = None) -> Request:
+        """Queue a request — the single-host contract: malformed requests
+        raise ValueError (nothing enqueued), a full queue raises
+        EngineOverloaded (graceful backpressure)."""
         prompt = np.asarray(prompt, np.int32)
-        assert 1 <= prompt.shape[0] <= self.max_len, prompt.shape
-        assert max_new_tokens >= 1, max_new_tokens
+        if prompt.ndim != 1:
+            raise ValueError(
+                f"prompt must be a 1-D token array, got shape {prompt.shape}")
+        if prompt.shape[0] < 1:
+            raise ValueError("prompt must hold at least one token")
+        if prompt.shape[0] > self.max_len:
+            raise ValueError(
+                f"prompt length {prompt.shape[0]} exceeds engine max_len "
+                f"{self.max_len}")
+        if max_new_tokens < 1:
+            raise ValueError(
+                f"max_new_tokens must be >= 1, got {max_new_tokens}")
         need = self._sched.pages_for(prompt.shape[0], max_new_tokens)
         if need > self.n_pages - 1:
             raise ValueError(f"request needs {need} pages; each shard's pool "
                              f"has {self.n_pages - 1}")
+        if self.max_queue is not None \
+                and len(self._sched.queue) >= self.max_queue:
+            self.stats.rejected += 1
+            raise EngineOverloaded(
+                f"admission queue at cap ({self.max_queue}); retry later")
         temperature, top_k, top_p = 0.0, 0, 1.0
         if sample_params is not None:
             temperature, top_k, top_p = clamp_sample_params(*sample_params)
@@ -279,7 +323,10 @@ class ShardedServeEngine:
         req = Request(rid=self._next_rid, prompt=prompt,
                       max_new_tokens=max_new_tokens, extras=extras,
                       temperature=temperature, top_k=top_k, top_p=top_p,
-                      seed=int(seed), t_enqueue=time.time())
+                      seed=int(seed), t_enqueue=time.time(),
+                      submit_tick=self._tick, ttl_ticks=ttl_ticks)
+        if ttl_ticks is not None:
+            self._any_ttl = True
         self._sched.queue.append(req)
         return req
 
@@ -340,7 +387,8 @@ class ShardedServeEngine:
                                            np.float32)
             batch["n_patch"] = np.zeros((S,), np.int32)
         for w in work:
-            tokens[w.shard, :w.length] = w.req.prompt[w.start:w.start + w.length]
+            lp = w.req.live_prompt()   # resumed requests re-prefill emitted tokens
+            tokens[w.shard, :w.length] = lp[w.start:w.start + w.length]
             start[w.shard] = w.start
             length[w.shard] = w.length
             page_rows[w.shard] = self._sched.page_row(w.shard, w.slot)
@@ -361,18 +409,22 @@ class ShardedServeEngine:
             self._sched.advance_chunk(w)
             if w.final:
                 g = self._gslot(w.shard, w.slot)
+                lp = w.req.live_prompt()
                 # the slot goes live: stamp its DEVICE-LOCAL table row and
                 # replay position into the host-authoritative state
                 self._page_table[g] = self._sched.page_row(w.shard, w.slot)
-                self._pos[g] = w.req.prompt.shape[0] - 1
-                self._next_tok[g, 0] = int(w.req.prompt[-1])
+                self._pos[g] = lp.shape[0] - 1
+                self._next_tok[g, 0] = int(lp[-1])
                 self._fresh[g] = True
                 self._active[g] = True
+                started = self._recover_started.pop(w.req.rid, None)
+                if started is not None:   # recovered stream back live
+                    self.stats.recovery_ticks_sum += self._tick - started
         return True
 
     # ----------------------------------------------------------------- decode
-    def step(self) -> bool:
-        for shard, slot, r in self._sched.admit():
+    def _place(self, placements) -> None:
+        for shard, slot, r in placements:
             g = self._gslot(shard, slot)
             self._slots[g] = r
             self._active[g] = False
@@ -380,7 +432,38 @@ class ShardedServeEngine:
             self._temp[g], self._topk[g] = r.temperature, r.top_k
             self._topp[g], self._sseed[g] = r.top_p, r.seed
             self.stats.prefills += 1
-            self.stats.prefill_tokens += r.prompt.shape[0]
+            self.stats.prefill_tokens += r.live_prompt().shape[0]
+
+    def step(self) -> bool:
+        """One engine tick: apply scheduled faults, advance shard health
+        (recovering live slots off any shard that enters DRAINING/DEAD),
+        expire TTLs, admit — preempting a young decoding slot if the head
+        has starved on pages — then per-shard chunk prefill and ONE global
+        shard_map'd decode step."""
+        self._tick += 1
+        if self.fault_plan is not None:
+            self._apply_faults()
+        if self._monitor is not None:
+            self._health_tick()
+        if self._any_ttl:
+            self._expire_ttl()
+        self._place(self._sched.admit())
+        if self._sched.queue:
+            head = self._sched.queue[0]
+            need = self._sched.pages_for(head.live_prompt().shape[0],
+                                         head.remaining_new())
+            if self._sched.page_starved(need):
+                self._starved += 1
+                if self._starved >= self.preempt_after:
+                    cand = self._sched.preempt_candidate(
+                        need, head.rid, self.max_preemptions)
+                    if cand is not None:
+                        self._preempt(*cand)
+                        self._place(self._sched.admit())
+            else:
+                self._starved = 0
+        else:
+            self._starved = 0
         self.stats.pages_in_use = self._sched.pages_in_use
         self.stats.peak_pages_in_use = max(self.stats.peak_pages_in_use,
                                            self.stats.pages_in_use)
@@ -417,7 +500,8 @@ class ShardedServeEngine:
             self.stats.tokens_out += 1
             self.shard_tokens[g // self.slots_per_shard] += 1
             if self._fresh[g]:
-                r.t_first_token = time.time()
+                if r.t_first_token is None:   # resumed slots keep the original
+                    r.t_first_token = time.time()
                 self._fresh[g] = False
             if len(r.out_tokens) >= r.max_new_tokens \
                     or int(self._pos[g]) >= self.max_len:
@@ -447,6 +531,116 @@ class ShardedServeEngine:
             for j_dead in unmaps:
                 self._page_table[g, j_dead] = 0
         self.stats.pages_in_use = self._sched.pages_in_use
+
+    # ------------------------------------------- fault tolerance (PR 6)
+    def _apply_faults(self):
+        """Apply this tick's FaultPlan events — at the tick boundary, before
+        health/admission, so a plan replays bit-for-bit."""
+        for e in self.fault_plan.events_at(self._tick):
+            if e.kind == "shard_death":
+                if self._monitor.force_dead(e.shard):
+                    self._recover_shard(e.shard)
+            elif e.kind == "shard_rejoin":
+                if self._monitor.begin_rejoin(e.shard):
+                    # pool comes back fresh; placement resumes after the
+                    # monitor's rejoin cooldown flips the shard HEALTHY
+                    self._sched.reset_shard(e.shard)
+            elif e.kind == "sensor_hot":
+                self._monitor.inject_sensor(e.shard, e.delta_c, e.ticks)
+            elif e.kind == "page_squeeze":
+                self._sched.steal_pages(e.shard, e.pages)
+            elif e.kind == "page_restore":
+                self._sched.restore_pages(e.shard)
+            self.stats.faults_injected += 1
+
+    def _health_tick(self):
+        """Advance the sensor-driven health machine one tick and react:
+        shards entering DRAINING/DEAD get their live slots recovered, a
+        drained shard that cooled resets its pool for rejoin, and the
+        scheduler's placement mask tracks the monitor."""
+        occ = np.zeros((self.n_shards,), np.float64)
+        for shard in range(self.n_shards):
+            base = shard * self.slots_per_shard
+            occ[shard] = sum(
+                1 for s in range(self.slots_per_shard)
+                if self._slots[base + s] is not None) / self.slots_per_shard
+        for shard, old, new in self._monitor.step(occ):
+            if new in EVACUATED and old not in EVACUATED:
+                self._recover_shard(shard)
+            if new == Health.REJOINING and old == Health.DRAINING:
+                self._sched.reset_shard(shard)
+        self._sched.placeable = self._monitor.placeable()
+
+    def _recover_shard(self, shard: int):
+        """Migrate every live slot off a draining/dead shard by re-prefill
+        replay: each displaced request re-enters the queue (rid order) and
+        its live_prompt — prompt + already-emitted tokens — chunk-prefills
+        on whichever healthy shard admission picks. Schedule-independent KV
+        rounding and (seed, token_index)-keyed sampling make the resumed
+        stream token-exact with its uninterrupted twin; the dead shard's
+        slots go inactive, so subsequent decode garbage lands on its local
+        null page."""
+        base = shard * self.slots_per_shard
+        displaced = []
+        for s in range(self.slots_per_shard):
+            g = base + s
+            if self._slots[g] is not None:
+                displaced.append(self._slots[g])
+                self._release(g)
+        if not displaced:
+            return
+        displaced.sort(key=lambda r: r.rid)
+        self._sched.requeue(displaced)
+        for r in displaced:
+            self._recover_started.setdefault(r.rid, self._tick)
+            self.stats.recoveries += 1
+            self.stats.retries += 1
+
+    def _preempt(self, shard: int, slot: int):
+        """Evict one young decoding slot so the starving queue head can
+        admit (see scheduler.preempt_candidate for the victim policy)."""
+        g = self._gslot(shard, slot)
+        victim = self._slots[g]
+        victim.preemptions += 1
+        self._release(g)
+        self._sched.requeue([victim])
+        self.stats.preemptions += 1
+        self.stats.retries += 1
+        self._starved = 0
+
+    def _expire_ttl(self):
+        """Retire queued and live requests past their TTL (ticks since
+        submit), releasing pages/slots exactly like completion."""
+        def expired(r: Request) -> bool:
+            ttl = r.ttl_ticks if r.ttl_ticks is not None else self.ttl_ticks
+            return ttl is not None and self._tick - r.submit_tick > ttl
+
+        q = self._sched.queue
+        for r in [x for x in q if expired(x)]:
+            q.remove(r)
+            r.done = True
+            r.timed_out = True
+            r.t_done = time.time()
+            self.stats.timeouts += 1
+        for g, r in enumerate(self._slots):
+            if r is not None and expired(r):
+                r.done = True
+                r.timed_out = True
+                r.t_done = time.time()
+                self.stats.timeouts += 1
+                self._release(g)
+
+    def assert_pool_accounting(self) -> None:
+        """Exact pool accounting under faults: per shard free + mapped +
+        stolen == n_pages - 1, and every slot without a live request sits on
+        the shard's null page row."""
+        self._sched.assert_accounting()
+        for g, r in enumerate(self._slots):
+            if r is None:
+                assert not self._page_table[g].any(), g
+
+    def health_summary(self) -> Optional[Dict[str, object]]:
+        return None if self._monitor is None else self._monitor.summary()
 
     def run_to_completion(self, max_ticks: int = 10_000) -> EngineStats:
         ticks = 0

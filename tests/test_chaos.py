@@ -1,0 +1,372 @@
+"""Fault-tolerant serving (PR 6): deterministic chaos, health, backpressure.
+
+The invariants pinned here:
+  * a seeded `chaos_plan` is pure data — same seed → the SAME plan,
+    bit-for-bit, and the engine replays it to the same event schedule;
+  * chaos parity — shard death/drain/rejoin, page squeezes and preemption
+    recover every displaced request by token-exact re-prefill replay, so
+    the surviving engine emits IDENTICAL token streams to a fault-free
+    twin on the same submissions (schedule-independence, PR 4);
+  * exact pool accounting through every fault path: per shard,
+    free + mapped + stolen == n_pages - 1, zero page leak;
+  * backpressure is graceful: malformed submits raise ValueError with
+    nothing enqueued, a full queue raises EngineOverloaded, TTL retires
+    stale requests through the normal release path, and page-pool
+    exhaustion at admission queues FIFO instead of crashing;
+  * the sensor-driven health machine (core/thermal + core/dvfs) walks
+    HEALTHY → DEGRADED → DRAINING → REJOINING → HEALTHY deterministically.
+
+Multi-device chaos runs fork a subprocess with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 (the repo-wide idiom —
+device count is fixed at jax import) and shard over a 4-device prefix.
+Everything else runs in-process on the single-host engine or a 1-shard mesh.
+"""
+
+import math
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import ExecOptions, build_model
+from repro.launch.mesh import make_serve_mesh
+from repro.serve.engine import EngineOverloaded, EngineStats, ServeEngine
+from repro.serve.faults import FaultEvent, FaultPlan, chaos_plan
+from repro.serve.health import Health, HealthConfig, ShardHealthMonitor
+from repro.serve.sharded import ShardedServeEngine
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="module")
+def smol():
+    cfg = get_config("smollm-360m").smoke()
+    model = build_model(cfg, ExecOptions(attn_impl="reference", ce_chunk=32))
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _prompt(seed, n=12, vocab=512):
+    return np.asarray(
+        jax.random.randint(jax.random.key(seed), (n,), 0, vocab), np.int32)
+
+
+# ------------------------------------------------------------------ FaultPlan
+def test_chaos_plan_replays_bit_for_bit():
+    kw = dict(n_shards=4, n_ticks=48, deaths=2, squeezes=4, sensor_storms=2)
+    a, b = chaos_plan(7, **kw), chaos_plan(7, **kw)
+    assert a == b and a.events == b.events
+    assert a != chaos_plan(8, **kw)
+    # sorted by tick, indexable per tick, counted per kind
+    ticks = [e.tick for e in a.events]
+    assert ticks == sorted(ticks)
+    assert sum(len(a.events_at(t)) for t in set(ticks)) == len(a.events)
+    c = a.counts()
+    # every death is paired with a rejoin; every squeeze with a restore
+    assert c["shard_death"] == c["shard_rejoin"] >= 1
+    assert c["page_squeeze"] == c["page_restore"] >= 1
+    assert c["sensor_hot"] == 2
+    assert a.max_tick <= 48 + max(8, 6)  # dwell can run past n_ticks
+
+
+def test_fault_plan_validation():
+    with pytest.raises(ValueError):
+        FaultEvent(tick=1, kind="meteor_strike")
+    with pytest.raises(ValueError):
+        chaos_plan(0, n_shards=1, n_ticks=16, deaths=1)  # nowhere to recover
+    # events arrive unsorted, plan stores them sorted
+    p = FaultPlan(events=(FaultEvent(tick=9, kind="page_restore"),
+                          FaultEvent(tick=2, kind="page_squeeze", pages=4)))
+    assert [e.tick for e in p.events] == [2, 9]
+
+
+# ------------------------------------------------------------- health machine
+def test_health_machine_sensor_walks_drain_then_rejoin():
+    """A hot sensor bias walks shard 0 HEALTHY → DEGRADED → DRAINING; once
+    the bias expires it cools back through REJOINING to HEALTHY. Shard 1
+    never leaves HEALTHY. Deterministic: the same trace twice."""
+    def trace():
+        mon = ShardHealthMonitor(2, HealthConfig())
+        mon.inject_sensor(0, delta_c=60.0, ticks=6)
+        out = []
+        for _ in range(14):
+            for s, old, new in mon.step(np.array([1.0, 0.2])):
+                out.append((mon._tick, s, old.value, new.value))
+        return out, mon.state
+
+    out, state = trace()
+    assert state == [Health.HEALTHY, Health.HEALTHY]
+    assert all(s == 0 for _, s, _, _ in out)  # shard 1 untouched
+    path = [(old, new) for _, _, old, new in out]
+    assert path == [("healthy", "degraded"), ("degraded", "draining"),
+                    ("draining", "rejoining"), ("rejoining", "healthy")]
+    assert trace()[0] == out  # bit-for-bit replay
+
+
+def test_health_machine_force_dead_and_rejoin():
+    mon = ShardHealthMonitor(3, HealthConfig(rejoin_ticks=2))
+    assert mon.force_dead(1) and not mon.force_dead(1)  # idempotent
+    assert mon.placeable() == [True, False, True]
+    assert not mon.begin_rejoin(0)          # only DEAD shards rejoin
+    assert mon.begin_rejoin(1)
+    occ = np.zeros(3)
+    for _ in range(3):
+        mon.step(occ)
+    assert mon.state[1] == Health.HEALTHY
+    assert mon.n_placeable() == 3
+
+
+# ------------------------------------------------------- validation + summary
+def test_submit_validation_rejects_cleanly(smol):
+    _, model, params = smol
+    eng = ServeEngine(model, n_slots=2, max_len=32, params=params,
+                      page_size=8)
+    with pytest.raises(ValueError, match="1-D"):
+        eng.submit(np.zeros((2, 4), np.int32))
+    with pytest.raises(ValueError, match="at least one token"):
+        eng.submit(np.zeros((0,), np.int32))
+    with pytest.raises(ValueError, match="exceeds engine max_len"):
+        eng.submit(_prompt(0, n=33))
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        eng.submit(_prompt(0), max_new_tokens=0)
+    assert not eng._queue and eng.stats.pages_in_use == 0  # nothing enqueued
+    # NaN sampling params clamp to safe ends instead of poisoning the jit
+    r = eng.submit(_prompt(0), sample_params=(float("nan"), 5, float("nan")))
+    assert r.temperature == 0.0 and r.top_p == 1.0
+
+
+def test_queue_cap_overload(smol):
+    _, model, params = smol
+    eng = ServeEngine(model, n_slots=1, max_len=64, params=params,
+                      page_size=8, max_queue=2)
+    for i in range(2):
+        eng.submit(_prompt(i), max_new_tokens=2)
+    with pytest.raises(EngineOverloaded):
+        eng.submit(_prompt(9), max_new_tokens=2)
+    assert eng.stats.rejected == 1
+    eng.run_to_completion()  # the accepted two still complete
+
+
+def test_zero_run_summary_is_finite():
+    """A run that never decoded (only rejected/timed out) must summarize to
+    well-defined zeros, not ZeroDivisionError/NaN."""
+    s = EngineStats().summary()
+    assert s["mean_occupancy"] == 0.0
+    assert s["pad_waste_ratio"] == 0.0
+    assert s["mean_recovery_ticks"] == 0.0
+    assert all(math.isfinite(v) for v in s.values()
+               if isinstance(v, (int, float)))
+
+
+# ------------------------------------------------------------- TTL + faults
+def test_ttl_retires_stale_requests(smol):
+    _, model, params = smol
+    eng = ServeEngine(model, n_slots=1, max_len=64, params=params,
+                      page_size=8)
+    keep = eng.submit(_prompt(0), max_new_tokens=6)
+    stale = [eng.submit(_prompt(1 + i), max_new_tokens=6, ttl_ticks=2)
+             for i in range(2)]
+    eng.run_to_completion()
+    assert keep.done and not keep.timed_out and len(keep.out_tokens) == 6
+    assert all(r.done and r.timed_out and not r.out_tokens for r in stale)
+    assert eng.stats.timeouts == 2
+    assert eng.stats.pages_in_use == 0
+    assert len(eng._free_pages) == eng.n_pages - 1  # zero page leak
+
+
+def test_single_host_squeeze_parity_and_zero_leak(smol):
+    """A page squeeze starves admission mid-run; after the restore, every
+    request completes with tokens IDENTICAL to a fault-free twin, and the
+    pool balances to the page."""
+    _, model, params = smol
+    lens, new = [9, 17, 6, 23, 13, 11], [6, 4, 8, 3, 5, 6]
+
+    def leg(plan):
+        eng = ServeEngine(model, n_slots=2, max_len=64, params=params,
+                          page_size=8, n_pages=9, fault_plan=plan)
+        reqs = [eng.submit(_prompt(i, n), max_new_tokens=m, seed=100 + i)
+                for i, (n, m) in enumerate(zip(lens, new))]
+        eng.run_to_completion()
+        return eng, reqs
+
+    plan = FaultPlan(events=(
+        FaultEvent(tick=3, kind="page_squeeze", pages=6),
+        FaultEvent(tick=12, kind="page_restore")))
+    base_eng, base = leg(None)
+    eng, chaos = leg(plan)
+    assert eng.stats.faults_injected == 2
+    for a, b in zip(base, chaos):
+        assert a.done and b.done and not b.timed_out
+        assert a.out_tokens == b.out_tokens
+    assert len(eng._free_pages) == eng.n_pages - 1
+    assert not eng._stolen_pages
+    assert eng.stats.pages_in_use == 0
+
+
+# -------------------------------------------- pool exhaustion at admission
+def _fifo_exhaustion(eng, n_req=4):
+    """Submit more work than the pool can hold at once: admission must
+    queue (not crash) and drain strictly FIFO."""
+    reqs = [eng.submit(_prompt(i), max_new_tokens=4, seed=100 + i)
+            for i in range(n_req)]
+    finished = []
+    for _ in range(400):
+        live = eng.step()
+        for r in reqs:
+            if r.done and r.rid not in finished:
+                finished.append(r.rid)
+        if not live:
+            break
+    assert all(r.done and not r.timed_out for r in reqs)
+    assert finished == sorted(finished)  # FIFO drain
+    assert all(len(r.out_tokens) == 4 for r in reqs)
+    return reqs
+
+
+def test_pool_exhaustion_queues_fifo_single_host(smol):
+    _, model, params = smol
+    # each request reserves 2 pages; 3 usable pages -> one live at a time
+    eng = ServeEngine(model, n_slots=4, max_len=64, params=params,
+                      page_size=8, n_pages=4)
+    _fifo_exhaustion(eng)
+    assert len(eng._free_pages) == eng.n_pages - 1
+    assert eng.stats.pages_in_use == 0
+
+
+def test_pool_exhaustion_queues_fifo_sharded(smol):
+    _, model, params = smol
+    eng = ShardedServeEngine(model, mesh=make_serve_mesh(1), n_slots=4,
+                             max_len=64, params=params, page_size=8,
+                             n_pages=4)
+    _fifo_exhaustion(eng)
+    eng.assert_pool_accounting()
+    eng.assert_local_page_tables()
+
+
+# ------------------------------------------------------- multi-device chaos
+_PRELUDE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, numpy as np
+from repro.configs import get_config
+from repro.models import ExecOptions, build_model
+from repro.launch.mesh import make_serve_mesh
+from repro.serve.faults import FaultEvent, FaultPlan, chaos_plan
+from repro.serve.sharded import ShardedServeEngine
+
+# a 4-shard prefix of the 8 fake devices: the bench-tuned chaos geometry
+mesh = make_serve_mesh(4)
+
+cfg = get_config("smollm-360m").smoke()
+model = build_model(cfg, ExecOptions(attn_impl="reference", ce_chunk=32))
+params = model.init(jax.random.key(1))
+
+def prompt(seed, n, vocab=512):
+    return np.asarray(jax.random.randint(
+        jax.random.key(seed), (n,), 0, vocab), np.int32)
+
+def chaos_parity(plan, *, n_req=16, max_new=16, n_pages=13, kw=None,
+                 health_cfg=None):
+    # fault-free twin vs chaos engine, identical submissions; returns the
+    # chaos engine's (stats, engine)
+    kw = kw or {}
+    lens = [5 + (i * 7) % 23 for i in range(n_req)]
+    runs = []
+    for p in (None, plan):
+        eng = ShardedServeEngine(model, mesh=mesh, n_slots=8, max_len=64,
+                                 params=params, page_size=8, n_pages=n_pages,
+                                 fault_plan=p, health_cfg=health_cfg, **kw)
+        reqs = [eng.submit(prompt(i, n), max_new_tokens=max_new,
+                           seed=100 + i) for i, n in enumerate(lens)]
+        eng.run_to_completion()
+        eng.assert_pool_accounting()
+        eng.assert_local_page_tables()
+        runs.append((eng, reqs))
+    (base, br), (eng, cr) = runs
+    for a, b in zip(br, cr):
+        assert a.done and b.done and not b.timed_out
+        assert a.out_tokens == b.out_tokens, (a.rid, a.out_tokens,
+                                              b.out_tokens)
+    return eng
+"""
+
+
+def _run(script: str):
+    env = {**os.environ, "PYTHONPATH": "src"}
+    r = subprocess.run([sys.executable, "-c", _PRELUDE + script], env=env,
+                       capture_output=True, text=True, cwd=REPO)
+    assert r.returncode == 0, (r.stdout[-2000:], r.stderr[-4000:])
+    return r.stdout
+
+
+def test_chaos_parity_seed_matrix_8dev():
+    """The bench-tuned chaos geometry over a fixed seed matrix: shard
+    deaths, rejoins and page squeezes on a tight pool must yield ZERO token
+    divergence, with deaths actually displacing work (recoveries) and the
+    free-list starvation actually preempting decoding slots."""
+    out = _run(r"""
+tot_preempt = tot_recov = 0
+for seed in (2, 3):
+    plan = chaos_plan(seed, n_shards=4, n_ticks=56, deaths=2,
+                      death_dwell=16, squeezes=8, squeeze_pages=10,
+                      squeeze_dwell=14)
+    c = plan.counts()
+    assert c["shard_death"] >= 1 and c["shard_rejoin"] >= 1, c
+    eng = chaos_parity(plan)
+    st = eng.stats
+    assert st.faults_injected >= 4, st.faults_injected
+    assert st.recoveries >= 1, st.recoveries
+    assert st.recovery_ticks_sum >= st.recoveries
+    tot_preempt += st.preemptions
+    tot_recov += st.recoveries
+    # replaying the SAME plan reproduces the same scheduler arithmetic
+    twin = chaos_parity(plan)
+    assert (twin.stats.preemptions, twin.stats.recoveries,
+            twin.stats.recovery_ticks_sum) == \
+           (st.preemptions, st.recoveries, st.recovery_ticks_sum)
+assert tot_preempt >= 3, tot_preempt
+assert tot_recov >= 2, tot_recov
+print("CHAOS_PARITY_OK", tot_preempt, tot_recov)
+""")
+    assert "CHAOS_PARITY_OK" in out
+
+
+def test_chaos_parity_moe_int8_8dev():
+    """Same chaos geometry on the moe × int8-KV datapath: recovery
+    re-prefill must be token-exact through the quantized pool too."""
+    out = _run(r"""
+cfg = get_config("qwen2-moe-a2.7b").smoke()
+model = build_model(cfg, ExecOptions(attn_impl="reference", ce_chunk=32))
+params = model.init(jax.random.key(1))
+plan = chaos_plan(2, n_shards=4, n_ticks=40, deaths=1, death_dwell=12,
+                  squeezes=4, squeeze_pages=10, squeeze_dwell=10)
+eng = chaos_parity(plan, n_req=8, max_new=8,
+                   kw={"wdtype": "int8", "kv_dtype": "int8"})
+assert eng.stats.faults_injected >= 2
+print("MOE_INT8_CHAOS_OK")
+""")
+    assert "MOE_INT8_CHAOS_OK" in out
+
+
+def test_sensor_drain_parity_8dev():
+    """A hot-sensor fault (no hard death) walks a shard through the health
+    machine's DRAINING state: its live slots migrate off via re-prefill and
+    the shard rejoins — token streams still exactly match the fault-free
+    twin and every shard ends placeable."""
+    out = _run(r"""
+from repro.serve.health import Health
+plan = FaultPlan(events=(
+    FaultEvent(tick=4, kind="sensor_hot", shard=1, delta_c=60.0, ticks=8),))
+eng = chaos_parity(plan, n_req=12, max_new=12, n_pages=16)
+st = eng.stats
+assert st.faults_injected == 1
+assert st.recoveries >= 1, st.recoveries          # drain displaced work
+assert all(s == Health.HEALTHY for s in eng._monitor.state), \
+    eng.health_summary()
+print("SENSOR_DRAIN_OK", st.recoveries)
+""")
+    assert "SENSOR_DRAIN_OK" in out
