@@ -83,6 +83,14 @@ GATES = {
         "chaos_preemptions": ("lower", 0.0, "det"),
         "chaos_mean_recovery_ticks": ("lower", 0.10, "det"),
         "chaos_tokens_per_s": ("higher", 0.30, "wall"),
+        # MLA latent KV (PR 7): bytes/token is exact pool arithmetic on a
+        # fixed page geometry — ZERO slack, and the headline claim (one
+        # bf16 latent row undercuts a GQA int8 K+V pair + scales) gates as
+        # the ratio staying < 1 of its committed baseline; the tokens/s leg
+        # is a clock like every other throughput
+        "mla_kv_bytes_per_token": ("lower", 0.0, "det"),
+        "mla_vs_gqa_int8_kv_ratio": ("lower", 0.0, "det"),
+        "mla_tokens_per_s": ("higher", 0.30, "wall"),
     },
     "soc": {
         "sweep_wall_s": ("lower", 0.20, "wall"),

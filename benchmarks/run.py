@@ -471,6 +471,49 @@ def bench_serve():
     print(f"serve,sampled,tokens_per_s={stats.tokens_out / dt:.1f},"
           f"temperature=0.8,top_k=40,top_p=0.95")
 
+    # ---- MLA latent-KV vs GQA int8 bytes/token (PR 7) ---------------------
+    # deepseek-v2-lite smoke (attn_kind='mla') vs the SAME architecture
+    # flipped to paired-KV GQA with an int8 pool — the strongest KV-memory
+    # baseline the stack had. The MLA pool holds ONE latent row per token
+    # (kv_lora_rank + qk_rope_dim wide, KV-head dim 1, bf16) where GQA
+    # stores kv_pad K+V head pairs (+ int8 scale rows). Bytes/token is
+    # deterministic pool math (kv_cache_bytes over pool rows, identical
+    # page geometry both legs), so MLA-beats-GQA-int8 gates as 'det'; the
+    # throughput leg is a clock.
+    import dataclasses
+    mcfg = get_config("deepseek-v2-lite").smoke()
+    mmodel = build_model(mcfg, ExecOptions(attn_impl="reference",
+                                           ce_chunk=32, moe_group=32))
+    mparams = mmodel.init(jax.random.key(0))
+    gcfg = dataclasses.replace(mcfg, attn_kind="gqa")
+    gmodel = build_model(gcfg, ExecOptions(attn_impl="reference",
+                                           ce_chunk=32, moe_group=32))
+    gparams = gmodel.init(jax.random.key(0))
+    pool_kw = dict(n_slots=4, max_len=64, page_size=8, n_pages=33)
+    eng_mla = ServeEngine(mmodel, params=mparams, kv_dtype="bf16", **pool_kw)
+    eng_gqa = ServeEngine(gmodel, params=gparams, kv_dtype="int8", **pool_kw)
+    rows = pool_kw["n_pages"] * pool_kw["page_size"]
+    bpt_mla = eng_mla.kv_cache_bytes() / rows
+    bpt_gqa = eng_gqa.kv_cache_bytes() / rows
+    metrics["mla_kv_bytes_per_token"] = bpt_mla
+    metrics["gqa_int8_kv_bytes_per_token"] = bpt_gqa
+    metrics["mla_vs_gqa_int8_kv_ratio"] = bpt_mla / bpt_gqa
+    assert bpt_mla < bpt_gqa, \
+        (bpt_mla, bpt_gqa, "MLA latent rows must undercut GQA int8")
+    mla_ps = [np.asarray(jax.random.randint(
+        jax.random.key(100 + i), (5 + (i * 7) % 23,), 0, mcfg.vocab_size),
+        np.int32) for i in range(8)]
+    for p in mla_ps:
+        eng_mla.submit(p, max_new_tokens=8)
+    t0 = time.perf_counter()
+    stats = eng_mla.run_to_completion()
+    dt = time.perf_counter() - t0
+    metrics["mla_tokens_per_s"] = stats.tokens_out / dt
+    print(f"serve,mla,kv_bytes_per_token={bpt_mla:.1f},"
+          f"gqa_int8_bytes_per_token={bpt_gqa:.1f},"
+          f"ratio={bpt_mla / bpt_gqa:.3f},"
+          f"tokens_per_s={stats.tokens_out / dt:.1f}")
+
     # same-run ratio: machine-speed cancels, so the regression gate can hold
     # this tight even across runner generations
     metrics["bucketing_speedup"] = (metrics["fast_tokens_per_s"]

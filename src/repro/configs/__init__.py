@@ -28,6 +28,13 @@ _MODULES = {
 
 ARCH_ORDER = tuple(_MODULES)
 
+# Post-assignment archs: resolvable via get_config but outside ARCH_ORDER —
+# the assignment's 10×4 dry-run/roofline grid stays fixed.
+_EXTRA_MODULES = {
+    "deepseek-v2-lite": "repro.configs.deepseek_v2_lite",  # MLA latent-KV
+}
+_MODULES = {**_MODULES, **_EXTRA_MODULES}
+
 
 def get_config(name: str) -> ArchConfig:
     if name not in _MODULES:

@@ -48,6 +48,16 @@ class ArchConfig:
     block_pattern: Tuple[str, ...] = () # e.g. ('rec','rec','attn')
     lru_width: int = 0
     window: int = 0                     # sliding-window size for local attn
+    # --- attention family (deepseek-v2 MLA latent-KV) ---
+    # attn_kind='mla' caches ONE (kv_lora_rank + qk_rope_dim)-wide latent row
+    # per token instead of per-head K/V (models/mla.py); 'gqa' is the default
+    # per-head path. q_lora_rank=0 keeps the direct query projection.
+    attn_kind: str = "gqa"              # gqa | mla
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0                 # 0 → head_dim
     # --- enc-dec (seamless) ---
     n_enc_layers: int = 0
     n_dec_layers: int = 0
@@ -106,6 +116,19 @@ class ArchConfig:
     def n_heads_padded(self) -> int:
         kvp, gp = self.padded_kv_group
         return kvp * gp
+
+    @property
+    def mla_latent_dim(self) -> int:
+        """Width of the single cached MLA row: compressed KV + shared rope."""
+        return self.kv_lora_rank + self.qk_rope_dim
+
+    @property
+    def mla_qk_dim(self) -> int:
+        return self.qk_nope_dim + self.qk_rope_dim
+
+    @property
+    def mla_v_dim(self) -> int:
+        return self.v_head_dim or self.head_dim
 
     @property
     def d_inner(self) -> int:           # mamba2
@@ -200,6 +223,10 @@ class ArchConfig:
                            n_heads=4, n_kv_heads=4, head_dim=32)
         if self.family == "vlm":
             updates.update(n_image_tokens=8, n_kv_heads=2)
+        if self.attn_kind == "mla":
+            updates.update(kv_lora_rank=32, qk_nope_dim=32, qk_rope_dim=16,
+                           v_head_dim=32,
+                           q_lora_rank=16 if self.q_lora_rank else 0)
         return dataclasses.replace(self, **updates)
 
 

@@ -40,6 +40,14 @@ that datapath (kernels/int8_matmul is the weight half).
 
 `interpret=True` runs the same kernel on CPU — the tests' numerics oracle is
 `models.attention`'s reference path.
+
+NOT YET COVERED — MLA latent rows (models/mla.py): the latent family passes
+ONE (kv_lora_rank + qk_rope_dim)-wide pool as both K and V with values the
+leading kv_lora_rank columns of each row (`v_dim=` in
+models/attention.decode_attention). A kernel-side latent gather would load
+each row once and slice V in-register; until then `v_dim` forces the exact
+jnp reference path, which is the CPU oracle anyway. fp8 (e5m2) caches
+likewise stay on the jnp path (dense layout only — see serve/engine).
 """
 
 from __future__ import annotations

@@ -19,6 +19,11 @@ the prompt has actually written), so stale pool rows and chunk padding are
 masked exactly like the decode kernel's ragged prefix. Optional
 k_scale/v_scale operands fuse int8 dequant into the tile loads, giving the
 int8 KV pool a chunked prefill path with no densify/cast step.
+
+NOT YET COVERED — MLA latent rows: `v_dim=` chunk attention (one latent
+pool as both K and V — see kernels/decode_attention's note) runs the exact
+jnp reference path in models/attention.chunk_attention_paged; the
+kernel-side latent gather is a recorded follow-on.
 """
 
 from __future__ import annotations

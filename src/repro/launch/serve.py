@@ -63,9 +63,10 @@ def main():
                     help="shorthand for --wdtype int8 --kv-dtype int8")
     ap.add_argument("--wdtype", choices=["bf16", "int8"], default=None,
                     help="weight datapath (int8 = Pallas int8_matmul on TPU)")
-    ap.add_argument("--kv-dtype", choices=["f32", "bf16", "int8"],
+    ap.add_argument("--kv-dtype", choices=["f32", "bf16", "int8", "fp8"],
                     default=None,
-                    help="KV-cache storage (int8 = fused-dequant decode)")
+                    help="KV-cache storage (int8 = fused-dequant decode; "
+                         "fp8 = e5m2 cast, dense layout / --page-size 0)")
     ap.add_argument("--page-size", type=int, default=32,
                     help="KV page size (0 = dense per-slot cache)")
     ap.add_argument("--pages", type=int, default=0,
@@ -116,7 +117,10 @@ def main():
         if wdtype == "int8":
             params = quantize_params_int8(params)
             wdtype = None
-        kv_dtype = None if kv_dtype in ("int8", "bf16") else kv_dtype
+        kv_dtype = None if kv_dtype in ("int8", "bf16", "fp8") else kv_dtype
+    if kv_dtype == "fp8" and args.page_size != 0:
+        ap.error("--kv-dtype fp8 is dense-layout only (paged e5m2 pools are "
+                 "a recorded follow-on); pass --page-size 0")
     fault_plan = None
     if args.fault_seed is not None:
         from repro.serve.faults import chaos_plan

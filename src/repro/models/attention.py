@@ -75,6 +75,7 @@ def chunked_attention(q, k, v, *, causal=True, window=0, scale=None,
     ideal to within one block-row, not the 2× of a dense-masked einsum."""
     b, sq, nkv, g, d = q.shape
     sk = k.shape[1]
+    dv = v.shape[-1]      # MLA values are the latent's leading slice: dv < d
     scale = scale if scale is not None else d ** -0.5
     q_chunk = min(q_chunk, sq)
     kv_chunk = min(kv_chunk, sk)
@@ -82,7 +83,7 @@ def chunked_attention(q, k, v, *, causal=True, window=0, scale=None,
     n_q, n_kv = sq // q_chunk, sk // kv_chunk
 
     k_blocks = k.reshape(b, n_kv, kv_chunk, nkv, d)
-    v_blocks = v.reshape(b, n_kv, kv_chunk, nkv, d)
+    v_blocks = v.reshape(b, n_kv, kv_chunk, nkv, dv)
 
     outs = []
     for iq in range(n_q):
@@ -112,7 +113,7 @@ def chunked_attention(q, k, v, *, causal=True, window=0, scale=None,
 
         m0 = jnp.full((b, nkv, g, q_chunk), NEG_INF, jnp.float32)
         l0 = jnp.zeros((b, nkv, g, q_chunk), jnp.float32)
-        a0 = jnp.zeros((b, nkv, g, q_chunk, d), jnp.float32)
+        a0 = jnp.zeros((b, nkv, g, q_chunk, dv), jnp.float32)
         from repro.models.common import scan_or_unroll
         (m, l, acc, _), _ = scan_or_unroll(
             body, (m0, l0, a0, jnp.int32(0)),
@@ -129,6 +130,8 @@ def _pallas_decode_ok(q, k_cache, page_table=None) -> bool:
     tiles evenly; everything else falls back to the pure-jnp path."""
     if jax.default_backend() != "tpu":
         return False
+    if jnp.issubdtype(k_cache.dtype, jnp.floating) and k_cache.dtype.itemsize == 1:
+        return False  # fp8 caches: jnp path only (dense layout, CPU tests)
     # int8 pools tile at 32 sublanes (vs 16 for bf16): require 32-row pages
     sublane = 32 if k_cache.dtype == jnp.int8 else 16
     if page_table is not None:
@@ -145,11 +148,18 @@ def _pallas_decode_ok(q, k_cache, page_table=None) -> bool:
 
 def decode_attention(q, k_cache, v_cache, cur_len, *, window=0, scale=None,
                      page_table=None, k_scale=None, v_scale=None,
-                     impl: str = "auto"):
+                     v_dim: Optional[int] = None, impl: str = "auto"):
     """Single-position attention against a cache.
 
     q: (B,1,KV,G,D); caches: (B,Smax,KV,D); cur_len: () or (B,) int — number of
     valid cache positions (the new token's k/v must already be written).
+
+    v_dim (MLA latent rows): the caller passes the SAME latent pool as both
+    k_cache and v_cache, with keys q·D-wide and values only the leading
+    `v_dim` columns of each row (models/mla.py absorbed layout). The jnp path
+    slices after gather/dequant; the Pallas kernel has no latent-row gather
+    yet, so v_dim forces the reference path (documented fallback —
+    kernels/decode_attention.py).
 
     Paged layout (`page_table=` (B, pages_per_seq) int32): the caches are
     shared (n_pages, page_size, KV, D) page pools and each sequence's rows
@@ -176,6 +186,8 @@ def decode_attention(q, k_cache, v_cache, cur_len, *, window=0, scale=None,
     on gemma-7b × decode_32k; EXPERIMENTS.md §Perf).
     """
     assert (k_scale is None) == (v_scale is None)
+    if v_dim is not None:
+        impl = "reference"  # latent-row kernel gather is a follow-on
     if impl == "auto" and _pallas_decode_ok(q, k_cache, page_table):
         impl = "pallas"
     if impl == "pallas":
@@ -200,6 +212,13 @@ def decode_attention(q, k_cache, v_cache, cur_len, *, window=0, scale=None,
         from repro.models.quantized import dequantize_kv_rows
         k_cache = dequantize_kv_rows(k_cache, k_scale)
         v_cache = dequantize_kv_rows(v_cache, v_scale)
+    if jnp.issubdtype(v_cache.dtype, jnp.floating) and v_cache.dtype.itemsize == 1:
+        # fp8 storage (dense layout only): the softmax probs must not
+        # round-trip through e5m2 below — upcast the gathered view once
+        k_cache = k_cache.astype(jnp.float32)
+        v_cache = v_cache.astype(jnp.float32)
+    if v_dim is not None:
+        v_cache = v_cache[..., :v_dim]
     smax = k_cache.shape[1]
     scale = scale if scale is not None else d ** -0.5
     s = jnp.einsum("bqkgd,bskd->bkgqs", q, k_cache,
@@ -223,6 +242,8 @@ def _pallas_chunk_ok(q, k_pool) -> bool:
     for int8 pools, 16 for bf16) + a chunk the q-block tiles evenly."""
     if jax.default_backend() != "tpu":
         return False
+    if jnp.issubdtype(k_pool.dtype, jnp.floating) and k_pool.dtype.itemsize == 1:
+        return False  # fp8 pools: jnp path only
     sublane = 32 if k_pool.dtype == jnp.int8 else 16
     page_size = k_pool.shape[1]
     cq = q.shape[1]
@@ -232,7 +253,7 @@ def _pallas_chunk_ok(q, k_pool) -> bool:
 
 def chunk_attention_paged(q, k_pool, v_pool, page_table, q_offset, *, kv_len,
                           window=0, scale=None, k_scale=None, v_scale=None,
-                          impl: str = "auto"):
+                          v_dim: Optional[int] = None, impl: str = "auto"):
     """Chunk-prefill attention: a block of query rows against the page pool.
 
     q: (B, C, KV, G, D) — one fixed-size prefill chunk whose row i sits at
@@ -248,6 +269,10 @@ def chunk_attention_paged(q, k_pool, v_pool, page_table, q_offset, *, kv_len,
     pools — the jnp path dequantizes the gathered view (CPU oracle), the
     Pallas kernel fuses dequant into its tile loads.
 
+    v_dim (MLA latent rows): same single-pool convention as
+    decode_attention — values are the leading v_dim columns of each latent
+    row; forces the jnp reference path (kernel gather is a follow-on).
+
     impl: 'auto' dispatches to kernels/flash_attention.flash_attention_paged
     on TPU; 'pallas' forces the kernel (interpret off-TPU — tests);
     'reference' forces the jnp gather path below.
@@ -255,6 +280,8 @@ def chunk_attention_paged(q, k_pool, v_pool, page_table, q_offset, *, kv_len,
     b, cq, nkv, g, d = q.shape
     assert (k_scale is None) == (v_scale is None)
     scale = scale if scale is not None else d ** -0.5
+    if v_dim is not None:
+        impl = "reference"
     if impl == "auto" and _pallas_chunk_ok(q, k_pool):
         impl = "pallas"
     if impl == "pallas":
@@ -270,6 +297,11 @@ def chunk_attention_paged(q, k_pool, v_pool, page_table, q_offset, *, kv_len,
         from repro.models.quantized import dequantize_kv_rows
         kd = dequantize_kv_rows(kd, k_scale[page_table].reshape(b, -1, nkv))
         vd = dequantize_kv_rows(vd, v_scale[page_table].reshape(b, -1, nkv))
+    if jnp.issubdtype(vd.dtype, jnp.floating) and vd.dtype.itemsize == 1:
+        kd = kd.astype(jnp.float32)   # fp8 pools (see decode_attention)
+        vd = vd.astype(jnp.float32)
+    if v_dim is not None:
+        vd = vd[..., :v_dim]
     smax = kd.shape[1]
     s = jnp.einsum("bqkgd,bskd->bkgqs", q, kd,
                    preferred_element_type=jnp.float32) * scale

@@ -15,13 +15,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import attention as attn_mod
-from repro.models.common import ParamDef, act_fn, apply_rope, glu_act, rms_norm
+from repro.models.common import ParamDef, act_fn, glu_act, rms_norm
 from repro.models.quantized import SCALE_DTYPE, qeinsum
 from repro.models.transformer import (
-    ExecOptions, _expand_kv, _kv_round_of, _round_kv, _write_cache,
-    _write_cache_paged, _write_cache_paged_q, _write_cache_q,
-    _write_chunk_paged, _write_chunk_paged_q, attn_schema, chunked_ce_loss,
-    embed_tokens, head_mask, lm_head_weights, paged_kv_shapes, remat_wrap,
+    ExecOptions, _expand_kv, _kv_round_of, _pools_of, attn_block, attn_schema,
+    chunked_ce_loss, embed_tokens, head_mask, lm_head_weights,
+    paged_kv_shapes, remat_wrap,
 )
 
 
@@ -56,28 +55,6 @@ def schema(cfg) -> Dict[str, Any]:
     }
 
 
-def _self_attn(x, p, cfg, opts, positions, *, causal, prefix="", kv_round=None):
-    c = opts.constrain
-    q = qeinsum("bsd,dhk->bshk", x, p[prefix + "wq"])
-    k = qeinsum("bsd,dhk->bshk", x, p[prefix + "wk"])
-    v = qeinsum("bsd,dhk->bshk", x, p[prefix + "wv"])
-    q = apply_rope(q, positions, theta=cfg.rope_theta)
-    k = apply_rope(k, positions, theta=cfg.rope_theta)
-    # decoder prefill with a lossy (bf16/int8) KV cache attends the values
-    # the cache will store (see transformer._round_kv); encoder K/V are
-    # never cached, so the encoder passes kv_round=None
-    ka, va = _round_kv(k, v, kv_round)
-    kx, vx = _expand_kv(ka, va, cfg)
-    qp = c(q[:, :, :, None, :], "batchlike", None, "heads_flat", None, None)
-    kx = c(kx, "batchlike", None, "heads_flat", None)
-    vx = c(vx, "batchlike", None, "heads_flat", None)
-    o = attn_mod.attention(qp, kx, vx, causal=causal, scale=cfg.head_dim ** -0.5,
-                           impl=opts.attn_impl, q_chunk=opts.q_chunk,
-                           kv_chunk=opts.kv_chunk, unroll=opts.unroll_scans)
-    o = o[:, :, :, 0, :] * head_mask(cfg, x.dtype)[None, None, :, None]
-    return qeinsum("bshk,hkd->bsd", o, p[prefix + "wo"]), (k, v)
-
-
 def _cross_attn_full(x, p, cfg, opts, enc_out, kv_round=None):
     """Full cross attention (train/prefill). Returns (out, (ck, cv)).
 
@@ -101,14 +78,44 @@ def _cross_attn_full(x, p, cfg, opts, enc_out, kv_round=None):
     return qeinsum("bshk,hkd->bsd", o, p["cwo"]), (ck, cv)
 
 
+def _cross_attn_cached(x, p, cfg, opts, cache, mode):
+    """Cross-attention against the slot's cached ck/cv rows — 'decode' runs
+    the single-query kernel at the fixed cross depth; 'chunk' runs full
+    non-causal attention over the chunk's C rows. (Cross-attention is NOT
+    part of the shared self-attention core: it has no rope, no causal mask
+    and no cache writes — only the projections below.)"""
+    b = x.shape[0]
+    kvp, gp = cfg.padded_kv_group
+    hm = head_mask(cfg, x.dtype)[None, None, :, None]
+    scale = cfg.head_dim ** -0.5
+    cq = qeinsum("bsd,dhk->bshk", x, p["cwq"])
+    if mode == "decode":
+        cqg = cq.reshape(b, 1, kvp, gp, cfg.head_dim)
+        se = cache["ck"].shape[1]
+        co = attn_mod.decode_attention(cqg, cache["ck"], cache["cv"],
+                                       jnp.full((b,), se, jnp.int32),
+                                       scale=scale)
+        co = co.reshape(b, 1, cfg.n_heads_padded, cfg.head_dim)
+    else:  # chunk
+        ckx, cvx = _expand_kv(cache["ck"].astype(x.dtype),
+                              cache["cv"].astype(x.dtype), cfg)
+        qp = cq[:, :, :, None, :]
+        co = attn_mod.attention(qp, ckx, cvx, causal=False, scale=scale,
+                                impl=opts.attn_impl, q_chunk=opts.q_chunk,
+                                kv_chunk=opts.kv_chunk,
+                                unroll=opts.unroll_scans)
+        co = co[:, :, :, 0, :]
+    return qeinsum("bshk,hkd->bsd", co * hm, p["cwo"])
+
+
 def encode(params, frames, cfg, opts: ExecOptions):
     x = opts.constrain(frames, "batchlike", None, None)
     positions = jnp.arange(frames.shape[1])[None, :]
 
     def body(h, lp):
         h = opts.constrain(h, "batchlike", opts.seq_axis, None)
-        a, _ = _self_attn(rms_norm(h, lp["attn_norm"]), lp, cfg, opts,
-                          positions, causal=False)
+        a, _ = attn_block(rms_norm(h, lp["attn_norm"]), lp, cfg, opts,
+                          positions=positions, mode="train", causal=False)
         h = h + a
         hn = rms_norm(h, lp["ffn_norm"])
         act = act_fn(glu_act(cfg.activation))
@@ -124,80 +131,36 @@ def encode(params, frames, cfg, opts: ExecOptions):
 
 
 def _dec_layer(h, lp, cfg, opts, positions, enc_out, mode, cache,
-               kv_round=None):
+               kv_round=None, chunk=None):
     c = opts.constrain
     if mode != "decode":
         h = c(h, "batchlike", opts.seq_axis, None)
-    act = act_fn(glu_act(cfg.activation))
+    # decoder self-attention IS the unified core (transformer.attn_block) —
+    # QKV/rope/round/write/attend land there exactly once for every mode.
+    # The decoder prefill with a lossy (bf16/int8) KV cache attends the
+    # values the cache will store (transformer._round_kv); encdec rope is the
+    # full-fraction default, so the shared rope call is identical.
+    a, new_cache = attn_block(rms_norm(h, lp["attn_norm"]), lp, cfg, opts,
+                              positions=positions, mode=mode, cache=cache,
+                              kv_round=kv_round if mode == "prefill" else None,
+                              chunk=chunk)
+    h = h + a
+    xn = rms_norm(h, lp["cross_norm"])
     if mode in ("train", "prefill"):
-        a, (k, v) = _self_attn(rms_norm(h, lp["attn_norm"]), lp, cfg, opts,
-                               positions, causal=True,
-                               kv_round=kv_round if mode == "prefill"
-                               else None)
-        h = h + a
         # the cross CACHE stays f32 under int8 KV (cache_shape), so only a
         # bf16 kv_round actually rounds the cross attention inputs
         cross_round = kv_round if (mode == "prefill"
                                    and kv_round is not None
                                    and kv_round != jnp.int8) else None
-        ca, (ck, cv) = _cross_attn_full(rms_norm(h, lp["cross_norm"]), lp, cfg,
-                                        opts, enc_out, kv_round=cross_round)
-        h = h + ca
-        new_cache = None
+        ca, (ck, cv) = _cross_attn_full(xn, lp, cfg, opts, enc_out,
+                                        kv_round=cross_round)
         if mode == "prefill":
-            new_cache = {"k": k, "v": v, "ck": ck, "cv": cv}
-    else:  # decode
-        b = h.shape[0]
-        pos_b = positions.reshape(-1)
-        xn = rms_norm(h, lp["attn_norm"])
-        q = qeinsum("bsd,dhk->bshk", xn, lp["wq"])
-        k = qeinsum("bsd,dhk->bshk", xn, lp["wk"])
-        v = qeinsum("bsd,dhk->bshk", xn, lp["wv"])
-        q = apply_rope(q, positions, theta=cfg.rope_theta)
-        k = apply_rope(k, positions, theta=cfg.rope_theta)
-        page_table = cache.get("page_table")
-        int8_kv = "ks" in cache         # self-KV only; cross K/V stay dense
-        k_scale = v_scale = None
-        if page_table is None:
-            if int8_kv:
-                k_cache, k_scale = _write_cache_q(
-                    cache["k"], cache["ks"], k, pos_b)
-                v_cache, v_scale = _write_cache_q(
-                    cache["v"], cache["vs"], v, pos_b)
-            else:
-                k_cache = _write_cache(cache["k"], k, pos_b)
-                v_cache = _write_cache(cache["v"], v, pos_b)
-        else:
-            if int8_kv:
-                k_cache, k_scale = _write_cache_paged_q(
-                    cache["k"], cache["ks"], k, pos_b, page_table)
-                v_cache, v_scale = _write_cache_paged_q(
-                    cache["v"], cache["vs"], v, pos_b, page_table)
-            else:
-                k_cache = _write_cache_paged(cache["k"], k, pos_b, page_table)
-                v_cache = _write_cache_paged(cache["v"], v, pos_b, page_table)
-        kvp, gp = cfg.padded_kv_group
-        hm = head_mask(cfg, h.dtype)[None, None, :, None]
-        qg = q.reshape(b, 1, kvp, gp, cfg.head_dim)
-        o = attn_mod.decode_attention(qg, k_cache, v_cache, pos_b + 1,
-                                      scale=cfg.head_dim ** -0.5,
-                                      page_table=page_table,
-                                      k_scale=k_scale, v_scale=v_scale)
-        o = o.reshape(b, 1, cfg.n_heads_padded, cfg.head_dim) * hm
-        h = h + qeinsum("bshk,hkd->bsd", o, lp["wo"])
-        xn = rms_norm(h, lp["cross_norm"])
-        cq = qeinsum("bsd,dhk->bshk", xn, lp["cwq"])
-        cqg = cq.reshape(b, 1, kvp, gp, cfg.head_dim)
-        se = cache["ck"].shape[1]
-        co = attn_mod.decode_attention(cqg, cache["ck"], cache["cv"],
-                                       jnp.full((b,), se, jnp.int32),
-                                       scale=cfg.head_dim ** -0.5)
-        co = co.reshape(b, 1, cfg.n_heads_padded, cfg.head_dim) * hm
-        h = h + qeinsum("bshk,hkd->bsd", co, lp["cwo"])
-        new_cache = {"k": k_cache, "v": v_cache}
-        if int8_kv:
-            new_cache["ks"], new_cache["vs"] = k_scale, v_scale
+            new_cache = dict(new_cache, ck=ck, cv=cv)
+    else:  # decode / chunk: read the slot's cached cross K/V
+        ca = _cross_attn_cached(xn, lp, cfg, opts, cache, mode)
+    h = h + ca
     hn = rms_norm(h, lp["ffn_norm"])
+    act = act_fn(glu_act(cfg.activation))
     ff = act(qeinsum("bsd,df->bsf", hn, lp["w1"])) \
         * qeinsum("bsd,df->bsf", hn, lp["w3"])
     ff = c(ff, "batchlike", None, "ff")
@@ -267,82 +230,34 @@ def prefill_chunk(params, batch, cache, cfg, opts: ExecOptions):
     additionally carries `slot` () int32 to address them."""
     tokens = batch["tokens"]
     start, length = batch["start"], batch["length"]
-    page_row = batch["page_row"]
     slot = batch["slot"]
-    int8_kv = "ks" in cache
     b, C = tokens.shape
     positions = start[:, None] + jnp.arange(C)[None, :]
     x = embed_tokens(params, tokens, cfg, opts)
     ck_s = jax.lax.dynamic_index_in_dim(cache["ck"], slot, 1, keepdims=True)
     cv_s = jax.lax.dynamic_index_in_dim(cache["cv"], slot, 1, keepdims=True)
-    kvp, gp = cfg.padded_kv_group
-    hm = head_mask(cfg, x.dtype)[None, None, :, None]
-    act = act_fn(glu_act(cfg.activation))
-    scale = cfg.head_dim ** -0.5
+    chunk = {"start": start, "length": length, "page_row": batch["page_row"]}
 
     def dyn(t, i):
         return jax.lax.dynamic_index_in_dim(t, i, 0, keepdims=False)
 
     def body(carry, xs):
-        (h, kc, vc, ksc, vsc) = carry if int8_kv else (*carry, None, None)
+        h, pools = carry
         lp, ck, cv, i = xs                       # ck/cv: (1, S_enc, KVp, D)
-        xn = rms_norm(h, lp["attn_norm"])
-        q = qeinsum("bsd,dhk->bshk", xn, lp["wq"])
-        k = qeinsum("bsd,dhk->bshk", xn, lp["wk"])
-        v = qeinsum("bsd,dhk->bshk", xn, lp["wv"])
-        q = apply_rope(q, positions, theta=cfg.rope_theta)
-        k = apply_rope(k, positions, theta=cfg.rope_theta)
-        pk, pv = dyn(kc, i), dyn(vc, i)
-        if int8_kv:
-            psk, psv = dyn(ksc, i), dyn(vsc, i)
-            pk, psk = _write_chunk_paged_q(pk, psk, k[0], start[0], length[0],
-                                           page_row)
-            pv, psv = _write_chunk_paged_q(pv, psv, v[0], start[0], length[0],
-                                           page_row)
-        else:
-            pk = _write_chunk_paged(pk, k[0], start[0], length[0], page_row)
-            pv = _write_chunk_paged(pv, v[0], start[0], length[0], page_row)
-        qg = q.reshape(b, C, kvp, gp, cfg.head_dim)
-        o = attn_mod.chunk_attention_paged(
-            qg, pk, pv, page_row[None], start, kv_len=start + length,
-            scale=scale,
-            k_scale=psk if int8_kv else None,
-            v_scale=psv if int8_kv else None)
-        o = o.reshape(b, C, cfg.n_heads_padded, cfg.head_dim) * hm
-        h = h + qeinsum("bshk,hkd->bsd", o, lp["wo"])
-        xn = rms_norm(h, lp["cross_norm"])
-        cq = qeinsum("bsd,dhk->bshk", xn, lp["cwq"])
-        ckx, cvx = _expand_kv(ck.astype(x.dtype), cv.astype(x.dtype), cfg)
-        qp = cq[:, :, :, None, :]
-        co = attn_mod.attention(qp, ckx, cvx, causal=False, scale=scale,
-                                impl=opts.attn_impl, q_chunk=opts.q_chunk,
-                                kv_chunk=opts.kv_chunk,
-                                unroll=opts.unroll_scans)
-        co = co[:, :, :, 0, :] * hm
-        h = h + qeinsum("bshk,hkd->bsd", co, lp["cwo"])
-        hn = rms_norm(h, lp["ffn_norm"])
-        ff = act(qeinsum("bsd,df->bsf", hn, lp["w1"])) \
-            * qeinsum("bsd,df->bsf", hn, lp["w3"])
-        h = h + qeinsum("bsf,fd->bsd", ff, lp["w2"])
-        kc = jax.lax.dynamic_update_index_in_dim(kc, pk, i, 0)
-        vc = jax.lax.dynamic_update_index_in_dim(vc, pv, i, 0)
-        if int8_kv:
-            ksc = jax.lax.dynamic_update_index_in_dim(ksc, psk, i, 0)
-            vsc = jax.lax.dynamic_update_index_in_dim(vsc, psv, i, 0)
-            return (h, kc, vc, ksc, vsc), None
-        return (h, kc, vc), None
+        layer_cache = {key: dyn(val, i) for key, val in pools.items()}
+        layer_cache["ck"], layer_cache["cv"] = ck, cv
+        h, new_cache = _dec_layer(h, lp, cfg, opts, positions, None, "chunk",
+                                  layer_cache, chunk=chunk)
+        pools = {key: jax.lax.dynamic_update_index_in_dim(
+            val, new_cache[key], i, 0) for key, val in pools.items()}
+        return (h, pools), None
 
     from repro.models.common import scan_or_unroll
-    init = (x, cache["k"], cache["v"])
-    if int8_kv:
-        init = init + (cache["ks"], cache["vs"])
-    carry, _ = scan_or_unroll(
-        body, init, (params["dec"], ck_s, cv_s, jnp.arange(cfg.n_dec_layers)),
+    (_, pools), _ = scan_or_unroll(
+        body, (x, _pools_of(cache)),
+        (params["dec"], ck_s, cv_s, jnp.arange(cfg.n_dec_layers)),
         unroll=opts.unroll_scans)
-    new_cache = dict(cache, k=carry[1], v=carry[2])
-    if int8_kv:
-        new_cache["ks"], new_cache["vs"] = carry[3], carry[4]
-    return new_cache
+    return dict(cache, **pools)
 
 
 def prefill(params, batch, cfg, opts: ExecOptions):
@@ -361,47 +276,35 @@ def decode_step(params, batch, cache, cfg, opts: ExecOptions):
     xs (no ys re-emission) — avoids double-buffering either cache."""
     positions = cache["pos"]
     page_table = cache.get("page_table")
-    int8_kv = "ks" in cache
     x = embed_tokens(params, batch["tokens"], cfg, opts)
 
     def dyn(t, i):
         return jax.lax.dynamic_index_in_dim(t, i, 0, keepdims=False)
 
     def body(carry, xs):
-        (h, kc, vc, ksc, vsc) = carry if int8_kv else (*carry, None, None)
+        h, pools = carry
         lp, ck, cv, i = xs
-        layer_cache = {"k": dyn(kc, i), "v": dyn(vc, i), "ck": ck, "cv": cv}
-        if int8_kv:
-            layer_cache["ks"], layer_cache["vs"] = dyn(ksc, i), dyn(vsc, i)
+        layer_cache = {key: dyn(val, i) for key, val in pools.items()}
+        layer_cache["ck"], layer_cache["cv"] = ck, cv
         if page_table is not None:
             layer_cache["page_table"] = page_table
         h, new_cache = _dec_layer(h, lp, cfg, opts, positions[:, None],
                                   None, "decode", layer_cache)
-        kc = jax.lax.dynamic_update_index_in_dim(kc, new_cache["k"], i, 0)
-        vc = jax.lax.dynamic_update_index_in_dim(vc, new_cache["v"], i, 0)
-        if int8_kv:
-            ksc = jax.lax.dynamic_update_index_in_dim(ksc, new_cache["ks"], i, 0)
-            vsc = jax.lax.dynamic_update_index_in_dim(vsc, new_cache["vs"], i, 0)
-            return (h, kc, vc, ksc, vsc), None
-        return (h, kc, vc), None
+        pools = {key: jax.lax.dynamic_update_index_in_dim(
+            val, new_cache[key], i, 0) for key, val in pools.items()}
+        return (h, pools), None
 
     from repro.models.common import scan_or_unroll
-    init = (x, cache["k"], cache["v"])
-    if int8_kv:
-        init = init + (cache["ks"], cache["vs"])
-    carry, _ = scan_or_unroll(
-        body, init,
+    (x, pools), _ = scan_or_unroll(
+        body, (x, _pools_of(cache)),
         (params["dec"], cache["ck"], cache["cv"],
          jnp.arange(cfg.n_dec_layers)),
         unroll=opts.unroll_scans)
-    x, kc, vc = carry[:3]
     x = rms_norm(x, params["final_norm"])
     logits = jnp.einsum("bsd,vd->bsv", x,
                         lm_head_weights(params, cfg)).astype(jnp.float32)
-    new_cache = {"k": kc, "v": vc, "ck": cache["ck"], "cv": cache["cv"],
-                 "pos": positions + 1}
-    if int8_kv:
-        new_cache["ks"], new_cache["vs"] = carry[3], carry[4]
+    new_cache = dict(pools, ck=cache["ck"], cv=cache["cv"],
+                     pos=positions + 1)
     if page_table is not None:
         new_cache["page_table"] = page_table
     return logits, new_cache

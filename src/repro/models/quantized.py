@@ -46,6 +46,12 @@ _QKEY = "int8_q"
 # (axis 0 is always the layer stack; MoE expert weights contract over their
 #  axis-2 `d` so the scale keeps the expert dim — per-expert channels.)
 _ATTN_AXES = {"wq": (1,), "wk": (1,), "wv": (1,), "wo": (1, 2)}
+# MLA (models/mla.py): the d_model-sized projections quantize like GQA's;
+# the absorbed per-head up-projections wk_b/wv_b stay f32 — they ride plain
+# einsums inside the latent attention math and their FLOPs/bytes are noise
+# (r × Hp × head_dim vs d_model × Hp × head_dim).
+_MLA_AXES = {"wq": (1,), "wq_a": (1,), "wq_b": (1,), "wkv_a": (1,),
+             "wo": (1, 2)}
 _FFN_AXES = {"w1": (1,), "w3": (1,), "w2": (1,)}
 _MOE_AXES = {"w1": (2,), "w3": (2,), "w2": (2,),
              "shared_w1": (1,), "shared_w3": (1,), "shared_w2": (1,)}
@@ -84,7 +90,7 @@ def quantize_params(params, cfg):
     """
     fam = cfg.family
     if fam in ("dense", "moe", "vlm"):
-        table = dict(_ATTN_AXES)
+        table = dict(_MLA_AXES if cfg.attn_kind == "mla" else _ATTN_AXES)
         table.update(_MOE_AXES if fam == "moe" else _FFN_AXES)
         return dict(params, layers=_quantize_block(params["layers"], table))
     if fam == "encdec":

@@ -56,6 +56,18 @@ def _dt(cfg: ArchConfig):
 def build_model(cfg: ArchConfig, opts: Optional[ExecOptions] = None) -> ModelApi:
     opts = opts or ExecOptions()
     fam = cfg.family
+    if cfg.attn_kind == "mla":
+        # MLA is an attention family, not a model family: it plugs into the
+        # decoder-only stack via the unified attn_block core (models/mla.py)
+        # and inherits every transformer entry point below unchanged.
+        if fam not in ("dense", "moe", "vlm"):
+            raise ValueError(
+                f"attn_kind='mla' needs the decoder-only stack, got "
+                f"family={fam!r} ({cfg.name})")
+        if min(cfg.kv_lora_rank, cfg.qk_nope_dim, cfg.qk_rope_dim) <= 0:
+            raise ValueError(
+                f"mla config {cfg.name} must set kv_lora_rank/qk_nope_dim/"
+                f"qk_rope_dim")
     if fam in ("dense", "moe", "vlm"):
         mod = transformer
         sch = transformer.schema(cfg)

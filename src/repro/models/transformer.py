@@ -105,7 +105,11 @@ def schema(cfg) -> Dict[str, Any]:
         "attn_norm": ParamDef((L, d), ("layers", None), init=norm_init),
         "ffn_norm": ParamDef((L, d), ("layers", None), init=norm_init),
     }
-    layers.update(attn_schema(cfg, L))
+    if cfg.attn_kind == "mla":
+        from repro.models import mla as mla_mod
+        layers.update(mla_mod.mla_schema(cfg, L))
+    else:
+        layers.update(attn_schema(cfg, L))
     if cfg.family == "moe":
         layers.update(moe_mod.moe_schema(cfg, L))
     else:
@@ -144,6 +148,20 @@ def _expand_kv(k, v, cfg):
     return k, v
 
 
+def _round_rows(rows, kv_round):
+    """Round one K/V (or MLA latent) tensor through the cache storage dtype.
+
+    int8 takes the full quantize→dequantize round trip (the map the
+    paste/decode/chunk write paths apply); any float storage dtype — bf16 or
+    fp8 e5m2 — is a cast round trip with no scale tensors."""
+    if kv_round is None:
+        return rows
+    if kv_round == jnp.int8:
+        q, s = quantize_kv_rows(rows)
+        return dequantize_kv_rows(q, s, rows.dtype)
+    return rows.astype(kv_round).astype(rows.dtype)
+
+
 def _round_kv(k, v, kv_round):
     """Round K/V through the cache storage dtype before attention.
 
@@ -151,36 +169,53 @@ def _round_kv(k, v, kv_round):
     attention must see the SAME values the cache will hold — otherwise a
     chunked prefill (which attends already-pasted pool rows) and a monolithic
     prefill (which would attend fresh activations) diverge numerically and
-    the chunked-vs-oracle token-exactness breaks. int8 takes the full
-    quantize→dequantize round trip (the map the paste/decode write paths
-    apply); bf16 is a cast round trip. This also makes prefill and decode
-    numerics consistent: decode attention always reads stored rows.
+    the chunked-vs-oracle token-exactness breaks. This also makes prefill and
+    decode numerics consistent: decode attention always reads stored rows.
     """
-    if kv_round is None:
-        return k, v
-    if kv_round == jnp.int8:
-        kq, ks = quantize_kv_rows(k)
-        vq, vs = quantize_kv_rows(v)
-        return (dequantize_kv_rows(kq, ks, k.dtype),
-                dequantize_kv_rows(vq, vs, v.dtype))
-    return k.astype(kv_round).astype(k.dtype), v.astype(kv_round).astype(v.dtype)
+    return _round_rows(k, kv_round), _round_rows(v, kv_round)
+
+
+def _pool_entry(**pools):
+    """Updated-cache dict from write results, dropping absent scale pools."""
+    return {key: val for key, val in pools.items() if val is not None}
 
 
 def attn_block(x, p, cfg, opts: ExecOptions, *, positions,
-               mode: str, cache: Optional[dict] = None, kv_round=None):
-    """Self-attention. Returns (out, new_cache_entry).
+               mode: str, cache: Optional[dict] = None, kv_round=None,
+               chunk: Optional[dict] = None, causal: bool = True):
+    """Self-attention — THE per-layer attention core. Returns
+    (out, new_cache_entry).
 
-    mode: 'train' / 'prefill' (full attention over S positions; 'train' skips
-    cache emission so the layer scan carries nothing dead) or 'decode' (one
-    position; cache holds (B, Smax, KV, D) K/V; positions (B,1) write index).
-    kv_round: cache storage dtype for lossy (bf16/int8) KV caches — prefill
-    attends the rounded values the cache will store (see `_round_kv`).
+    One body owns all four execution modes, for every attention family (GQA
+    below; `cfg.attn_kind == 'mla'` dispatches to `models/mla.py`, which
+    shares the same mode contract and write helpers):
+      'train'   full attention over S positions; no cache emission (the layer
+                scan carries nothing dead).
+      'prefill' full attention; emits per-layer K/V rows for the engine's
+                paste. Lossy caches attend the rounded values the cache will
+                store (`_round_kv` / kv_round).
+      'decode'  one position per sequence; writes the new row into the dense
+                (B, Smax, KV, D) cache or the paged pool (via
+                cache['page_table']) and attends the stored rows.
+      'chunk'   chunked prefill (B=1): streams C rows into the paged pool
+                through the slot's page row (`chunk=` dict with start (1,),
+                length (1,), page_row (pages_per_seq,)) and runs chunk
+                attention against the slot's live pages.
+    `causal=False` (train/prefill only) serves the encdec encoder. int8
+    storage is detected by the scale pools ('ks'/'vs') riding in `cache`;
+    fp8 (e5m2) storage is a bare dtype cast, no scales.
     """
+    if cfg.attn_kind == "mla":
+        from repro.models import mla as mla_mod
+        return mla_mod.mla_attn_block(
+            x, p, cfg, opts, positions=positions, mode=mode, cache=cache,
+            kv_round=kv_round, chunk=chunk, causal=causal)
     c = opts.constrain
     q, k, v = _project_qkv(x, p, cfg)
     q = apply_rope(q, positions, fraction=cfg.rope_fraction, theta=cfg.rope_theta)
     k = apply_rope(k, positions, fraction=cfg.rope_fraction, theta=cfg.rope_theta)
     scale = cfg.head_dim ** -0.5
+    kvp, gp = cfg.padded_kv_group
 
     if mode in ("train", "prefill"):
         ka, va = (k, v) if mode == "train" else _round_kv(k, v, kv_round)
@@ -189,47 +224,38 @@ def attn_block(x, p, cfg, opts: ExecOptions, *, positions,
         kx = c(kx, "batchlike", None, "heads_flat", None)
         vx = c(vx, "batchlike", None, "heads_flat", None)
         o = attn_mod.attention(
-            qp, kx, vx, causal=True, window=cfg.window, scale=scale,
+            qp, kx, vx, causal=causal, window=cfg.window, scale=scale,
             impl=opts.attn_impl, q_chunk=opts.q_chunk, kv_chunk=opts.kv_chunk,
             unroll=opts.unroll_scans)
         o = o[:, :, :, 0, :]
         new_cache = {"k": k, "v": v} if mode == "prefill" else None
+    elif mode == "chunk":
+        assert cache is not None and chunk is not None
+        b, C = x.shape[:2]
+        pk, psk = _write_chunk(cache, "k", k[0], chunk)
+        pv, psv = _write_chunk(cache, "v", v[0], chunk)
+        qg = q.reshape(b, C, kvp, gp, cfg.head_dim)
+        o = attn_mod.chunk_attention_paged(
+            qg, pk, pv, chunk["page_row"][None], chunk["start"],
+            kv_len=chunk["start"] + chunk["length"],
+            window=cfg.window, scale=scale, k_scale=psk, v_scale=psv)
+        o = o.reshape(b, C, cfg.n_heads_padded, cfg.head_dim)
+        new_cache = _pool_entry(k=pk, v=pv, ks=psk, vs=psv)
     else:  # decode
         assert cache is not None
         b = x.shape[0]
         pos_b = positions.reshape(-1)             # (B,)
         page_table = cache.get("page_table")
-        int8_kv = "ks" in cache                   # int8 storage + row scales
         # write this step's k/v at each sequence position `pos_b`
-        if page_table is None:
-            if int8_kv:
-                k_cache, k_scale = _write_cache_q(
-                    cache["k"], cache["ks"], k, pos_b)
-                v_cache, v_scale = _write_cache_q(
-                    cache["v"], cache["vs"], v, pos_b)
-            else:
-                k_cache = _write_cache(cache["k"], k, pos_b)
-                v_cache = _write_cache(cache["v"], v, pos_b)
-        else:
-            if int8_kv:
-                k_cache, k_scale = _write_cache_paged_q(
-                    cache["k"], cache["ks"], k, pos_b, page_table)
-                v_cache, v_scale = _write_cache_paged_q(
-                    cache["v"], cache["vs"], v, pos_b, page_table)
-            else:
-                k_cache = _write_cache_paged(cache["k"], k, pos_b, page_table)
-                v_cache = _write_cache_paged(cache["v"], v, pos_b, page_table)
-        kvp, gp = cfg.padded_kv_group
+        k_cache, k_scale = _write_row(cache, "k", k, pos_b, page_table)
+        v_cache, v_scale = _write_row(cache, "v", v, pos_b, page_table)
         qg = q.reshape(b, 1, kvp, gp, cfg.head_dim)
         o = attn_mod.decode_attention(
             qg, k_cache, v_cache, pos_b + 1,
             window=cfg.window, scale=scale, page_table=page_table,
-            k_scale=k_scale if int8_kv else None,
-            v_scale=v_scale if int8_kv else None)
+            k_scale=k_scale, v_scale=v_scale)
         o = o.reshape(b, 1, cfg.n_heads_padded, cfg.head_dim)
-        new_cache = {"k": k_cache, "v": v_cache}
-        if int8_kv:
-            new_cache["ks"], new_cache["vs"] = k_scale, v_scale
+        new_cache = _pool_entry(k=k_cache, v=v_cache, ks=k_scale, vs=v_scale)
 
     o = o * head_mask(cfg, o.dtype)[None, None, :, None]
     out = qeinsum("bshk,hkd->bsd", o, p["wo"])
@@ -325,6 +351,43 @@ def _write_chunk_paged_q(pool, spool, rows, start, length, page_row):
     return pool.at[page, r].set(q), spool.at[page, r].set(s)
 
 
+def _write_row(cache, key, kv_new, positions, page_table):
+    """Write one decode row into `cache[key]` — dense or paged, any storage
+    dtype. Returns (pool, scales-or-None). int8 storage is detected by the
+    sibling scale pool `cache[key + 's']`; float storage (f32/bf16/fp8) is a
+    bare cast on write."""
+    if key + "s" in cache:
+        if page_table is None:
+            return _write_cache_q(cache[key], cache[key + "s"], kv_new,
+                                  positions)
+        return _write_cache_paged_q(cache[key], cache[key + "s"], kv_new,
+                                    positions, page_table)
+    if page_table is None:
+        return _write_cache(cache[key], kv_new, positions), None
+    return _write_cache_paged(cache[key], kv_new, positions, page_table), None
+
+
+def _write_chunk(cache, key, rows, chunk):
+    """Stream one prefill chunk's (C, KV, D) rows into the paged pool
+    `cache[key]` at global positions start+i. Returns (pool, scales-or-None);
+    same int8 detection as `_write_row`."""
+    start, length = chunk["start"][0], chunk["length"][0]
+    if key + "s" in cache:
+        return _write_chunk_paged_q(cache[key], cache[key + "s"], rows,
+                                    start, length, chunk["page_row"])
+    return _write_chunk_paged(cache[key], rows, start, length,
+                              chunk["page_row"]), None
+
+
+_POOL_KEYS = ("k", "v", "ks", "vs")
+
+
+def _pools_of(cache):
+    """The layer-stacked K/V pools present in a cache — family-agnostic:
+    GQA carries k/v (+ int8 scale pools), MLA a single latent pool."""
+    return {key: cache[key] for key in _POOL_KEYS if key in cache}
+
+
 def prefill_chunk(params, batch, cache, cfg, opts: ExecOptions):
     """One fixed-size chunk of page-granular prefill (PR 4).
 
@@ -347,82 +410,39 @@ def prefill_chunk(params, batch, cache, cfg, opts: ExecOptions):
     mid-prefill slots stay invisible to the batched decode step (its garbage
     writes for them land on the null page — the idle-slot-drift guard).
 
-    NOTE: the per-layer body below MIRRORS `layer_fn`/`attn_block` (and
-    encdec.prefill_chunk mirrors encdec._dec_layer) with only the attention
-    swapped for pool-write + chunk_attention_paged. Any layer-math change
-    (norm variant, rope args, softcap, FFN routing) must land in both, or
-    the chunked-vs-oracle token-exactness tests will catch the drift —
-    folding the chunk write/attend into attn_block is a recorded follow-on.
+    The scan body is a thin wrapper over `layer_fn(mode='chunk')` — the
+    per-layer math lives ONCE in `attn_block`, so every execution path
+    (train/prefill/decode/chunk, every attention family) inherits any
+    layer-math change from the same body.
     """
     tokens = batch["tokens"]
     start, length = batch["start"], batch["length"]
-    page_row = batch["page_row"]
-    int8_kv = "ks" in cache
     b, C = tokens.shape
     positions = start[:, None] + jnp.arange(C)[None, :]
     x = embed_tokens(params, tokens, cfg, opts)
     if cfg.family == "vlm" and "patch_rows" in batch:
         in_patch = (positions < batch["n_patch"][:, None])[..., None]
         x = jnp.where(in_patch, batch["patch_rows"].astype(x.dtype), x)
+    chunk = {"start": start, "length": length, "page_row": batch["page_row"]}
     dyn = functools.partial(jax.lax.dynamic_index_in_dim, axis=0,
                             keepdims=False)
-    kvp, gp = cfg.padded_kv_group
-    hm = head_mask(cfg, x.dtype)[None, None, :, None]
-    scale = cfg.head_dim ** -0.5
 
     def body(carry, xs):
-        (h, kc, vc, ksc, vsc) = carry if int8_kv else (*carry, None, None)
+        h, pools = carry
         lp, i = xs
-        hn = rms_norm(h, lp["attn_norm"], plus_one=cfg.norm_plus_one)
-        q, k, v = _project_qkv(hn, lp, cfg)
-        q = apply_rope(q, positions, fraction=cfg.rope_fraction,
-                       theta=cfg.rope_theta)
-        k = apply_rope(k, positions, fraction=cfg.rope_fraction,
-                       theta=cfg.rope_theta)
-        pk, pv = dyn(kc, i), dyn(vc, i)
-        if int8_kv:
-            psk, psv = dyn(ksc, i), dyn(vsc, i)
-            pk, psk = _write_chunk_paged_q(pk, psk, k[0], start[0], length[0],
-                                           page_row)
-            pv, psv = _write_chunk_paged_q(pv, psv, v[0], start[0], length[0],
-                                           page_row)
-        else:
-            pk = _write_chunk_paged(pk, k[0], start[0], length[0], page_row)
-            pv = _write_chunk_paged(pv, v[0], start[0], length[0], page_row)
-        qg = q.reshape(b, C, kvp, gp, cfg.head_dim)
-        o = attn_mod.chunk_attention_paged(
-            qg, pk, pv, page_row[None], start, kv_len=start + length,
-            window=cfg.window, scale=scale,
-            k_scale=psk if int8_kv else None,
-            v_scale=psv if int8_kv else None)
-        o = o.reshape(b, C, cfg.n_heads_padded, cfg.head_dim) * hm
-        h = h + qeinsum("bshk,hkd->bsd", o, lp["wo"])
-        hn2 = rms_norm(h, lp["ffn_norm"], plus_one=cfg.norm_plus_one)
-        if cfg.family == "moe":
-            f = moe_mod.moe_ffn(hn2, lp, _maybe_group(cfg, opts),
-                                constrain=opts.constrain)
-        else:
-            f = dense_ffn(hn2, lp, cfg, opts)
-        h = h + f
-        kc = jax.lax.dynamic_update_index_in_dim(kc, pk, i, 0)
-        vc = jax.lax.dynamic_update_index_in_dim(vc, pv, i, 0)
-        if int8_kv:
-            ksc = jax.lax.dynamic_update_index_in_dim(ksc, psk, i, 0)
-            vsc = jax.lax.dynamic_update_index_in_dim(vsc, psv, i, 0)
-            return (h, kc, vc, ksc, vsc), None
-        return (h, kc, vc), None
+        layer_cache = {key: dyn(val, i) for key, val in pools.items()}
+        h, new_cache = layer_fn(h, lp, cfg, opts, positions=positions,
+                                mode="chunk", cache=layer_cache, chunk=chunk)
+        pools = {key: jax.lax.dynamic_update_index_in_dim(
+            val, new_cache[key], i, 0) for key, val in pools.items()}
+        return (h, pools), None
 
     from repro.models.common import scan_or_unroll
-    init = (x, cache["k"], cache["v"])
-    if int8_kv:
-        init = init + (cache["ks"], cache["vs"])
-    carry, _ = scan_or_unroll(
-        body, init, (params["layers"], jnp.arange(cfg.n_layers)),
+    (_, pools), _ = scan_or_unroll(
+        body, (x, _pools_of(cache)),
+        (params["layers"], jnp.arange(cfg.n_layers)),
         unroll=opts.unroll_scans)
-    new_cache = dict(cache, k=carry[1], v=carry[2])
-    if int8_kv:
-        new_cache["ks"], new_cache["vs"] = carry[3], carry[4]
-    return new_cache
+    return dict(cache, **pools)
 
 
 def dense_ffn(x, p, cfg, opts: ExecOptions):
@@ -435,13 +455,13 @@ def dense_ffn(x, p, cfg, opts: ExecOptions):
 
 
 def layer_fn(x, lp, cfg, opts: ExecOptions, *, positions, mode,
-             cache: Optional[dict] = None, kv_round=None):
+             cache: Optional[dict] = None, kv_round=None, chunk=None):
     c = opts.constrain
     x = c(x, "batchlike", opts.seq_axis, None)
     a, new_cache = attn_block(
         rms_norm(x, lp["attn_norm"], plus_one=cfg.norm_plus_one),
         lp, cfg, opts, positions=positions, mode=mode, cache=cache,
-        kv_round=kv_round)
+        kv_round=kv_round, chunk=chunk)
     x = x + a
     h = rms_norm(x, lp["ffn_norm"], plus_one=cfg.norm_plus_one)
     if cfg.family == "moe":
@@ -570,7 +590,7 @@ def prefill_cache(params, batch, cfg, opts: ExecOptions):
                            patch_embeds=batch.get("patch_embeds"),
                            mode="prefill", kv_round=_kv_round_of(batch))
     b, s = batch["tokens"].shape
-    return {"k": kv["k"], "v": kv["v"], "pos": jnp.full((b,), s, jnp.int32)}
+    return dict(kv, pos=jnp.full((b,), s, jnp.int32))
 
 
 def prefill(params, batch, cfg, opts: ExecOptions):
@@ -582,9 +602,7 @@ def prefill(params, batch, cfg, opts: ExecOptions):
     logits = jnp.einsum("bsd,vd->bsv", last, lm_head_weights(params, cfg))
     logits = softcap(logits.astype(jnp.float32), cfg.logit_softcap)
     b, s = batch["tokens"].shape
-    cache = {"k": kv["k"], "v": kv["v"],
-             "pos": jnp.full((b,), s, jnp.int32)}
-    return logits, cache
+    return logits, dict(kv, pos=jnp.full((b,), s, jnp.int32))
 
 
 def decode_step(params, batch, cache, cfg, opts: ExecOptions):
@@ -597,69 +615,59 @@ def decode_step(params, batch, cache, cfg, opts: ExecOptions):
     tokens = batch["tokens"]
     positions = cache["pos"]                      # (B,) next position to write
     page_table = cache.get("page_table")          # read-only within the step
-    int8_kv = "ks" in cache                       # int8 pools + f16 row scales
     x = embed_tokens(params, tokens, cfg, opts)
     dyn = functools.partial(jax.lax.dynamic_index_in_dim, axis=0,
                             keepdims=False)
 
     def body(carry, xs):
-        (h, kc, vc, ksc, vsc) = carry if int8_kv else (*carry, None, None)
+        h, pools = carry
         lp, i = xs
-        layer_cache = {"k": dyn(kc, i), "v": dyn(vc, i)}
-        if int8_kv:
-            layer_cache["ks"], layer_cache["vs"] = dyn(ksc, i), dyn(vsc, i)
+        layer_cache = {key: dyn(val, i) for key, val in pools.items()}
         if page_table is not None:
             layer_cache["page_table"] = page_table
         h, new_cache = layer_fn(h, lp, cfg, opts,
                                 positions=positions[:, None], mode="decode",
                                 cache=layer_cache)
-        kc = jax.lax.dynamic_update_index_in_dim(kc, new_cache["k"], i, 0)
-        vc = jax.lax.dynamic_update_index_in_dim(vc, new_cache["v"], i, 0)
-        if int8_kv:
-            ksc = jax.lax.dynamic_update_index_in_dim(ksc, new_cache["ks"], i, 0)
-            vsc = jax.lax.dynamic_update_index_in_dim(vsc, new_cache["vs"], i, 0)
-            return (h, kc, vc, ksc, vsc), None
-        return (h, kc, vc), None
+        pools = {key: jax.lax.dynamic_update_index_in_dim(
+            val, new_cache[key], i, 0) for key, val in pools.items()}
+        return (h, pools), None
 
     from repro.models.common import scan_or_unroll
-    init = (x, cache["k"], cache["v"])
-    if int8_kv:
-        init = init + (cache["ks"], cache["vs"])
-    carry, _ = scan_or_unroll(
-        body, init, (params["layers"], jnp.arange(cfg.n_layers)),
+    (x, pools), _ = scan_or_unroll(
+        body, (x, _pools_of(cache)),
+        (params["layers"], jnp.arange(cfg.n_layers)),
         unroll=opts.unroll_scans)
-    x, kc, vc = carry[:3]
     x = rms_norm(x, params["final_norm"], plus_one=cfg.norm_plus_one)
     logits = jnp.einsum("bsd,vd->bsv", x, lm_head_weights(params, cfg))
     logits = softcap(logits.astype(jnp.float32), cfg.logit_softcap)
-    new_cache = {"k": kc, "v": vc, "pos": positions + 1}
-    if int8_kv:
-        new_cache["ks"], new_cache["vs"] = carry[3], carry[4]
+    new_cache = dict(pools, pos=positions + 1)
     if page_table is not None:
         new_cache["page_table"] = page_table
     return logits, new_cache
 
 
 def paged_kv_shapes(L: int, batch: int, max_len: int, kv: int, hd: int,
-                    dtype, page_size: int, n_pages: Optional[int]):
+                    dtype, page_size: int, n_pages: Optional[int],
+                    keys: Tuple[str, ...] = ("k", "v")):
     """Shared paged-pool sizing contract (transformer + encdec cache_shape):
-    (L, n_pages, page_size, KV, D) K/V pools + a (B, max_len // page_size)
-    page table. Physical page 0 is reserved by the serving engine as the null
-    page, so `n_pages` defaults to one more than the dense worst case
-    (callers size it down to expected live tokens)."""
+    (L, n_pages, page_size, KV, D) pools + a (B, max_len // page_size) page
+    table. `keys` names the pools — ('k', 'v') for GQA, ('k',) for MLA's
+    single latent pool. Physical page 0 is reserved by the serving engine as
+    the null page, so `n_pages` defaults to one more than the dense worst
+    case (callers size it down to expected live tokens)."""
     assert max_len % page_size == 0, (max_len, page_size)
     pages_per_seq = max_len // page_size
     if n_pages is None:
         n_pages = 1 + batch * pages_per_seq
     shapes = {
-        "k": jax.ShapeDtypeStruct((L, n_pages, page_size, kv, hd), dtype),
-        "v": jax.ShapeDtypeStruct((L, n_pages, page_size, kv, hd), dtype),
-        "page_table": jax.ShapeDtypeStruct((batch, pages_per_seq), jnp.int32),
-        "pos": jax.ShapeDtypeStruct((batch,), jnp.int32),
-    }
+        key: jax.ShapeDtypeStruct((L, n_pages, page_size, kv, hd), dtype)
+        for key in keys}
+    shapes["page_table"] = jax.ShapeDtypeStruct((batch, pages_per_seq),
+                                                jnp.int32)
+    shapes["pos"] = jax.ShapeDtypeStruct((batch,), jnp.int32)
     if dtype == jnp.int8:   # per-row (token × kv-head) dequant scales
-        for key in ("ks", "vs"):
-            shapes[key] = jax.ShapeDtypeStruct(
+        for key in keys:
+            shapes[key + "s"] = jax.ShapeDtypeStruct(
                 (L, n_pages, page_size, kv), SCALE_DTYPE)
     return shapes
 
@@ -667,23 +675,31 @@ def paged_kv_shapes(L: int, batch: int, max_len: int, kv: int, hd: int,
 def cache_shape(cfg, batch: int, max_len: int, dtype=jnp.bfloat16, *,
                 page_size: Optional[int] = None,
                 n_pages: Optional[int] = None):
-    """Abstract KV-cache pytree (stacked over layers; kv_pad heads).
+    """Abstract KV-cache pytree (stacked over layers).
 
-    Dense (default): per-slot (L, B, max_len, KV, D) K/V rows.
+    GQA: kv_pad heads × head_dim K and V rows. MLA (cfg.attn_kind='mla'):
+    ONE latent pool of (kv_lora_rank + qk_rope_dim)-wide rows, KV-head dim 1
+    — the per-token bytes the latent family exists to shrink.
+    Dense (default): per-slot (L, B, max_len, KV, D) rows.
     Paged (`page_size=`): shared page pools — see `paged_kv_shapes`.
-    dtype=jnp.int8 (either layout): K/V stored int8 plus per-row f16 dequant
-    scale tensors 'ks'/'vs' — the serving engine's kv_dtype='int8' layout."""
-    L, kv, hd = cfg.n_layers, cfg.kv_pad, cfg.head_dim
+    dtype=jnp.int8 (either layout): rows stored int8 plus per-row f16 dequant
+    scale tensors ('ks'/'vs') — the serving engine's kv_dtype='int8' layout.
+    dtype=jnp.float8_e5m2: bare fp8 rows, no scale tensors (dense layout;
+    the engine keeps paged fp8 pools a follow-on)."""
+    L = cfg.n_layers
+    if cfg.attn_kind == "mla":
+        kv, hd, keys = 1, cfg.kv_lora_rank + cfg.qk_rope_dim, ("k",)
+    else:
+        kv, hd, keys = cfg.kv_pad, cfg.head_dim, ("k", "v")
     if page_size is None:
         shapes = {
-            "k": jax.ShapeDtypeStruct((L, batch, max_len, kv, hd), dtype),
-            "v": jax.ShapeDtypeStruct((L, batch, max_len, kv, hd), dtype),
-            "pos": jax.ShapeDtypeStruct((batch,), jnp.int32),
-        }
+            key: jax.ShapeDtypeStruct((L, batch, max_len, kv, hd), dtype)
+            for key in keys}
+        shapes["pos"] = jax.ShapeDtypeStruct((batch,), jnp.int32)
         if dtype == jnp.int8:
-            for key in ("ks", "vs"):
-                shapes[key] = jax.ShapeDtypeStruct(
+            for key in keys:
+                shapes[key + "s"] = jax.ShapeDtypeStruct(
                     (L, batch, max_len, kv), SCALE_DTYPE)
         return shapes
     return paged_kv_shapes(L, batch, max_len, kv, hd, dtype, page_size,
-                           n_pages)
+                           n_pages, keys)

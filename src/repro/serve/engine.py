@@ -135,7 +135,9 @@ import numpy as np
 
 from repro.models.quantized import quantize_kv_rows
 from repro.serve.faults import FaultPlan
-from repro.serve.sampling import clamp_sample_params, sample_tokens
+from repro.serve.sampling import (
+    apply_logit_processors, clamp_rep_penalty, clamp_sample_params,
+    sample_tokens)
 
 _ATTN_FAMILIES = ("dense", "moe", "vlm", "encdec")
 
@@ -147,7 +149,10 @@ class EngineOverloaded(RuntimeError):
 
 _KV_DTYPES = {None: jnp.float32, "f32": jnp.float32, "float32": jnp.float32,
               "bf16": jnp.bfloat16, "bfloat16": jnp.bfloat16,
-              "int8": jnp.int8}
+              "int8": jnp.int8,
+              # fp8 KV: bare e5m2 rows, no scale tensors (dense layout only —
+              # paged fp8 pools are a recorded follow-on)
+              "fp8": jnp.float8_e5m2, "e5m2": jnp.float8_e5m2}
 
 
 def bucket_length(plen: int, max_len: int) -> int:
@@ -232,6 +237,10 @@ class Request:
     top_k: int = 0
     top_p: float = 1.0
     seed: int = 0
+    # logit processors (PR 7): repetition penalty over prompt + emitted
+    # tokens (1.0 = off, HF convention) and an additive per-token logit bias
+    rep_penalty: float = 1.0
+    logit_bias: Optional[Dict[int, float]] = None
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     t_enqueue: float = 0.0
@@ -318,7 +327,9 @@ def _make_paste(fam: str):
         if fam in _ATTN_FAMILIES:
             plen = pf["k"].shape[2]
             int8_kv = "ks" in c
-            for key in ("k", "v"):
+            # pools present in the prefill cache: ('k', 'v') for GQA,
+            # ('k',) for MLA's single latent pool (models/mla.py)
+            for key in (key for key in ("k", "v") if key in pf):
                 if int8_kv:
                     # quantize prompt rows per (position, kv head) — the same
                     # map the decode write path applies, so dense and paged
@@ -371,7 +382,8 @@ def _make_paste_paged(fam: str):
         blen = pf["k"].shape[2]
         n_prompt_pages = -(-blen // ps)    # static per prefill bucket
         int8_kv = "ks" in c
-        for key in ("k", "v"):
+        # ('k', 'v') for GQA, ('k',) for MLA's single latent pool
+        for key in (key for key in ("k", "v") if key in pf):
             pool = c[key]
             if int8_kv:
                 qrows, srows = quantize_kv_rows(pf[key][:, 0])  # (L,blen,KV,·)
@@ -482,6 +494,10 @@ class ServeEngine:
                 raise ValueError(
                     f"max_len {max_len} is not a multiple of page_size "
                     f"{page_size}")
+        if self.kv_dtype == jnp.float8_e5m2 and self.paged:
+            raise ValueError(
+                "kv_dtype fp8/e5m2 supports the dense cache layout only; "
+                "pass paged=False (paged fp8 pools are a follow-on)")
         # sliding-window page recycling: attention configs with a window hold
         # O(window) live pages — out-of-window pages are freed mid-flight.
         # (encdec self-attention ignores cfg.window, so it stays full-span.)
@@ -529,6 +545,13 @@ class ServeEngine:
         self._topk = np.zeros((n_slots,), np.int32)
         self._topp = np.ones((n_slots,), np.float32)
         self._sseed = np.zeros((n_slots,), np.int32)
+        # ---- per-slot logit processors (PR 7) ------------------------------
+        # host-maintained, riding the same sampled-decode jit: rep_penalty
+        # (1 = off), seen tokens (prompt + emitted), additive logit bias
+        self._rep_pen = np.ones((n_slots,), np.float32)
+        self._seen = np.zeros((n_slots, self.cfg.vocab_size), bool)
+        self._bias = np.zeros((n_slots, self.cfg.vocab_size), np.float32)
+        self._bias_on = np.zeros((n_slots,), bool)
         # donation is unimplemented on CPU (harmless but warns per compile)
         donate = {} if jax.default_backend() == "cpu" else \
             {"donate_argnums": (2,)}
@@ -564,10 +587,16 @@ class ServeEngine:
             # per-slot sampling inside the decode jit: greedy (temperature 0)
             # rows still take the raw argmax; only (B,) tokens leave device.
             # Compiled lazily — engines that never sample never trace it.
+            # Logit processors (rep penalty / bias) run first — identity for
+            # slots with rep_penalty=1 and zero bias, so plain-sampled and
+            # greedy rows are bit-identical to the processor-free engine.
             self.stats.decode_compiles += 1
             logits, new_cache = _decode_core(params, batch, cache, active)
-            toks = sample_tokens(
+            logits = apply_logit_processors(
                 logits.astype(jnp.float32),
+                sample["rep_penalty"], sample["seen"], sample["bias"])
+            toks = sample_tokens(
+                logits,
                 sample["temperature"], sample["top_k"], sample["top_p"],
                 sample["seed"], sample["counter"])
             return toks, new_cache
@@ -644,6 +673,7 @@ class ServeEngine:
         # non-replay first-token sampler (recurrent families sample their
         # first output from the prefill logits, counter 0)
         self._sample1_jit = jax.jit(sample_tokens)
+        self._proc1_jit = jax.jit(apply_logit_processors)
         self._next_tok = np.zeros((n_slots, 1), np.int32)
         if self.paged:
             abs_cache = model.cache_shape(n_slots, max_len, self.kv_dtype,
@@ -658,11 +688,20 @@ class ServeEngine:
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
                extras: Optional[Dict[str, np.ndarray]] = None,
                sample_params: Optional[tuple] = None,
-               seed: int = 0, ttl_ticks: Optional[int] = None) -> Request:
+               seed: int = 0, ttl_ticks: Optional[int] = None,
+               rep_penalty: float = 1.0,
+               logit_bias: Optional[Dict[int, float]] = None) -> Request:
         """Queue a request. sample_params=(temperature, top_k, top_p) turns
         on per-slot sampling for this request (None = greedy argmax, the
         temperature=0 fast path); `seed` keys its PRNG stream; `ttl_ticks`
         overrides the engine TTL for this request.
+
+        rep_penalty != 1 applies the CTRL/HF repetition penalty over the
+        request's prompt + emitted tokens; `logit_bias` ({token_id: bias})
+        adds a per-token bias — both ride the sampled-decode jit and compose
+        with greedy decoding (serve/sampling.apply_logit_processors).
+        Degenerate penalties clamp to 1 (off); bias keys must be in-vocab
+        and values finite.
 
         Malformed requests raise ValueError (nothing is enqueued, no state
         changes); a full admission queue raises EngineOverloaded — graceful
@@ -695,11 +734,23 @@ class ServeEngine:
             # temperature < 0 → greedy, top_p=0 → filtered argmax, top_k out
             # of range → filter off — see serve/sampling.clamp_sample_params
             temperature, top_k, top_p = clamp_sample_params(*sample_params)
+        rep_penalty = clamp_rep_penalty(rep_penalty)
+        if logit_bias:
+            for tok, bias in logit_bias.items():
+                if not 0 <= int(tok) < self.cfg.vocab_size:
+                    raise ValueError(
+                        f"logit_bias token {tok} outside vocab "
+                        f"[0, {self.cfg.vocab_size})")
+                if not math.isfinite(float(bias)):
+                    raise ValueError(
+                        f"logit_bias[{tok}] must be finite, got {bias}")
         self._next_rid += 1
         req = Request(rid=self._next_rid, prompt=prompt,
                       max_new_tokens=max_new_tokens, extras=extras,
                       temperature=float(temperature), top_k=int(top_k),
                       top_p=float(top_p), seed=int(seed),
+                      rep_penalty=rep_penalty,
+                      logit_bias=dict(logit_bias) if logit_bias else None,
                       t_enqueue=time.time(),
                       submit_tick=self._tick, ttl_ticks=ttl_ticks)
         if ttl_ticks is not None:
@@ -741,6 +792,16 @@ class ServeEngine:
         self._topk[slot] = r.top_k
         self._topp[slot] = r.top_p
         self._sseed[slot] = r.seed
+        self._rep_pen[slot] = r.rep_penalty
+        self._bias[slot] = 0.0
+        for tok, bias in (r.logit_bias or {}).items():
+            self._bias[slot, int(tok)] = bias
+        self._bias_on[slot] = bool(r.logit_bias)
+        # the penalty's "seen" set covers the whole live prompt — on resume
+        # that already includes the emitted tokens, so a preempted stream's
+        # penalties are identical to its uninterrupted twin's
+        self._seen[slot] = False
+        self._seen[slot, r.live_prompt()] = True
 
     def _admit(self):
         """Admit queued requests into free slots.
@@ -832,6 +893,13 @@ class ServeEngine:
             else:
                 lv = jnp.asarray(logits[:, -1, :self.cfg.vocab_size],
                                  jnp.float32)
+                if r.rep_penalty != 1.0 or r.logit_bias:
+                    # non-replay first token: processors apply here too —
+                    # _sample_state already loaded this slot's seen/bias rows
+                    lv = self._proc1_jit(
+                        lv, jnp.full((1,), r.rep_penalty, jnp.float32),
+                        jnp.asarray(self._seen[slot][None]),
+                        jnp.asarray(self._bias[slot][None]))
                 if r.temperature > 0:
                     first = int(np.asarray(self._sample1_jit(
                         lv, jnp.full((1,), r.temperature, jnp.float32),
@@ -847,6 +915,7 @@ class ServeEngine:
                 r.out_tokens.append(first)
                 r.t_first_token = time.time()
                 self._next_tok[slot, 0] = first
+                self._seen[slot, first] = True
                 self.stats.tokens_out += 1
                 if plen >= self.max_len \
                         or len(r.out_tokens) >= r.max_new_tokens:
@@ -885,6 +954,9 @@ class ServeEngine:
         self._fresh[slot] = False
         self._temp[slot], self._topk[slot] = 0.0, 0
         self._topp[slot], self._sseed[slot] = 1.0, 0
+        self._rep_pen[slot] = 1.0
+        self._bias[slot], self._bias_on[slot] = 0.0, False
+        self._seen[slot] = False
         if slot in self._prefill_fifo:          # mid-prefill: drain chunks
             self._prefill_fifo.remove(slot)
         if self.chunked:
@@ -987,7 +1059,8 @@ class ServeEngine:
                     if r is not None and self._active[i]]
         if not decoding:
             return chunk_ran
-        if any(self._temp[i] > 0 for i in decoding):
+        if any(self._temp[i] > 0 or self._rep_pen[i] != 1.0
+               or self._bias_on[i] for i in decoding):
             counter = np.asarray(
                 [len(r.out_tokens) if r is not None else 0
                  for r in self._slots], np.int32)
@@ -995,7 +1068,10 @@ class ServeEngine:
                       "top_k": jnp.asarray(self._topk),
                       "top_p": jnp.asarray(self._topp),
                       "seed": jnp.asarray(self._sseed),
-                      "counter": jnp.asarray(counter)}
+                      "counter": jnp.asarray(counter),
+                      "rep_penalty": jnp.asarray(self._rep_pen),
+                      "seen": jnp.asarray(self._seen),
+                      "bias": jnp.asarray(self._bias)}
             toks, self._cache = self._decode_sample_jit(
                 self.params, {"tokens": jnp.asarray(self._next_tok)},
                 self._cache, jnp.asarray(self._active), sample)
@@ -1011,6 +1087,7 @@ class ServeEngine:
             r = self._slots[slot]
             r.out_tokens.append(int(nxt[slot]))
             self._next_tok[slot, 0] = nxt[slot]
+            self._seen[slot, int(nxt[slot])] = True   # rep-penalty tracking
             self.stats.tokens_out += 1
             if self._fresh[slot]:
                 if r.t_first_token is None:   # resumed slots keep the original

@@ -64,6 +64,35 @@ def clamp_sample_params(temperature, top_k, top_p):
             min(1.0, max(0.0, top_p)))
 
 
+def clamp_rep_penalty(penalty) -> float:
+    """Host-side normalization of a repetition penalty: 1.0 is the identity,
+    NaN and non-positive values clamp to it (a penalty of 0 would divide
+    positive logits by zero device-side; negative would flip signs). Values
+    in (0, 1) are legal — they *reward* repetition, the HF convention."""
+    penalty = float(penalty)
+    if math.isnan(penalty) or penalty <= 0.0:
+        return 1.0
+    return penalty
+
+
+def apply_logit_processors(logits, rep_penalty, seen, bias):
+    """Per-slot logit processors, applied before `sample_tokens` inside the
+    sampled-decode jit (and to the raw logits of greedy rows — a repetition
+    penalty with temperature 0 is still meaningful, and rows with
+    rep_penalty=1 / zero bias pass through bit-identical).
+
+    logits (B, V) f32; rep_penalty (B,) f32; seen (B, V) bool — tokens in
+    the slot's prompt or already emitted; bias (B, V) f32 additive per-token
+    bias. Repetition penalty follows the CTRL/HF convention: seen tokens
+    with positive logits are divided by the penalty, negative multiplied —
+    both directions push seen tokens down for penalty > 1.
+    """
+    pen = rep_penalty[:, None]
+    penalized = jnp.where(logits > 0, logits / pen, logits * pen)
+    logits = jnp.where(seen, penalized, logits)
+    return logits + bias
+
+
 def _sample_one(logits, temperature, top_k, top_p, seed, counter):
     """logits (V,) f32 → sampled token () int32."""
     v = logits.shape[-1]

@@ -4,7 +4,11 @@ The chunked engine streams fixed-size prefill chunks straight into the page
 pool, interleaved with the decode batch. These tests pin:
   * token-exactness vs the dense `generate_greedy` oracle for all four
     attention families × {f32, bf16, int8} KV, at chunk sizes that do and
-    don't divide the prompt length;
+    don't divide the prompt length — plus the `mla` latent-KV family (PR 7),
+    which rides the SAME unified `attn_block` chunk mode with a single
+    latent pool;
+  * the mirror-drift guard (PR 7): no `_project_qkv` / `apply_rope` call
+    sites outside the shared attention core;
   * the capacity edges under chunked admission (page-boundary prompt
     lengths ±1, plen == max_len, max_new_tokens = 1) — no extra page
     reserved, none leaked;
@@ -132,6 +136,83 @@ def test_chunked_families_kv_matrix(arch, kv_dtype):
     r = eng.submit(_prompt(17, 17), max_new_tokens=3, extras=extras)
     eng.run_to_completion()
     assert r.out_tokens == solo, (arch, kv_dtype, r.out_tokens, solo)
+
+
+# ------------------------------------------------------- MLA latent KV (PR 7)
+@pytest.fixture(scope="module")
+def mla():
+    return _build("deepseek-v2-lite")
+
+
+@pytest.mark.parametrize("kv_dtype", [None, "bf16", "int8"])
+def test_chunked_mla_kv_dtypes(mla, kv_dtype):
+    """MLA latent-KV rides the unified chunk mode unchanged: the pool holds
+    ONE latent row per token (single 'k' pool, KV-head dim 1, width
+    kv_lora_rank + qk_rope_dim) and the absorbed-attention chunk/decode
+    reads stay token-exact vs the dense oracle for f32 / bf16 / int8 latent
+    pools, across a chunk boundary (17 > 16)."""
+    cfg, model, params, _ = mla
+    assert cfg.attn_kind == "mla"
+    for n in (9, 17):
+        solo = generate_greedy(model, params, _prompt(n, n), n_tokens=4,
+                               max_len=64, kv_dtype=kv_dtype)
+        eng = ServeEngine(model, n_slots=2, max_len=64, params=params,
+                          page_size=8, kv_dtype=kv_dtype)
+        assert eng.chunked
+        r = eng.submit(_prompt(n, n), max_new_tokens=4)
+        eng.run_to_completion()
+        assert r.out_tokens == solo, (kv_dtype, n, r.out_tokens, solo)
+        assert eng.stats.pages_in_use == 0
+        assert len(eng._free_pages) == eng.n_pages - 1
+
+
+def test_mla_sampled_and_int8_weights(mla):
+    """The latent cache composes with the rest of the serving stack: the
+    paged sampled stream matches the dense engine's under the same seed
+    (PRNG is keyed by (seed, token index), so layout can't shift it), and
+    int8 WEIGHT quantization (`quantized._MLA_AXES`) stays token-exact vs
+    its own dense-oracle leg."""
+    cfg, model, params, _ = mla
+    p = _prompt(23, 13)
+    sp = dict(max_new_tokens=5, sample_params=(0.8, 5, 0.9), seed=7)
+    eng_paged = ServeEngine(model, n_slots=2, max_len=64, params=params,
+                            page_size=8)
+    eng_dense = ServeEngine(model, n_slots=2, max_len=64, params=params,
+                            paged=False)
+    r_p, r_d = eng_paged.submit(p, **sp), eng_dense.submit(p, **sp)
+    eng_paged.run_to_completion()
+    eng_dense.run_to_completion()
+    assert r_p.out_tokens == r_d.out_tokens
+    solo = generate_greedy(model, params, p, n_tokens=4, max_len=64,
+                           wdtype="int8", kv_dtype="int8")
+    eng8 = ServeEngine(model, n_slots=2, max_len=64, params=params,
+                       page_size=8, wdtype="int8", kv_dtype="int8")
+    r8 = eng8.submit(p, max_new_tokens=4)
+    eng8.run_to_completion()
+    assert r8.out_tokens == solo
+
+
+def test_no_attention_mirrors_outside_core():
+    """Mirror-drift guard: PR 7 deleted the three mirrored QKV/rope
+    prefill-chunk bodies; this keeps them deleted. `_project_qkv` /
+    `apply_rope` call sites live ONLY in the shared core (`attn_block`) and
+    the MLA plug-in — every schedule wrapper (prefill / prefill_chunk /
+    decode_step, and the whole encdec module) reaches projections
+    exclusively through `attn_block(mode=...)`."""
+    import inspect
+
+    from repro.models import encdec, transformer
+
+    src = inspect.getsource(encdec)
+    assert "_project_qkv" not in src and "apply_rope" not in src
+    for fn in (transformer.prefill, transformer.prefill_cache,
+               transformer.prefill_chunk, transformer.decode_step,
+               transformer.train_loss, transformer.layer_fn):
+        s = inspect.getsource(fn)
+        assert "_project_qkv(" not in s, fn.__name__
+        assert "apply_rope(" not in s, fn.__name__
+    core = inspect.getsource(transformer.attn_block)
+    assert "_project_qkv(" in core and "apply_rope(" in core
 
 
 # -------------------------------------------------- capacity / page-boundary

@@ -1,0 +1,93 @@
+"""fp8 (e5m2) KV cache rounding, dense layout (PR 7).
+
+fp8 is the third lossy KV storage mode after bf16 and int8 — a bare cast
+round trip through `float8_e5m2` with NO scale tensors (e5m2 keeps f32's
+exponent range, so per-row scales buy little; e4m3 would need them). The
+same token-exactness contract as every other KV dtype applies: prefill
+attends the rounded values the cache stores (`transformer._round_kv`), so
+the engine must match a `generate_greedy` oracle running the identical
+dequant path. Paged fp8 pools are a recorded follow-on — the engine must
+refuse them loudly rather than silently densify.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import ExecOptions, build_model
+from repro.models.transformer import _round_rows, cache_shape
+from repro.serve.engine import ServeEngine, generate_greedy
+
+
+def _prompt(seed, n, vocab=512):
+    return np.asarray(
+        jax.random.randint(jax.random.key(seed), (n,), 0, vocab), np.int32)
+
+
+@pytest.fixture(scope="module")
+def smol():
+    cfg = get_config("smollm-360m").smoke()
+    model = build_model(cfg, ExecOptions(attn_impl="reference", ce_chunk=32))
+    return cfg, model, model.init(jax.random.key(1))
+
+
+def test_round_rows_e5m2_is_cast_roundtrip():
+    """`_round_rows` with an fp8 storage dtype is exactly the dequant
+    oracle: cast to e5m2 and back, no scales involved."""
+    rows = jax.random.normal(jax.random.key(0), (2, 5, 2, 8),
+                             jnp.float32) * 7.0
+    got = _round_rows(rows, jnp.float8_e5m2)
+    want = rows.astype(jnp.float8_e5m2).astype(jnp.float32)
+    assert got.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert not np.array_equal(np.asarray(got), np.asarray(rows)), \
+        "e5m2 round trip should actually lose mantissa bits"
+
+
+def test_cache_shape_fp8_has_no_scale_tensors(smol):
+    """The dense fp8 cache layout is the bf16 layout at 1 byte/element —
+    same keys (no 'ks'/'vs' scale pools), same shapes."""
+    cfg, _, _ = smol
+    fp8 = cache_shape(cfg, 2, 32, dtype=jnp.float8_e5m2)
+    bf16 = cache_shape(cfg, 2, 32, dtype=jnp.bfloat16)
+    assert set(fp8) == set(bf16)
+    assert not any(k.endswith("s") and k != "pos" for k in fp8), fp8.keys()
+    assert fp8["k"].shape == bf16["k"].shape
+    assert fp8["k"].dtype == jnp.float8_e5m2
+
+
+@pytest.mark.parametrize("kv_dtype", ["fp8", "e5m2"])
+def test_fp8_dense_engine_token_exact(smol, kv_dtype):
+    """Dense fp8 engine == the fp8 `generate_greedy` oracle, token for
+    token ('fp8' and 'e5m2' are aliases for the same storage dtype)."""
+    cfg, model, params = smol
+    for n in (9, 17):
+        solo = generate_greedy(model, params, _prompt(n, n), n_tokens=4,
+                               max_len=64, kv_dtype=kv_dtype)
+        eng = ServeEngine(model, n_slots=2, max_len=64, params=params,
+                          paged=False, kv_dtype=kv_dtype)
+        r = eng.submit(_prompt(n, n), max_new_tokens=4)
+        eng.run_to_completion()
+        assert r.out_tokens == solo, (kv_dtype, n, r.out_tokens, solo)
+
+
+def test_fp8_actually_rounds(smol):
+    """The fp8 stream must DIVERGE from the f32 stream on a long enough
+    horizon — otherwise the cast round trip silently became a no-op."""
+    cfg, model, params = smol
+    p = _prompt(5, 13)
+    f32 = generate_greedy(model, params, p, n_tokens=8, max_len=64)
+    fp8 = generate_greedy(model, params, p, n_tokens=8, max_len=64,
+                          kv_dtype="fp8")
+    assert fp8 != f32, "e5m2 KV produced the f32 token stream bit-for-bit"
+
+
+def test_fp8_paged_pool_refused(smol):
+    """Paged fp8 pools are a follow-on: the engine raises instead of
+    silently falling back to a dense or bf16 layout."""
+    cfg, model, params = smol
+    with pytest.raises(ValueError, match="fp8|e5m2"):
+        ServeEngine(model, n_slots=2, max_len=64, params=params,
+                    page_size=8, kv_dtype="fp8")
