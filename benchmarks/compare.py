@@ -91,6 +91,15 @@ GATES = {
         "mla_kv_bytes_per_token": ("lower", 0.0, "det"),
         "mla_vs_gqa_int8_kv_ratio": ("lower", 0.0, "det"),
         "mla_tokens_per_s": ("higher", 0.30, "wall"),
+        # prefix caching + COW (PR 8): cached-vs-uncached twins on fixed
+        # shared-prompt traffic. Parity is exact (zero divergence, zero
+        # slack); the TTFT and peak-pool ratios are tick/page arithmetic —
+        # machine-free, and both must stay strictly < 1 of their committed
+        # baselines (a ratio drifting toward 1 means the cache stopped
+        # sharing)
+        "prefix_token_divergence": ("lower", 0.0, "det"),
+        "cache_hit_ttft_ratio": ("lower", 0.05, "det"),
+        "prefix_pool_pages_ratio": ("lower", 0.05, "det"),
     },
     "soc": {
         "sweep_wall_s": ("lower", 0.20, "wall"),
@@ -119,7 +128,10 @@ ABS_SLACK = {"int8_token_divergence": 0.05,
              # preemption count is an exact integer under replay; half a
              # preemption of slack only lets the multiplicative form
              # evaluate — any real increase still fails
-             "chaos_preemptions": 0.5}
+             "chaos_preemptions": 0.5,
+             # prefix-cache parity baseline is exactly 0 — ZERO slack: one
+             # diverging stream on shared pages fails the gate
+             "prefix_token_divergence": 0.0}
 
 
 def load(d: pathlib.Path, section: str):

@@ -514,6 +514,67 @@ def bench_serve():
           f"ratio={bpt_mla / bpt_gqa:.3f},"
           f"tokens_per_s={stats.tokens_out / dt:.1f}")
 
+    # ---- prefix caching + copy-on-write pages (PR 8) ----------------------
+    # A warmup request registers a 48-token system prompt in the ref-counted
+    # page registry; a wave of requests reusing it must decode
+    # TOKEN-IDENTICALLY to a cache-off twin on the same submissions
+    # (divergence det-gated at zero across dense/moe/mla × f32/bf16/int8,
+    # greedy AND sampled in every wave) while admitting off shared pages:
+    # strictly fewer peak pool pages AND fewer ticks to first token. Both
+    # headline ratios are tick/page arithmetic on fixed traffic —
+    # machine-free, det-gated < 1.
+    def prefix_trace(eng, vocab):
+        rngp = np.random.default_rng(11)
+        sysp = np.asarray(rngp.integers(0, vocab, 48), np.int32)
+        reqs = [eng.submit(sysp, max_new_tokens=2)]
+        eng.run_to_completion()        # registration happens at finalize
+        for i in range(4):             # mixed greedy/sampled wave
+            tail = np.asarray(rngp.integers(0, vocab, 4 + 3 * i), np.int32)
+            sp = (0.8, 40, 0.95) if i % 2 else None
+            reqs.append(eng.submit(np.concatenate([sysp, tail]),
+                                   max_new_tokens=6, sample_params=sp,
+                                   seed=50 + i))
+        eng.run_to_completion()
+        eng.assert_accounting()
+        ttft_ticks = sum(r.first_token_tick - r.submit_tick
+                         for r in reqs[1:])
+        return ([list(r.out_tokens) for r in reqs], ttft_ticks,
+                eng.stats.peak_pages_in_use, eng.stats)
+
+    qcfg = get_config("qwen2-moe-a2.7b").smoke()
+    qmodel = build_model(qcfg, ExecOptions(attn_impl="reference",
+                                           ce_chunk=32))
+    qparams = qmodel.init(jax.random.key(0))
+    div_sum, div_n = 0, 0
+    for arch, m_, p_, v_ in (("dense", model, params, cfg.vocab_size),
+                             ("moe", qmodel, qparams, qcfg.vocab_size),
+                             ("mla", mmodel, mparams, mcfg.vocab_size)):
+        for kvd in (None, "bf16", "int8"):
+            legs = {}
+            for cached in (True, False):
+                eng = ServeEngine(m_, n_slots=4, max_len=96, params=p_,
+                                  page_size=8, chunk_pages=1, kv_dtype=kvd,
+                                  prefix_cache=cached)
+                legs[cached] = prefix_trace(eng, v_)
+            div_sum += sum(a != b
+                           for a, b in zip(legs[True][0], legs[False][0]))
+            div_n += len(legs[True][0])
+            if arch == "dense" and kvd is None:
+                st = legs[True][3]
+                metrics["cache_hit_ttft_ratio"] = (legs[True][1]
+                                                   / legs[False][1])
+                metrics["prefix_pool_pages_ratio"] = (legs[True][2]
+                                                      / legs[False][2])
+                metrics["prefix_hit_tokens"] = float(st.prefix_hit_tokens)
+                metrics["prefix_cow_copies"] = float(st.cow_copies)
+    metrics["prefix_token_divergence"] = div_sum / div_n
+    print(f"serve,prefix_cache,token_divergence="
+          f"{metrics['prefix_token_divergence']:.3f},"
+          f"ttft_ratio={metrics['cache_hit_ttft_ratio']:.3f},"
+          f"pool_pages_ratio={metrics['prefix_pool_pages_ratio']:.3f},"
+          f"hit_tokens={metrics['prefix_hit_tokens']:.0f},"
+          f"cow_copies={metrics['prefix_cow_copies']:.0f}")
+
     # same-run ratio: machine-speed cancels, so the regression gate can hold
     # this tight even across runner generations
     metrics["bucketing_speedup"] = (metrics["fast_tokens_per_s"]

@@ -76,6 +76,14 @@ def main():
     ap.add_argument("--no-chunked-prefill", action="store_true",
                     help="monolithic bucketed prefill instead of the "
                          "chunked page-granular default (paged engines)")
+    ap.add_argument("--prefix-cache", dest="prefix_cache",
+                    action="store_true", default=None,
+                    help="force the ref-counted prefix cache on (default: "
+                    "auto — on for paged+chunked engines, off under a "
+                    "sliding window)")
+    ap.add_argument("--no-prefix-cache", dest="prefix_cache",
+                    action="store_false",
+                    help="disable prefix caching / copy-on-write pages")
     ap.add_argument("--chunk-pages", type=int, default=2,
                     help="prefill chunk size in pages (chunk = "
                          "chunk_pages x page_size tokens)")
@@ -162,13 +170,14 @@ def main():
             max_len=args.max_len, params=params, wdtype=wdtype,
             kv_dtype=kv_dtype, page_size=args.page_size,
             n_pages=args.pages or None, chunk_pages=args.chunk_pages,
-            **ft_kw)
+            prefix_cache=args.prefix_cache, **ft_kw)
     else:
         paged_kw = {"paged": False} if args.page_size == 0 else {
             "page_size": args.page_size,
             "n_pages": args.pages or None,
             "chunked_prefill": False if args.no_chunked_prefill else None,
             "chunk_pages": args.chunk_pages,
+            "prefix_cache": args.prefix_cache,
         }
         eng = ServeEngine(model, n_slots=args.slots, max_len=args.max_len,
                           params=params, wdtype=wdtype, kv_dtype=kv_dtype,

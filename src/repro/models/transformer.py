@@ -388,6 +388,26 @@ def _pools_of(cache):
     return {key: cache[key] for key in _POOL_KEYS if key in cache}
 
 
+def copy_pool_page(cache, src, dst):
+    """Copy-on-write page clone: duplicate physical page `src`'s rows into
+    `dst` across every pool in the cache (k/v, int8 scale pools, MLA's
+    single latent pool — whatever `_POOL_KEYS` members are present), all
+    layers at once.
+
+    The prefix cache (PR 8) uses this when a new request's prompt fully
+    covers a cached page that its replay decode step will overwrite (the
+    page containing position plen-1): instead of recomputing that page's
+    K/V with one more prefill chunk, the engine clones the cached bytes
+    into a private page and maps THAT — the shared original stays
+    read-only. Pages are schedule-independent bytes (`_round_kv`), so the
+    clone is exactly what a cold prefill would have produced."""
+    c = dict(cache)
+    for key in _POOL_KEYS:
+        if key in c:
+            c[key] = c[key].at[:, dst].set(c[key][:, src])
+    return c
+
+
 def prefill_chunk(params, batch, cache, cfg, opts: ExecOptions):
     """One fixed-size chunk of page-granular prefill (PR 4).
 
@@ -409,6 +429,16 @@ def prefill_chunk(params, batch, cache, cfg, opts: ExecOptions):
     row and `pos` are stamped by the engine AFTER the last chunk, so
     mid-prefill slots stay invisible to the batched decode step (its garbage
     writes for them land on the null page — the idle-slot-drift guard).
+
+    `start` need not be 0 for a slot's FIRST chunk: the prefix cache (PR 8)
+    resumes prefill mid-prompt after cached pages. The chunk's attention
+    gathers the slot's whole live span [0, start+length) through `page_row`
+    — shared cached pages included — while its writes only ever target
+    logical pages >= start // page_size (start is page-aligned on resume),
+    so shared pages are read-only by construction. Schedule-independent KV
+    rounding guarantees the cached pages hold byte-identical values to the
+    cold prefill this replaces, which is what keeps cache-hit admissions
+    token-exact.
 
     The scan body is a thin wrapper over `layer_fn(mode='chunk')` — the
     per-layer math lives ONCE in `attn_block`, so every execution path

@@ -125,8 +125,10 @@ examples, mesh-parameterized for pods.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import math
 import time
+from collections import OrderedDict
 from typing import Dict, List, Optional
 
 import jax
@@ -134,6 +136,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.quantized import quantize_kv_rows
+from repro.models.transformer import copy_pool_page
 from repro.serve.faults import FaultPlan
 from repro.serve.sampling import (
     apply_logit_processors, clamp_rep_penalty, clamp_sample_params,
@@ -189,14 +192,18 @@ def reserve_page_count(plen: int, max_new: int, *, max_len: int,
     return min(full - lo, window_page_budget(window, page_size))
 
 
-def recycle_dead_pages(mapping: Dict[int, int], free_pages: List[int],
-                       cap: int, page_size: int, window: int, progress: int):
+def recycle_dead_pages(mapping: Dict[int, int], cap: int, page_size: int,
+                       window: int, progress: int):
     """Sliding-window recycle core: pages fully below `progress - window`
     either become the slot's next logical page (remap forward while the
-    request still has unwritten pages below `cap`) or return to `free_pages`
-    once its span is covered. Mutates `mapping`/`free_pages` in place;
-    returns ([(j_dead, j_new, phys)] remaps, [j_dead] unmaps) for the caller
-    to mirror into its page table."""
+    request still has unwritten pages below `cap`) or leave the mapping once
+    its span is covered. Mutates `mapping` in place; returns
+    ([(j_dead, j_new, phys)] remaps, [(j_dead, phys)] unmaps) — the caller
+    mirrors both into its page table and RELEASES the unmapped physical
+    pages through its own (ref-counted, PR 8) allocator. Remapped pages get
+    rewritten, so window engines never share pages — the prefix cache is
+    disabled under a sliding window and every page here is exclusively
+    owned."""
     dead = sorted(j for j in mapping
                   if (j + 1) * page_size <= progress - window)
     remaps, unmaps = [], []
@@ -210,8 +217,7 @@ def recycle_dead_pages(mapping: Dict[int, int], free_pages: List[int],
             remaps.append((j, nxt, phys))
             nxt += 1
         else:
-            free_pages.append(phys)
-            unmaps.append(j)
+            unmaps.append((j, phys))
     return remaps, unmaps
 
 
@@ -221,6 +227,93 @@ def page_row_of(mapping: Dict[int, int], pages_per_seq: int) -> np.ndarray:
     for j, p in mapping.items():
         row[j] = p
     return row
+
+
+# ---------------------------------------------------------------------------
+# Prefix cache (PR 8): content addressing for page-aligned prompt prefixes.
+# A page's K/V bytes are a pure function of the token prefix up to its end
+# (attention context included) AND any non-token prefill inputs (vlm patch
+# embeds overwrite leading embeddings; encdec cross-attention threads the
+# frames through every decoder layer) — so the content key for logical page
+# j is a digest CHAIN: sha1(extras) -> sha1(prev || page-j tokens). Two
+# requests share page j iff their whole prefixes up to (j+1)*page_size
+# match, which with schedule-independent KV rounding (PR 4) means the pool
+# bytes match exactly.
+# ---------------------------------------------------------------------------
+
+def request_seed_digest(extras: Optional[Dict[str, np.ndarray]]) -> bytes:
+    """Chain seed covering every non-token prefill input. Empty extras hash
+    to b'' so the common text-only case costs nothing."""
+    if not extras:
+        return b""
+    h = hashlib.sha1()
+    for key in sorted(extras):
+        arr = np.ascontiguousarray(np.asarray(extras[key]))
+        h.update(key.encode())
+        h.update(str(arr.dtype).encode())
+        h.update(str(arr.shape).encode())
+        h.update(arr.tobytes())
+    return h.digest()
+
+
+def prefix_digests(lp: np.ndarray, page_size: int, n_pages: int,
+                   seed: bytes = b"") -> List[bytes]:
+    """Digest chain for the first `n_pages` FULL pages of token prefix `lp`:
+    digests[j] keys the pool content of logical page j."""
+    out, d = [], seed
+    for j in range(n_pages):
+        d = hashlib.sha1(
+            d + lp[j * page_size:(j + 1) * page_size].tobytes()).digest()
+        out.append(d)
+    return out
+
+
+def lookup_prefix_hits(by_hash: Dict[bytes, int], lp: np.ndarray,
+                       page_size: int, seed: bytes = b"") -> List[int]:
+    """Longest cached run over lp's FULL prompt pages — the hit physical
+    pages, in logical order. The scan stops at the first miss: page j+1's
+    digest chains through page j's, and chunk resume needs a CONTIGUOUS
+    cached prefix anyway."""
+    n_cand = lp.shape[0] // page_size
+    hits: List[int] = []
+    if not n_cand:
+        return hits
+    for d in prefix_digests(lp, page_size, n_cand, seed=seed):
+        p = by_hash.get(d)
+        if p is None:
+            break
+        hits.append(p)
+    return hits
+
+
+def prefix_share_plan(plen: int, hits: List[int], page_size: int):
+    """(n_shared, cow_src): hit pages shared outright vs the one COW-cloned.
+    tail = (plen-1)//page_size is the page the replay decode WRITES — never
+    shared; a full-page hit there (plen % page_size == 0 only) is cloned
+    into a private page instead of recomputed."""
+    tail = (plen - 1) // page_size
+    n_shared = min(len(hits), tail)
+    cow_src = hits[tail] if len(hits) > tail else None
+    return n_shared, cow_src
+
+
+def register_prefix_pages(mapping: Dict[int, int], lp: np.ndarray,
+                          page_size: int, seed: bytes,
+                          page_hash: Dict[int, bytes],
+                          by_hash: Dict[bytes, int]) -> None:
+    """Content-register a fully-prefilled slot's FULL prompt pages in the
+    (page_hash, by_hash) registry. First registration of a content key wins;
+    a page already keying another prefix keeps its key."""
+    n_full = lp.shape[0] // page_size
+    if not n_full:
+        return
+    digests = prefix_digests(lp, page_size, n_full, seed=seed)
+    for j in range(n_full):
+        phys = mapping.get(j)
+        if phys is None or digests[j] in by_hash or phys in page_hash:
+            continue
+        page_hash[phys] = digests[j]
+        by_hash[digests[j]] = phys
 
 
 @dataclasses.dataclass
@@ -246,6 +339,11 @@ class Request:
     t_enqueue: float = 0.0
     t_first_token: Optional[float] = None
     t_done: Optional[float] = None
+    # tick-domain latency (deterministic twin of the wall-clock fields: the
+    # bench gates cache-hit TTFT on ticks, which replay bit-for-bit)
+    first_token_tick: Optional[int] = None
+    # prompt tokens served from the prefix cache at (last) admission
+    cached_prompt_tokens: int = 0
     # ---- fault tolerance (PR 6) ----------------------------------------
     preemptions: int = 0            # times this request was preempted
     timed_out: bool = False         # retired by TTL, not by completion
@@ -295,6 +393,28 @@ class EngineStats:
     faults_injected: int = 0    # FaultPlan events applied
     recoveries: int = 0         # slots migrated off a draining/dead shard
     recovery_ticks_sum: int = 0  # requeue -> back-live latency, summed
+    # ---- prefix cache & copy-on-write (PR 8) ---------------------------
+    prefix_hits: int = 0        # admissions that reused >=1 cached page
+    prefix_misses: int = 0      # admissions with zero cached pages
+    prefix_hit_tokens: int = 0  # prompt tokens served from cached pages
+    prefix_evictions: int = 0   # refcount-zero cached pages reclaimed
+    cow_copies: int = 0         # tail pages cloned instead of recomputed
+    prefix_cached_pages: int = 0  # gauge: refcount-zero pages retained
+    # ---- per-request latency samples (ROADMAP item 4 pre-work) ---------
+    # raw seconds, one entry per COMPLETED request; summary() collapses
+    # them to p50/p99 and drops the lists from the flat metric dict
+    ttft_s: List[float] = dataclasses.field(default_factory=list, repr=False)
+    tpot_s: List[float] = dataclasses.field(default_factory=list, repr=False)
+
+    def record_request(self, r: "Request") -> None:
+        """Fold a completed request's latencies into the TTFT/TPOT samples
+        (timed-out / cancelled requests never report — their latencies
+        describe the TTL policy, not the serving path)."""
+        if r.t_first_token is not None:
+            self.ttft_s.append(r.t_first_token - r.t_enqueue)
+            if r.t_done is not None and len(r.out_tokens) > 1:
+                self.tpot_s.append((r.t_done - r.t_first_token)
+                                   / (len(r.out_tokens) - 1))
 
     def summary(self) -> Dict[str, float]:
         d = dataclasses.asdict(self)
@@ -308,6 +428,14 @@ class EngineStats:
                                 if self.prefill_tokens else 0.0)
         d["mean_recovery_ticks"] = (self.recovery_ticks_sum / self.recoveries
                                     if self.recoveries else 0.0)
+        # SLO percentiles over completed requests — the flat dict stays
+        # {metric: number} (the raw sample lists are dropped)
+        for name in ("ttft_s", "tpot_s"):
+            samples = d.pop(name)
+            d[f"{name[:-2]}_p50_s"] = (
+                float(np.percentile(samples, 50)) if samples else 0.0)
+            d[f"{name[:-2]}_p99_s"] = (
+                float(np.percentile(samples, 99)) if samples else 0.0)
         assert all(math.isfinite(v) for v in d.values()
                    if isinstance(v, (int, float))), d
         return d
@@ -421,6 +549,7 @@ class ServeEngine:
                  kv_dtype: Optional[str] = None,
                  chunked_prefill: Optional[bool] = None,
                  chunk_pages: int = 2,
+                 prefix_cache: Optional[bool] = None,
                  max_queue: Optional[int] = None,
                  ttl_ticks: Optional[int] = None,
                  preempt_after: int = 2,
@@ -516,6 +645,17 @@ class ServeEngine:
                 {} for _ in range(n_slots)]
             # highest logical page the request may ever write (exclusive)
             self._slot_cap = [0] * n_slots
+            # ---- ref-counted, content-addressed allocator (PR 8) -----------
+            # Every physical page is in exactly ONE of: the free list
+            # (ref 0, unregistered), mapped by >=1 slot (ref >= 1), the
+            # cached LRU (ref 0 but content-registered — evictable on
+            # demand), or a page_squeeze stash. Slots hold REFERENCES, not
+            # pages: release decrements, and a page only leaves the live set
+            # at refcount zero.
+            self._ref = np.zeros((self.n_pages,), np.int32)
+            self._page_hash: Dict[int, bytes] = {}    # phys -> content key
+            self._by_hash: Dict[bytes, int] = {}      # content key -> phys
+            self._lru: "OrderedDict[int, None]" = OrderedDict()
         # ---- chunked page-granular prefill (PR 4) --------------------------
         can_chunk = self.paged and model.prefill_chunk is not None
         if chunked_prefill is None:
@@ -537,6 +677,25 @@ class ServeEngine:
         # ceil(blen/chunk_tokens) chunk-equivalents of decode stall)
         self.chunk_tokens = (self.chunk_pages * page_size if self.paged
                              else min(64, max_len))
+        # ---- prefix cache (PR 8) -------------------------------------------
+        # Content-addressed sharing of page-aligned prompt prefixes. Needs
+        # the paged pool (pages to share) AND chunked prefill (the resume
+        # contract that skips cached pages). Sliding-window engines disable
+        # it silently: window recycling REWRITES remapped pages in place,
+        # which is incompatible with sharing — and the window engine is
+        # already the O(window) memory optimization.
+        can_cache = self.paged and self.chunked and not self._window
+        if prefix_cache is None:
+            self.prefix_cache = can_cache
+        else:
+            self.prefix_cache = bool(prefix_cache)
+            if self.prefix_cache and not (self.paged and self.chunked):
+                raise ValueError(
+                    "prefix_cache requires a paged chunked-prefill engine "
+                    f"(family {self.cfg.family!r}, paged={self.paged}, "
+                    f"chunked={self.chunked})")
+            if self.prefix_cache and self._window:
+                self.prefix_cache = False
         self._prefill_fifo: List[int] = []     # slots mid-prefill, FIFO
         self._chunk_next = [0] * n_slots       # next chunk start per slot
         self._tick_prefill_tokens = 0
@@ -648,6 +807,9 @@ class ServeEngine:
 
                 self._chunk_jit = jax.jit(_chunk, **chunk_donate)
                 self._finalize_jit = jax.jit(_finalize, **paste_donate)
+                # COW tail clone: duplicate one physical page across every
+                # pool (models/transformer.copy_pool_page), cache donated
+                self._cow_jit = jax.jit(copy_pool_page, **paste_donate)
                 if model.prefill_cross is not None:
                     self._cross_jit = jax.jit(model.prefill_cross)
 
@@ -827,28 +989,63 @@ class ServeEngine:
             plen = lp.shape[0]
             rem = r.remaining_new()
             page_row = None
+            r.cached_prompt_tokens = 0
             if self.paged:
                 need = self._pages_for(plen, rem)
-                if len(self._free_pages) < need:
+                hits, _ = self._prefix_lookup(r, lp)
+                n_shared, cow_src = self._share_plan(plen, hits)
+                shared = hits[:n_shared]
+                n_private = need - n_shared
+                # hit pages resident in the LRU leave the allocatable set
+                # the instant we incref them — account for that BEFORE
+                # committing (cow_src is pinned during the clone, so it
+                # counts too)
+                pinned = sum(1 for p in shared if self._ref[p] == 0)
+                if cow_src is not None and self._ref[cow_src] == 0:
+                    pinned += 1
+                if self._allocatable() - pinned < n_private:
                     # head starved on pages while a slot sits free: the
                     # signal step() counts toward preemption
                     self._page_blocked = True
                     return
-                pages = [self._free_pages.pop() for _ in range(need)]
+                # commit order: protect the hit pages FIRST (incref pulls
+                # them out of the eviction set), then allocate privates
+                for p in shared:
+                    self._incref(p)
+                if cow_src is not None:
+                    self._incref(cow_src)
+                pages = [self._alloc_page() for _ in range(n_private)]
+                if cow_src is not None:
+                    # copy-on-write: the replay decode WRITES position
+                    # plen-1, so a fully-cached tail page is cloned into
+                    # the slot's first private page instead of recomputed
+                    self.stats.cow_copies += 1
+                    self._cache = self._cow_jit(
+                        self._cache, jnp.int32(cow_src),
+                        jnp.int32(pages[0]))
+                    self._decref_page(cow_src)
                 lo = self._live_lo(plen) \
                     if (self._window and not self.chunked) else 0
-                self._slot_pages[slot] = {lo + i: p
-                                          for i, p in enumerate(pages)}
+                mapping = {j: p for j, p in enumerate(shared)}
+                for i, p in enumerate(pages):
+                    mapping[lo + n_shared + i] = p
+                self._slot_pages[slot] = mapping
                 self._slot_cap[slot] = -(-min(self.max_len, plen + rem)
                                          // self.page_size)
-                self.stats.pages_in_use += need
-                self.stats.peak_pages_in_use = max(
-                    self.stats.peak_pages_in_use, self.stats.pages_in_use)
+                cached = (n_shared + (cow_src is not None)) * self.page_size
+                r.cached_prompt_tokens = cached
+                if self.prefix_cache:
+                    if cached:
+                        self.stats.prefix_hits += 1
+                        self.stats.prefix_hit_tokens += cached
+                    else:
+                        self.stats.prefix_misses += 1
                 page_row = np.zeros((self.pages_per_seq,), np.int32)
-                page_row[lo:lo + need] = pages
+                for j, p in mapping.items():
+                    page_row[j] = p
             self._queue.pop(0)
             self.stats.prefills += 1
-            self.stats.prefill_tokens += plen
+            self.stats.prefill_tokens += plen - r.cached_prompt_tokens
             self._sample_state(slot, r)
             if self.chunked:
                 # reserve-only admission: the slot's cache table row stays on
@@ -857,14 +1054,28 @@ class ServeEngine:
                 self._slots[slot] = r
                 self._active[slot] = False
                 self._fresh[slot] = False
-                self._chunk_next[slot] = 0
-                self._prefill_fifo.append(slot)
+                self._chunk_next[slot] = r.cached_prompt_tokens
                 if self.model.prefill_cross is not None:
                     cross = self._cross_jit(self.params, {
                         "frames": jnp.asarray(r.extras["frames"])[None]})
                     self._cache = self._paste_cross_jit(
                         self._cache, cross["ck"], cross["cv"],
                         jnp.int32(slot))
+                if r.cached_prompt_tokens >= plen:
+                    # FULL hit: every prompt page is already in the pool
+                    # (shared run + COW-cloned tail) — zero prefill chunks.
+                    # The slot goes live immediately and its first token
+                    # arrives from THIS tick's decode: TTFT collapses to
+                    # one decode step
+                    self._register_prefix(slot, r, lp)
+                    self._cache = self._finalize_jit(
+                        self._cache, jnp.int32(slot), jnp.int32(plen - 1),
+                        jnp.asarray(page_row))
+                    self._next_tok[slot, 0] = int(lp[-1])
+                    self._fresh[slot] = True
+                    self._active[slot] = True
+                else:
+                    self._prefill_fifo.append(slot)
                 continue
             blen = bucket_length(plen, self.max_len) if self.bucket_prompts \
                 else plen
@@ -913,7 +1124,9 @@ class ServeEngine:
                     self._cache, pf_cache, jnp.int32(slot), jnp.int32(plen),
                     *paste_args)
                 r.out_tokens.append(first)
-                r.t_first_token = time.time()
+                if r.t_first_token is None:
+                    r.t_first_token = time.time()
+                    r.first_token_tick = self._tick
                 self._next_tok[slot, 0] = first
                 self._seen[slot, first] = True
                 self.stats.tokens_out += 1
@@ -924,6 +1137,7 @@ class ServeEngine:
                     # exhausted the budget — never occupy a decode slot
                     r.done = True
                     r.t_done = time.time()
+                    self.stats.record_request(r)
                     self._release(slot)
                     continue
             self._fresh[slot] = self._replay
@@ -964,10 +1178,126 @@ class ServeEngine:
         if self.paged:
             freed = self._slot_pages[slot]
             if freed:
-                self._free_pages.extend(freed.values())
-                self.stats.pages_in_use -= len(freed)
+                # slots hold REFERENCES: a shared page survives its
+                # releasing slot and only leaves the live set at refcount 0
+                for phys in freed.values():
+                    self._decref_page(phys)
                 self._slot_pages[slot] = {}
             self._cache = self._unmap_jit(self._cache, jnp.int32(slot))
+
+    # ------------------------------------- ref-counted page allocator (PR 8)
+    def _allocatable(self) -> int:
+        """Pages an admission can obtain right now: the free list plus every
+        refcount-zero cached page (evictable on demand)."""
+        return len(self._free_pages) + len(self._lru)
+
+    def pages_allocatable(self) -> int:
+        """Public twin of the classic free-list length: pages obtainable by
+        new work. With the prefix cache off (or cold) this equals
+        len(_free_pages); after cache traffic, refcount-zero cached pages
+        parked in the LRU count too — they are one eviction away from
+        free."""
+        return self._allocatable()
+
+    def _unregister(self, phys: int):
+        h = self._page_hash.pop(phys, None)
+        if h is not None and self._by_hash.get(h) == phys:
+            del self._by_hash[h]
+
+    def _page_live(self, d: int):
+        self.stats.pages_in_use += d
+        if d > 0:
+            self.stats.peak_pages_in_use = max(
+                self.stats.peak_pages_in_use, self.stats.pages_in_use)
+        self.stats.prefix_cached_pages = len(self._lru)
+
+    def _alloc_page(self) -> int:
+        """One private page: pop the free list, else evict the
+        least-recently-used refcount-zero cached page. Callers check
+        `_allocatable()` BEFORE committing an admission."""
+        if self._free_pages:
+            p = self._free_pages.pop()
+        else:
+            p, _ = self._lru.popitem(last=False)    # oldest first
+            self._unregister(p)
+            self.stats.prefix_evictions += 1
+        self._ref[p] = 1
+        self._page_live(+1)
+        return p
+
+    def _incref(self, phys: int):
+        if self._ref[phys] == 0:
+            # cached page comes back live: out of the LRU, safe from
+            # eviction for as long as any slot maps it
+            self._lru.pop(phys, None)
+            self._page_live(+1)
+        self._ref[phys] += 1
+
+    def _decref_page(self, phys: int):
+        self._ref[phys] -= 1
+        assert self._ref[phys] >= 0, int(phys)
+        if self._ref[phys] == 0:
+            self._page_live(-1)
+            if self.prefix_cache and phys in self._page_hash:
+                # registered content survives at refcount zero — parked in
+                # the LRU until a future admission hits it or evicts it
+                self._lru[phys] = None
+            else:
+                self._unregister(phys)
+                self._free_pages.append(phys)
+        self.stats.prefix_cached_pages = len(self._lru)
+
+    def _prefix_lookup(self, r: Request, lp: np.ndarray):
+        """Longest cached run over lp's FULL prompt pages (module-level
+        lookup_prefix_hits — ONE shared copy with the shard scheduler)."""
+        if not self.prefix_cache:
+            return [], []
+        hits = lookup_prefix_hits(self._by_hash, lp, self.page_size,
+                                  seed=request_seed_digest(r.extras))
+        return hits, []
+
+    def _share_plan(self, plen: int, hits: List[int]):
+        return prefix_share_plan(plen, hits, self.page_size)
+
+    def _register_prefix(self, slot: int, r: Request, lp: np.ndarray):
+        """Content-register the slot's fully-prefilled FULL prompt pages so
+        later admissions can share them. Valid because decode only writes
+        positions >= plen-1: pages strictly below the tail are never touched
+        again, and a plen%page_size==0 tail page only takes the replay's
+        byte-identical rewrite (schedule-independent KV rounding, PR 4)."""
+        if not self.prefix_cache:
+            return
+        register_prefix_pages(self._slot_pages[slot], lp, self.page_size,
+                              request_seed_digest(r.extras),
+                              self._page_hash, self._by_hash)
+
+    def assert_accounting(self):
+        """Ref-counted pool invariant: every non-null physical page is in
+        EXACTLY one of {free list, live (mapped by >=1 slot), cached LRU,
+        stolen stash}; per-page mapping references equal the refcounts; the
+        pages_in_use gauge equals the unique live count."""
+        assert self.paged
+        free, lru = set(self._free_pages), set(self._lru)
+        live = {p for m in self._slot_pages for p in m.values()}
+        stolen = set(self._stolen_pages)
+        assert len(free) == len(self._free_pages), "free list duplicates"
+        sets = (free, lru, live, stolen)
+        for i, a in enumerate(sets):
+            assert 0 not in a, "null page leaked into the pool"
+            for b in sets[i + 1:]:
+                assert not (a & b), (free, lru, live, stolen)
+        assert len(free) + len(lru) + len(live) + len(stolen) \
+            == self.n_pages - 1, (len(free), len(lru), len(live),
+                                  len(stolen), self.n_pages)
+        refs = np.zeros_like(self._ref)
+        for m in self._slot_pages:
+            for p in m.values():
+                refs[p] += 1
+        assert np.array_equal(refs, self._ref), (refs, self._ref)
+        assert self.stats.pages_in_use == len(live), \
+            (self.stats.pages_in_use, len(live))
+        for p in self._lru:
+            assert p in self._page_hash, p
 
     # ---------------------------------------------------------------- prefill
     def _page_row(self, slot: int) -> np.ndarray:
@@ -1019,6 +1349,9 @@ class ServeEngine:
         self._tick_prefill_tokens += C
         if s + C >= plen:                      # final chunk — slot goes live
             self._prefill_fifo.pop(0)
+            # the slot's full prompt pages are now byte-final: register them
+            # for prefix sharing before decode starts appending
+            self._register_prefix(slot, r, lp)
             self._cache = self._finalize_jit(
                 self._cache, jnp.int32(slot), jnp.int32(plen - 1),
                 jnp.asarray(page_row))
@@ -1092,6 +1425,7 @@ class ServeEngine:
             if self._fresh[slot]:
                 if r.t_first_token is None:   # resumed slots keep the original
                     r.t_first_token = time.time()
+                    r.first_token_tick = self._tick
                 self._fresh[slot] = False
             # retire when out of budget OR out of cache: `pos` is the next
             # write index, so the slot can take another decode step iff
@@ -1101,6 +1435,7 @@ class ServeEngine:
                     or int(pos[slot]) >= self.max_len:
                 r.done = True
                 r.t_done = time.time()
+                self.stats.record_request(r)
                 self._release(slot)
         if self._window:
             self._recycle_window_pages(pos)
@@ -1128,15 +1463,18 @@ class ServeEngine:
         `in_cache` mirrors the remap/unmap into the cache's page-table row —
         False while the slot is mid-prefill and its row is still null."""
         remaps, unmaps = recycle_dead_pages(
-            self._slot_pages[slot], self._free_pages, self._slot_cap[slot],
+            self._slot_pages[slot], self._slot_cap[slot],
             self.page_size, self._window, progress)
-        self.stats.pages_in_use -= len(unmaps)
+        for _, phys in unmaps:
+            # window pages are exclusively owned (prefix cache is off under
+            # a sliding window) — the decref drops them straight to free
+            self._decref_page(phys)
         if in_cache:
             for j, nxt, phys in remaps:
                 self._cache = self._remap_entry_jit(
                     self._cache, jnp.int32(slot), jnp.int32(j),
                     jnp.int32(nxt), jnp.int32(phys))
-            for j in unmaps:
+            for j, _ in unmaps:
                 self._cache = self._unmap_entry_jit(
                     self._cache, jnp.int32(slot), jnp.int32(j))
 
@@ -1150,9 +1488,19 @@ class ServeEngine:
             if not self.paged or e.shard != 0:
                 continue
             if e.kind == "page_squeeze":
-                take = min(e.pages, len(self._free_pages))
+                # steal free pages first; once the free list is dry, evict
+                # refcount-zero cached pages (LRU) — capacity pressure
+                # reclaims the prefix cache before it blocks live work
+                take = min(e.pages, self._allocatable())
                 for _ in range(take):
-                    self._stolen_pages.append(self._free_pages.pop())
+                    if self._free_pages:
+                        p = self._free_pages.pop()
+                    else:
+                        p, _ = self._lru.popitem(last=False)
+                        self._unregister(p)
+                        self.stats.prefix_evictions += 1
+                    self._stolen_pages.append(p)
+                self.stats.prefix_cached_pages = len(self._lru)
                 self.stats.faults_injected += 1
             elif e.kind == "page_restore":
                 self._free_pages.extend(self._stolen_pages)
@@ -1203,8 +1551,19 @@ class ServeEngine:
         if not self._queue:
             return False
         head = self._queue[0]
-        need = self._pages_for(head.live_prompt().shape[0],
-                               head.remaining_new())
+        hlp = head.live_prompt()
+        need = self._pages_for(hlp.shape[0], head.remaining_new())
+        # pages the head would actually have to ALLOCATE: shared hits stay
+        # resident through the preemption, so only the private remainder
+        # must come out of the victim + free/LRU
+        hits, _ = self._prefix_lookup(head, hlp)
+        n_shared, cow_src = self._share_plan(hlp.shape[0], hits)
+        need -= n_shared
+        # hit pages sitting in the LRU count as allocatable but get pinned
+        # at admission — mirror _admit's availability math
+        need += sum(1 for p in hits[:n_shared] if self._ref[p] == 0)
+        if cow_src is not None and self._ref[cow_src] == 0:
+            need += 1
         best = None
         for slot, r in enumerate(self._slots):
             if r is None or not self._active[slot] \
@@ -1212,7 +1571,11 @@ class ServeEngine:
                 continue
             if r.rid <= head.rid or r.preemptions >= self.max_preemptions:
                 continue
-            if len(self._slot_pages[slot]) + len(self._free_pages) < need:
+            # only the victim's EXCLUSIVELY-owned pages (ref 1) become
+            # allocatable at release; shared pages just drop a reference
+            exclusive = sum(1 for p in self._slot_pages[slot].values()
+                            if self._ref[p] == 1)
+            if exclusive + self._allocatable() < need:
                 continue
             if best is None or r.rid > self._slots[best].rid:
                 best = slot

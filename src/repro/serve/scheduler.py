@@ -38,23 +38,46 @@ a retirement at any lifecycle stage (queued / mid-prefill / decoding).
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from typing import Dict, List, Optional, Tuple
 
+import numpy as np
+
 from repro.serve.engine import (
-    Request, page_row_of, recycle_dead_pages, reserve_page_count,
-    window_page_budget)
+    Request, lookup_prefix_hits, page_row_of, prefix_share_plan,
+    recycle_dead_pages, register_prefix_pages, request_seed_digest,
+    reserve_page_count, window_page_budget)
 
 
 @dataclasses.dataclass
 class ShardState:
-    """Host-side bookkeeping for one shard's slots and page pool."""
+    """Host-side bookkeeping for one shard's slots and page pool.
+
+    PR 8 makes the pool ref-counted and content-addressed PER SHARD: page
+    ids are device-local, so each shard keeps its own prefix registry and
+    LRU — a cached page can only be shared by slots on the SAME shard
+    (cross-shard sharing would put a foreign page id in a device-local
+    table; placement instead PREFERS the shard already holding the prefix).
+    `pages_in_use` counts UNIQUE live pages (ref >= 1), so the occupancy
+    a shard reports shrinks by the sharing factor."""
     free_pages: List[int]                 # LOCAL ids, 1..n_pages-1 (0 = null)
     slots: List[Optional[Request]]
     prefill_fifo: List[int]               # local slot ids mid-prefill, FIFO
     chunk_next: List[int]                 # next chunk start per local slot
     slot_pages: List[Dict[int, int]]      # logical page -> LOCAL physical
     slot_cap: List[int]                   # highest writable logical page (excl)
-    pages_in_use: int = 0
+    pages_in_use: int = 0                 # unique pages with ref >= 1
+    ref: Optional[np.ndarray] = None      # (n_pages,) int32 refcounts
+    page_hash: Dict[int, bytes] = dataclasses.field(default_factory=dict)
+    by_hash: Dict[bytes, int] = dataclasses.field(default_factory=dict)
+    # refcount-zero pages whose content is still registered — evictable,
+    # oldest first
+    lru: "OrderedDict[int, None]" = dataclasses.field(
+        default_factory=OrderedDict)
+
+    def allocatable(self) -> int:
+        """Pages an admission can obtain: free + evictable cached."""
+        return len(self.free_pages) + len(self.lru)
 
 
 @dataclasses.dataclass
@@ -68,10 +91,23 @@ class ChunkWork:
     final: bool                           # last chunk — slot goes live after
 
 
+@dataclasses.dataclass
+class Placement:
+    """One admission decision (PR 8: placements carry the prefix-cache
+    outcome so the engine can clone COW tails and fast-path full hits)."""
+    shard: int
+    slot: int                             # local slot id
+    req: Request
+    cached_tokens: int = 0                # page-aligned tokens served cached
+    cow: Optional[Tuple[int, int]] = None  # (src, dst) LOCAL page clone
+    full_hit: bool = False                # whole prompt cached: zero chunks
+
+
 class ShardScheduler:
     def __init__(self, *, n_shards: int, slots_per_shard: int, n_pages: int,
                  page_size: int, pages_per_seq: int, max_len: int,
-                 chunk_tokens: int, window: int = 0):
+                 chunk_tokens: int, window: int = 0,
+                 prefix_cache: bool = True):
         assert n_pages >= 2, n_pages     # local null page + ≥1 usable
         self.n_shards = n_shards
         self.slots_per_shard = slots_per_shard
@@ -81,6 +117,15 @@ class ShardScheduler:
         self.max_len = max_len
         self.chunk_tokens = chunk_tokens
         self.window = window
+        # sliding-window recycling rewrites remapped pages in place —
+        # incompatible with sharing (same rule as the single-host engine)
+        self.prefix_cache = bool(prefix_cache) and not window
+        # prefix-cache counters, mirrored into EngineStats by the engine
+        self.prefix_hits = 0
+        self.prefix_misses = 0
+        self.prefix_hit_tokens = 0
+        self.prefix_evictions = 0
+        self.cow_copies = 0
         self.queue: List[Request] = []
         self.shards = [
             ShardState(free_pages=list(range(n_pages - 1, 0, -1)),
@@ -88,7 +133,8 @@ class ShardScheduler:
                        prefill_fifo=[],
                        chunk_next=[0] * slots_per_shard,
                        slot_pages=[{} for _ in range(slots_per_shard)],
-                       slot_cap=[0] * slots_per_shard)
+                       slot_cap=[0] * slots_per_shard,
+                       ref=np.zeros((n_pages,), np.int32))
             for _ in range(n_shards)]
         # ---- fault tolerance (PR 6) ----------------------------------------
         # placement mask, driven by serve/health's state machine: only
@@ -117,15 +163,76 @@ class ShardScheduler:
     def shard_pages_in_use(self) -> List[int]:
         return [s.pages_in_use for s in self.shards]
 
+    # ------------------------------------- ref-counted page allocator (PR 8)
+    def _unregister(self, s: ShardState, phys: int) -> None:
+        h = s.page_hash.pop(phys, None)
+        if h is not None and s.by_hash.get(h) == phys:
+            del s.by_hash[h]
+
+    def _alloc(self, s: ShardState) -> int:
+        """One private page: pop the shard's free list, else evict its
+        least-recently-used refcount-zero cached page."""
+        if s.free_pages:
+            p = s.free_pages.pop()
+        else:
+            p, _ = s.lru.popitem(last=False)     # oldest first
+            self._unregister(s, p)
+            self.prefix_evictions += 1
+        s.ref[p] = 1
+        s.pages_in_use += 1
+        return p
+
+    def _incref(self, s: ShardState, phys: int) -> None:
+        if s.ref[phys] == 0:
+            s.lru.pop(phys, None)    # back live: safe from eviction
+            s.pages_in_use += 1
+        s.ref[phys] += 1
+
+    def _decref(self, s: ShardState, phys: int) -> None:
+        s.ref[phys] -= 1
+        assert s.ref[phys] >= 0, int(phys)
+        if s.ref[phys] == 0:
+            s.pages_in_use -= 1
+            if self.prefix_cache and phys in s.page_hash:
+                s.lru[phys] = None   # registered content parks in the LRU
+            else:
+                self._unregister(s, phys)
+                s.free_pages.append(phys)
+
+    def _hit_plan(self, s: ShardState, r: Request, lp, plen: int):
+        """(hits, n_shared, cow_src, pinned) for placing `r` on shard `s`:
+        the shard's cached run over the prompt, the share/COW split, and how
+        many of those hit pages sit in the LRU (they leave the allocatable
+        set the instant an admission increfs them)."""
+        if not self.prefix_cache:
+            return [], 0, None, 0
+        hits = lookup_prefix_hits(s.by_hash, lp, self.page_size,
+                                  seed=request_seed_digest(r.extras))
+        n_shared, cow_src = prefix_share_plan(plen, hits, self.page_size)
+        pinned = sum(1 for p in hits[:n_shared] if s.ref[p] == 0)
+        if cow_src is not None and s.ref[cow_src] == 0:
+            pinned += 1
+        return hits, n_shared, cow_src, pinned
+
+    def register_prefix(self, shard: int, slot: int, r: Request) -> None:
+        """Content-register a fully-prefilled slot's full prompt pages in
+        ITS shard's registry (engine calls this at finalize)."""
+        if not self.prefix_cache:
+            return
+        s = self.shards[shard]
+        register_prefix_pages(s.slot_pages[slot], r.live_prompt(),
+                              self.page_size, request_seed_digest(r.extras),
+                              s.page_hash, s.by_hash)
+
     # -------------------------------------------------------------- placement
     def _eligible(self, need: int) -> Optional[int]:
-        """Least-loaded PLACEABLE shard with a free slot and `need` free
-        pages."""
+        """Least-loaded PLACEABLE shard with a free slot and `need`
+        allocatable (free + evictable-cached) pages."""
         best = None
         for i, s in enumerate(self.shards):
             if not self.placeable[i]:
                 continue
-            if len(s.free_pages) < need or None not in s.slots:
+            if s.allocatable() < need or None not in s.slots:
                 continue
             busy = sum(r is not None for r in s.slots)
             key = (s.pages_in_use, busy, i)
@@ -133,37 +240,90 @@ class ShardScheduler:
                 best = (key, i)
         return None if best is None else best[1]
 
-    def admit(self) -> List[Tuple[int, int, Request]]:
-        """Admit queued requests FIFO onto least-loaded shards.
+    def admit(self) -> List[Placement]:
+        """Admit queued requests FIFO onto CACHE-AWARE least-loaded shards.
 
-        Returns [(shard, local_slot, request)] placements; pages are already
-        reserved and mapped in `slot_pages` (logical page 0 upward — chunked
-        prefill writes row 0 first; windowed slots recycle forward from
-        there). Stalls — without overtaking — when the head fits nowhere."""
-        placed = []
+        Placement prefers the shard already holding the longest cached run
+        of the request's prompt (page ids are device-local, so sharing can
+        only happen shard-locally), breaking ties by least load — the PR 5
+        deterministic total order with cached_tokens prepended. Pages are
+        reserved and mapped on return (shared hits ref-bumped, privates
+        allocated); each Placement carries the COW clone for the engine to
+        execute and the full-hit flag for the zero-chunk fast path. Stalls —
+        without overtaking — when the head fits nowhere."""
+        placed: List[Placement] = []
+        pending_decref: List[Tuple[ShardState, int]] = []
         while self.queue:
             r = self.queue[0]
             # resumed requests (preempted / recovered off a dead shard) admit
             # on prompt + emitted tokens and the remaining budget; the page
             # need is invariant under resume (see engine._admit)
-            plen = r.live_prompt().shape[0]
+            lp = r.live_prompt()
+            plen = lp.shape[0]
             rem = r.remaining_new()
             need = self.pages_for(plen, rem)
-            shard = self._eligible(need)
-            if shard is None:
+            best = None
+            for i, s in enumerate(self.shards):
+                if not self.placeable[i] or None not in s.slots:
+                    continue
+                hits, n_shared, cow_src, pinned = self._hit_plan(
+                    s, r, lp, plen)
+                if s.allocatable() - pinned < need - n_shared:
+                    continue
+                busy = sum(x is not None for x in s.slots)
+                cached = (n_shared + (cow_src is not None)) * self.page_size
+                key = (-cached, s.pages_in_use, busy, i)
+                if best is None or key < best[0]:
+                    best = (key, i, hits, n_shared, cow_src, cached)
+            if best is None:
                 break
+            _, shard, hits, n_shared, cow_src, cached = best
             s = self.shards[shard]
             slot = s.slots.index(None)
-            pages = [s.free_pages.pop() for _ in range(need)]
-            s.slot_pages[slot] = {j: p for j, p in enumerate(pages)}
+            shared = hits[:n_shared]
+            # commit order: protect the hit pages FIRST (incref pulls them
+            # out of the eviction set), then allocate privates. cow_src
+            # stays pinned until the END of the admit wave — the engine
+            # clones it before any of this wave's pages get written
+            for p in shared:
+                self._incref(s, p)
+            cow = None
+            if cow_src is not None:
+                self._incref(s, cow_src)
+                pending_decref.append((s, cow_src))
+            pages = [self._alloc(s) for _ in range(need - n_shared)]
+            if cow_src is not None:
+                cow = (cow_src, pages[0])
+                self.cow_copies += 1
+            mapping = {j: p for j, p in enumerate(shared)}
+            for k, p in enumerate(pages):
+                mapping[n_shared + k] = p
+            s.slot_pages[slot] = mapping
             s.slot_cap[slot] = -(-min(self.max_len, plen + rem)
                                  // self.page_size)
-            s.pages_in_use += need
             s.slots[slot] = r
-            s.chunk_next[slot] = 0
-            s.prefill_fifo.append(slot)
+            r.cached_prompt_tokens = cached
+            if self.prefix_cache:
+                if cached:
+                    self.prefix_hits += 1
+                    self.prefix_hit_tokens += cached
+                else:
+                    self.prefix_misses += 1
+            full = cached >= plen
+            s.chunk_next[slot] = cached
+            if full:
+                # whole prompt already pooled (shared run + COW'd tail):
+                # no prefill chunks — register now, the engine finalizes
+                # the slot straight from this placement
+                self.register_prefix(shard, slot, r)
+            else:
+                s.prefill_fifo.append(slot)
             self.queue.pop(0)
-            placed.append((shard, slot, r))
+            placed.append(Placement(shard=shard, slot=slot, req=r,
+                                    cached_tokens=cached, cow=cow,
+                                    full_hit=full))
+        for s, p in pending_decref:
+            self._decref(s, p)
         return placed
 
     # ---------------------------------------------------------------- prefill
@@ -212,17 +372,22 @@ class ShardScheduler:
         the device-local page table for live slots."""
         s = self.shards[shard]
         remaps, unmaps = recycle_dead_pages(
-            s.slot_pages[slot], s.free_pages, s.slot_cap[slot],
+            s.slot_pages[slot], s.slot_cap[slot],
             self.page_size, self.window, progress)
-        s.pages_in_use -= len(unmaps)
-        return remaps, unmaps
+        for _, phys in unmaps:
+            # window pages are exclusively owned (prefix cache is off under
+            # a sliding window) — the decref drops them straight to free
+            self._decref(s, phys)
+        return remaps, [j for j, _ in unmaps]
 
     # -------------------------------------------------------------- retirement
     def release(self, shard: int, slot: int) -> None:
         """Retire a slot at ANY lifecycle stage: drain its chunk queue and
-        return every reserved page to the shard's free list (the mid-prefill
-        leak fix — a slot cancelled with chunks still queued must not keep
-        its reservation)."""
+        drop one reference per mapped page (the mid-prefill leak fix — a
+        slot cancelled with chunks still queued must not keep its
+        reservation). A shared page survives its releasing slot; it only
+        returns to the free list (or parks in the LRU, if registered) at
+        refcount zero."""
         s = self.shards[shard]
         s.slots[slot] = None
         if slot in s.prefill_fifo:
@@ -230,21 +395,28 @@ class ShardScheduler:
         s.chunk_next[slot] = 0
         freed = s.slot_pages[slot]
         if freed:
-            s.free_pages.extend(freed.values())
-            s.pages_in_use -= len(freed)
+            for phys in freed.values():
+                self._decref(s, phys)
             s.slot_pages[slot] = {}
         s.slot_cap[slot] = 0
 
     # ------------------------------------------- fault tolerance (PR 6)
     def steal_pages(self, shard: int, n: int) -> int:
         """page_squeeze fault: up to `n` pages vanish from the shard's FREE
-        list (never from live reservations — stealing mapped pages would
-        corrupt live KV; squeezing free ones starves admission, which is the
-        backpressure path under test). Returns pages actually taken."""
+        list, then from its refcount-zero cached LRU (capacity pressure
+        reclaims the prefix cache before it blocks live work) — never from
+        live reservations, stealing mapped pages would corrupt live KV.
+        Returns pages actually taken."""
         s = self.shards[shard]
-        take = min(n, len(s.free_pages))
+        take = min(n, s.allocatable())
         for _ in range(take):
-            self.stolen[shard].append(s.free_pages.pop())
+            if s.free_pages:
+                p = s.free_pages.pop()
+            else:
+                p, _ = s.lru.popitem(last=False)
+                self._unregister(s, p)
+                self.prefix_evictions += 1
+            self.stolen[shard].append(p)
         return take
 
     def restore_pages(self, shard: int) -> int:
@@ -278,6 +450,11 @@ class ShardScheduler:
         s.slot_pages = [{} for _ in range(self.slots_per_shard)]
         s.slot_cap = [0] * self.slots_per_shard
         s.pages_in_use = 0
+        # the shard's pool bytes are gone — its prefix registry dies with it
+        s.ref = np.zeros((self.n_pages,), np.int32)
+        s.page_hash = {}
+        s.by_hash = {}
+        s.lru = OrderedDict()
         self.stolen[shard].clear()
 
     def requeue(self, reqs: List[Request]) -> None:
@@ -313,22 +490,44 @@ class ShardScheduler:
                     continue
                 if r.rid <= head_rid or r.preemptions >= max_preemptions:
                     continue
-                if len(s.slot_pages[slot]) + len(s.free_pages) < need:
+                # only the victim's EXCLUSIVELY-owned pages (ref 1) become
+                # allocatable at release; shared pages just drop a reference
+                exclusive = sum(1 for p in s.slot_pages[slot].values()
+                                if s.ref[p] == 1)
+                if exclusive + s.allocatable() < need:
                     continue
                 if best is None or r.rid > best[0]:
                     best = (r.rid, i, slot)
         return None if best is None else (best[1], best[2])
 
     def assert_accounting(self) -> None:
-        """Pool-accounting invariant under faults: per shard,
-        free + mapped + stolen == n_pages - 1 (page 0 is the null page) and
-        `pages_in_use` matches the mappings exactly."""
+        """Ref-counted pool invariant under faults (PR 8): per shard, every
+        non-null physical page is in EXACTLY one of {free list, live
+        (mapped by >=1 slot), cached LRU, stolen stash} — so
+        free + uniquely-mapped + cached + stolen == n_pages - 1 — the
+        per-page mapping references (shared-weighted) equal the refcounts,
+        and `pages_in_use` equals the unique live count."""
         for i, s in enumerate(self.shards):
-            mapped = sum(len(m) for m in s.slot_pages)
-            assert mapped == s.pages_in_use, (i, mapped, s.pages_in_use)
-            total = len(s.free_pages) + mapped + len(self.stolen[i])
-            assert total == self.n_pages - 1, \
-                (i, len(s.free_pages), mapped, len(self.stolen[i]))
+            free, lru = set(s.free_pages), set(s.lru)
+            live = {p for m in s.slot_pages for p in m.values()}
+            stolen = set(self.stolen[i])
+            assert len(free) == len(s.free_pages), (i, "free duplicates")
+            groups = (free, lru, live, stolen)
+            for gi, a in enumerate(groups):
+                assert 0 not in a, (i, "null page leaked into the pool")
+                for b in groups[gi + 1:]:
+                    assert not (a & b), (i, free, lru, live, stolen)
+            assert len(free) + len(lru) + len(live) + len(stolen) \
+                == self.n_pages - 1, \
+                (i, len(free), len(lru), len(live), len(stolen))
+            refs = np.zeros_like(s.ref)
+            for m in s.slot_pages:
+                for p in m.values():
+                    refs[p] += 1
+            assert np.array_equal(refs, s.ref), (i, refs, s.ref)
+            assert s.pages_in_use == len(live), (i, s.pages_in_use, len(live))
+            for p in s.lru:
+                assert p in s.page_hash, (i, p)
 
     def find(self, req: Request) -> Optional[Tuple[int, int]]:
         for i, s in enumerate(self.shards):

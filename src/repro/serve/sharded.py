@@ -50,7 +50,7 @@ single-host `ServeEngine` for the same submissions — the equivalence
 from __future__ import annotations
 
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -87,6 +87,7 @@ class ShardedServeEngine:
                  wdtype: Optional[str] = None,
                  kv_dtype: Optional[str] = None,
                  chunk_pages: int = 2,
+                 prefix_cache: Optional[bool] = None,
                  max_queue: Optional[int] = None,
                  ttl_ticks: Optional[int] = None,
                  preempt_after: int = 2,
@@ -163,11 +164,17 @@ class ShardedServeEngine:
                         if n_pages is None else n_pages)
         assert self.n_pages >= 2, self.n_pages
 
+        # prefix cache (PR 8): per-shard ref-counted content registries;
+        # default on, silently off under a sliding window (recycling
+        # rewrites remapped pages in place — incompatible with sharing)
+        self.prefix_cache = (not self._window) if prefix_cache is None \
+            else (bool(prefix_cache) and not self._window)
         self._sched = ShardScheduler(
             n_shards=self.n_shards, slots_per_shard=self.slots_per_shard,
             n_pages=self.n_pages, page_size=page_size,
             pages_per_seq=self.pages_per_seq, max_len=max_len,
-            chunk_tokens=self.chunk_tokens, window=self._window)
+            chunk_tokens=self.chunk_tokens, window=self._window,
+            prefix_cache=self.prefix_cache)
 
         self.stats = EngineStats()
         # ---- fault tolerance & backpressure (PR 6) -------------------------
@@ -285,6 +292,20 @@ class ShardedServeEngine:
             _chunk, mesh=mesh,
             in_specs=(pspecs, chunk_specs, self._pool_specs),
             out_specs=self._pool_specs), **donate)
+
+        def _cow(pools, src, dst):
+            # COW tail clone, one (src, dst) pair per shard, LOCAL page
+            # ids. Shards with no clone this round pass src=dst=0: copying
+            # the null page onto itself is a no-op by construction
+            return {k: p.at[:, dst[0]].set(p[:, src[0]])
+                    for k, p in pools.items()}
+
+        cow_donate = {} if jax.default_backend() == "cpu" else \
+            {"donate_argnums": (0,)}
+        self._cow_jit = jax.jit(shard_map(
+            _cow, mesh=mesh,
+            in_specs=(self._pool_specs, vec_spec, vec_spec),
+            out_specs=self._pool_specs), **cow_donate)
 
     # ------------------------------------------------------------- lifecycle
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
@@ -408,31 +429,70 @@ class ShardedServeEngine:
         for w in work:
             self._sched.advance_chunk(w)
             if w.final:
-                g = self._gslot(w.shard, w.slot)
-                lp = w.req.live_prompt()
-                # the slot goes live: stamp its DEVICE-LOCAL table row and
-                # replay position into the host-authoritative state
-                self._page_table[g] = self._sched.page_row(w.shard, w.slot)
-                self._pos[g] = lp.shape[0] - 1
-                self._next_tok[g, 0] = int(lp[-1])
-                self._fresh[g] = True
-                self._active[g] = True
-                started = self._recover_started.pop(w.req.rid, None)
-                if started is not None:   # recovered stream back live
-                    self.stats.recovery_ticks_sum += self._tick - started
+                self._sched.register_prefix(w.shard, w.slot, w.req)
+                self._go_live(w.shard, w.slot, w.req)
         return True
+
+    def _go_live(self, shard: int, slot: int, r) -> None:
+        """Finalize a prefilled (or fully cache-hit) slot: stamp its
+        DEVICE-LOCAL table row and replay position into the
+        host-authoritative state."""
+        g = self._gslot(shard, slot)
+        lp = r.live_prompt()
+        self._page_table[g] = self._sched.page_row(shard, slot)
+        self._pos[g] = lp.shape[0] - 1
+        self._next_tok[g, 0] = int(lp[-1])
+        self._fresh[g] = True
+        self._active[g] = True
+        started = self._recover_started.pop(r.rid, None)
+        if started is not None:   # recovered stream back live
+            self.stats.recovery_ticks_sum += self._tick - started
 
     # ----------------------------------------------------------------- decode
     def _place(self, placements) -> None:
-        for shard, slot, r in placements:
-            g = self._gslot(shard, slot)
+        cow_rounds: List[Dict[int, Tuple[int, int]]] = []
+        for p in placements:
+            g = self._gslot(p.shard, p.slot)
+            r = p.req
             self._slots[g] = r
             self._active[g] = False
             self._fresh[g] = False
             self._temp[g], self._topk[g] = r.temperature, r.top_k
             self._topp[g], self._sseed[g] = r.top_p, r.seed
             self.stats.prefills += 1
-            self.stats.prefill_tokens += r.live_prompt().shape[0]
+            self.stats.prefill_tokens += (r.live_prompt().shape[0]
+                                          - p.cached_tokens)
+            if p.cow is not None:
+                # one clone per shard per shard_map round; same-shard clones
+                # spill to later rounds preserving placement order
+                for rnd in cow_rounds:
+                    if p.shard not in rnd:
+                        rnd[p.shard] = p.cow
+                        break
+                else:
+                    cow_rounds.append({p.shard: p.cow})
+        for rnd in cow_rounds:
+            src = np.zeros((self.n_shards,), np.int32)
+            dst = np.zeros((self.n_shards,), np.int32)
+            for shard, (s_loc, d_loc) in rnd.items():
+                src[shard], dst[shard] = s_loc, d_loc
+            self._pools = self._cow_jit(self._pools, jnp.asarray(src),
+                                        jnp.asarray(dst))
+        for p in placements:
+            if p.full_hit:
+                # every prompt page came from the cache: zero prefill
+                # chunks, the slot goes live straight from placement
+                self._go_live(p.shard, p.slot, p.req)
+
+    def _sync_prefix_stats(self) -> None:
+        sc = self._sched
+        st = self.stats
+        st.prefix_hits = sc.prefix_hits
+        st.prefix_misses = sc.prefix_misses
+        st.prefix_hit_tokens = sc.prefix_hit_tokens
+        st.prefix_evictions = sc.prefix_evictions
+        st.cow_copies = sc.cow_copies
+        st.prefix_cached_pages = sum(len(s.lru) for s in sc.shards)
 
     def step(self) -> bool:
         """One engine tick: apply scheduled faults, advance shard health
@@ -467,6 +527,7 @@ class ShardedServeEngine:
         self.stats.pages_in_use = self._sched.pages_in_use
         self.stats.peak_pages_in_use = max(self.stats.peak_pages_in_use,
                                            self.stats.pages_in_use)
+        self._sync_prefix_stats()
         chunk_ran = self._prefill_tick()
         decoding = [g for g in range(self.n_slots) if self._active[g]]
         if not decoding:
@@ -502,11 +563,13 @@ class ShardedServeEngine:
             if self._fresh[g]:
                 if r.t_first_token is None:   # resumed slots keep the original
                     r.t_first_token = time.time()
+                    r.first_token_tick = self._tick
                 self._fresh[g] = False
             if len(r.out_tokens) >= r.max_new_tokens \
                     or int(self._pos[g]) >= self.max_len:
                 r.done = True
                 r.t_done = time.time()
+                self.stats.record_request(r)
                 self._release(g)
         if self._window:
             self._recycle_window_pages()

@@ -175,7 +175,7 @@ def test_ttl_retires_stale_requests(smol):
     assert all(r.done and r.timed_out and not r.out_tokens for r in stale)
     assert eng.stats.timeouts == 2
     assert eng.stats.pages_in_use == 0
-    assert len(eng._free_pages) == eng.n_pages - 1  # zero page leak
+    assert eng.pages_allocatable() == eng.n_pages - 1  # zero page leak
 
 
 def test_single_host_squeeze_parity_and_zero_leak(smol):
@@ -202,7 +202,7 @@ def test_single_host_squeeze_parity_and_zero_leak(smol):
     for a, b in zip(base, chaos):
         assert a.done and b.done and not b.timed_out
         assert a.out_tokens == b.out_tokens
-    assert len(eng._free_pages) == eng.n_pages - 1
+    assert eng.pages_allocatable() == eng.n_pages - 1
     assert not eng._stolen_pages
     assert eng.stats.pages_in_use == 0
 
@@ -233,7 +233,7 @@ def test_pool_exhaustion_queues_fifo_single_host(smol):
     eng = ServeEngine(model, n_slots=4, max_len=64, params=params,
                       page_size=8, n_pages=4)
     _fifo_exhaustion(eng)
-    assert len(eng._free_pages) == eng.n_pages - 1
+    assert eng.pages_allocatable() == eng.n_pages - 1
     assert eng.stats.pages_in_use == 0
 
 

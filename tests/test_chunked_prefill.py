@@ -82,7 +82,7 @@ def test_chunked_exact_across_chunk_divisibility(smol):
         assert eng.stats.chunk_compiles == 1
         assert eng.stats.prefill_compiles == 0
         assert eng.stats.pages_in_use == 0
-        assert len(eng._free_pages) == eng.n_pages - 1
+        assert eng.pages_allocatable() == eng.n_pages - 1
 
 
 @pytest.mark.parametrize("kv_dtype", [None, "bf16", "int8"])
@@ -163,7 +163,7 @@ def test_chunked_mla_kv_dtypes(mla, kv_dtype):
         eng.run_to_completion()
         assert r.out_tokens == solo, (kv_dtype, n, r.out_tokens, solo)
         assert eng.stats.pages_in_use == 0
-        assert len(eng._free_pages) == eng.n_pages - 1
+        assert eng.pages_allocatable() == eng.n_pages - 1
 
 
 def test_mla_sampled_and_int8_weights(mla):
@@ -235,7 +235,7 @@ def test_chunked_page_boundary_reservation_exact(smol):
         eng.run_to_completion()
         assert r.out_tokens == solo, (plen, r.out_tokens, solo)
         assert eng.stats.pages_in_use == 0
-        assert len(eng._free_pages) == eng.n_pages - 1
+        assert eng.pages_allocatable() == eng.n_pages - 1
     assert eng.stats.chunk_compiles == 1
 
 
@@ -309,7 +309,7 @@ def test_pool_reuse_while_chunks_queued(smol):
     assert r_third.out_tokens == solo["third"]
     assert saw_reuse, "third request never overlapped the long prefill"
     assert eng.stats.pages_in_use == 0
-    assert len(eng._free_pages) == eng.n_pages - 1
+    assert eng.pages_allocatable() == eng.n_pages - 1
 
 
 # ------------------------------------------------------- windowed + chunked
@@ -529,7 +529,7 @@ def test_cancel_drains_reservations_at_every_stage(smol):
     eng.run_to_completion()
     assert r_short.out_tokens == solo
     assert eng.stats.pages_in_use == 0
-    assert len(eng._free_pages) == eng.n_pages - 1
+    assert eng.pages_allocatable() == eng.n_pages - 1
     # cancel while decoding releases the slot's pages too
     r = eng.submit(_prompt(53, 9), max_new_tokens=30)
     for _ in range(6):
@@ -537,4 +537,4 @@ def test_cancel_drains_reservations_at_every_stage(smol):
     assert len(r.out_tokens) > 0 and not r.done
     eng.cancel(r)
     assert eng.stats.pages_in_use == 0
-    assert len(eng._free_pages) == eng.n_pages - 1
+    assert eng.pages_allocatable() == eng.n_pages - 1

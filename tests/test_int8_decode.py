@@ -286,7 +286,7 @@ def test_window_slots_hold_o_window_pages(smol):
     # O(window): ceil((W-1)/ps) + 3 pages, NOT the 8-page full span
     assert eng.stats.peak_pages_in_use <= eng._window_pages() < 8
     assert eng.stats.pages_in_use == 0 \
-        and len(eng._free_pages) == eng.n_pages - 1
+        and eng.pages_allocatable() == eng.n_pages - 1
 
 
 def test_window_pool_frees_pages_for_queued_requests(smol):

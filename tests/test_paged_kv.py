@@ -45,7 +45,7 @@ def test_paged_matches_dense_oracle_across_page_boundaries(smol):
         assert reqs[n].out_tokens == solo[n], (n, reqs[n].out_tokens, solo[n])
     # pool occupancy: every reserved page returned on retirement
     assert eng.stats.pages_in_use == 0
-    assert len(eng._free_pages) == eng.n_pages - 1
+    assert eng.pages_allocatable() == eng.n_pages - 1
 
 
 def test_prompt_len_equals_max_len(smol):
@@ -119,7 +119,7 @@ def test_pool_smaller_than_dense_worst_case(smol):
         assert r.out_tokens == solo[n], (n, r.out_tokens, solo[n])
     assert stats.peak_pages_in_use <= 7
     assert stats.pages_in_use == 0          # everything returned
-    assert len(eng._free_pages) == 7
+    assert eng.pages_allocatable() == 7
 
 
 def test_auto_page_size_adapts_to_max_len(smol):
@@ -224,7 +224,7 @@ def test_idle_slot_never_corrupts_pool_pages(smol):
     for key, r in reqs.items():
         assert r.out_tokens == solo[key], (key, r.out_tokens, solo[key])
     assert eng.stats.pages_in_use == 0
-    assert len(eng._free_pages) == eng.n_pages - 1
+    assert eng.pages_allocatable() == eng.n_pages - 1
 
 
 # ------------------------------------------------------------------- summary

@@ -1,0 +1,405 @@
+"""Prefix caching with copy-on-write pages (PR 8).
+
+The ref-counted, content-addressed page allocator lets requests that share
+a page-aligned prompt prefix decode off the SAME physical pages: a warmup
+request registers its prompt pages at finalize (sha1 digest chain over
+page-aligned token bytes), later requests point their page-table rows at
+the hits, bump refcounts, and resume chunked prefill mid-prompt. The page
+the first-token replay writes is NEVER shared — a fully-cached tail is
+copy-on-write cloned into a private page — so decode always lands on
+private storage. Invariants pinned here:
+
+  * token parity — cached engines emit IDENTICAL streams to cache-off
+    twins on the same submissions (PR 4's schedule-independent KV rounding
+    makes shared prefixes token-exact), greedy and sampled;
+  * a full-page-aligned duplicate prompt is a FULL HIT: zero prefill
+    chunks, one COW clone, first token on the next tick;
+  * sharing is prefix-contiguous: divergence inside the first page shares
+    nothing; prompts shorter than one page never register;
+  * every retirement path (done / cancel mid-prefill / TTL) decrefs
+    through the allocator — pages return to the LRU at refcount zero and
+    the partition invariant free + live + lru + stolen == n_pages - 1
+    holds at every boundary (`assert_accounting`);
+  * LRU eviction under pool pressure steals cached pages oldest-first and
+    page_squeeze faults dip into the LRU after the free list, with chaos
+    parity intact;
+  * sliding-window configs silently disable the cache (window recycling
+    rewrites remapped pages in place — incompatible with sharing);
+  * the sharded engine shares shard-locally with cache-aware placement,
+    token-identical to the single-host engine on an 8-device mesh.
+"""
+
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import ExecOptions, build_model
+from repro.launch.mesh import make_serve_mesh
+from repro.serve.engine import ServeEngine
+from repro.serve.faults import FaultEvent, FaultPlan
+from repro.serve.sharded import ShardedServeEngine
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="module")
+def smol():
+    cfg = get_config("smollm-360m").smoke()
+    model = build_model(cfg, ExecOptions(attn_impl="reference", ce_chunk=32))
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _prompt(seed, n=12, vocab=512):
+    return np.asarray(
+        jax.random.randint(jax.random.key(seed), (n,), 0, vocab), np.int32)
+
+
+def _engine(model, params, cache=None, **kw):
+    kw.setdefault("n_slots", 4)
+    kw.setdefault("max_len", 96)
+    kw.setdefault("page_size", 8)
+    kw.setdefault("chunk_pages", 1)
+    return ServeEngine(model, params=params, prefix_cache=cache, **kw)
+
+
+def _shared_wave(eng, sysp, n=4, new=6, sample=False):
+    """Warmup registers `sysp`; returns (warmup, wave) after completion."""
+    warm = eng.submit(sysp, max_new_tokens=4)
+    eng.run_to_completion()
+    wave = []
+    for i in range(n):
+        tail = _prompt(100 + i, 4 + 3 * i)
+        sp = (0.8, 40, 0.95) if sample and i % 2 else None
+        wave.append(eng.submit(np.concatenate([sysp, tail]),
+                               max_new_tokens=new, sample_params=sp,
+                               seed=50 + i))
+    eng.run_to_completion()
+    return warm, wave
+
+
+# ------------------------------------------------------------- token parity
+def test_shared_prefix_parity_and_page_savings(smol):
+    """Cached vs cache-off twins on the same warmup + shared-prefix wave
+    (greedy AND sampled): identical streams, strictly lower peak pool
+    pages, hit counters advance, pool balances to the page."""
+    _, model, params = smol
+    sysp = _prompt(7, 48)
+    legs = {}
+    for cache in (True, False):
+        eng = _engine(model, params, cache)
+        warm, wave = _shared_wave(eng, sysp, sample=True)
+        eng.assert_accounting()
+        legs[cache] = (eng, [list(r.out_tokens) for r in [warm] + wave])
+    eng_c, toks_c = legs[True]
+    eng_u, toks_u = legs[False]
+    assert toks_c == toks_u
+    assert eng_c.stats.peak_pages_in_use < eng_u.stats.peak_pages_in_use
+    assert eng_c.stats.prefix_hits == 4
+    # every wave request shares the pages before the replay-written tail:
+    # tail = (plen-1)//8 >= 6, warmup registered 48//8 = 6 pages
+    assert eng_c.stats.prefix_hit_tokens == 4 * 48
+    assert eng_u.stats.prefix_hits == eng_u.stats.prefix_misses == 0
+    # fewer prompt tokens actually prefilled on the cached engine
+    assert eng_c.stats.prefill_tokens < eng_u.stats.prefill_tokens
+    for eng in (eng_c, eng_u):
+        assert eng.stats.pages_in_use == 0
+        assert eng.pages_allocatable() == eng.n_pages - 1
+
+
+def test_full_hit_skips_prefill_entirely(smol):
+    """A page-aligned duplicate prompt hits every page: the last one is COW
+    cloned (the replay write must not touch shared storage), NO prefill
+    chunks run, and the first token arrives on the next tick."""
+    _, model, params = smol
+    eng = _engine(model, params, True)
+    sysp = _prompt(3, 32)                      # 32 % 8 == 0: full-hit shape
+    warm = eng.submit(sysp, max_new_tokens=4)
+    eng.run_to_completion()
+    chunks0 = eng.stats.prefill_chunks
+    dup = eng.submit(sysp.copy(), max_new_tokens=4)
+    eng.run_to_completion()
+    assert dup.out_tokens == warm.out_tokens
+    assert eng.stats.prefill_chunks == chunks0          # zero chunks
+    assert eng.stats.cow_copies == 1
+    assert eng.stats.prefix_hit_tokens == 32
+    assert dup.first_token_tick - dup.submit_tick == 1  # next tick
+    eng.assert_accounting()
+
+
+def test_divergence_inside_first_page_shares_nothing(smol):
+    """Prompts that differ inside page 0 have no common page-aligned
+    prefix: zero hits, yet both decode exactly as a fresh engine would."""
+    _, model, params = smol
+    a = _prompt(11, 24)
+    b = a.copy()
+    b[2] = (b[2] + 1) % 512                    # diverge at token 2
+    eng = _engine(model, params, True)
+    ra = eng.submit(a, max_new_tokens=4)
+    eng.run_to_completion()
+    rb = eng.submit(b, max_new_tokens=4)
+    eng.run_to_completion()
+    assert eng.stats.prefix_hits == 0 and eng.stats.prefix_hit_tokens == 0
+    fresh = _engine(model, params, False)
+    fa = fresh.submit(a, max_new_tokens=4)
+    fb = fresh.submit(b, max_new_tokens=4)
+    fresh.run_to_completion()
+    assert ra.out_tokens == fa.out_tokens
+    assert rb.out_tokens == fb.out_tokens
+    eng.assert_accounting()
+
+
+def test_prompt_shorter_than_one_page(smol):
+    """A sub-page prompt has no page-aligned prefix to register or hit —
+    its only page is the replay-written tail. Twice the same short prompt:
+    identical tokens, zero hits, zero registrations."""
+    _, model, params = smol
+    p = _prompt(5, 5)
+    eng = _engine(model, params, True)
+    r1 = eng.submit(p, max_new_tokens=4)
+    eng.run_to_completion()
+    r2 = eng.submit(p.copy(), max_new_tokens=4)
+    eng.run_to_completion()
+    assert r1.out_tokens == r2.out_tokens
+    assert eng.stats.prefix_hits == 0
+    assert eng.stats.prefix_cached_pages == 0   # nothing ever registered
+    eng.assert_accounting()
+    assert eng.pages_allocatable() == eng.n_pages - 1
+
+
+# -------------------------------------------------------- retirement paths
+def test_cancel_mid_prefill_on_shared_pages(smol):
+    """Cancelling a sharer mid-prefill decrefs its shared pages without
+    freeing the registry copy other requests still read."""
+    _, model, params = smol
+    eng = _engine(model, params, True, n_slots=2)
+    sysp = _prompt(9, 48)
+    warm = eng.submit(sysp, max_new_tokens=4)
+    eng.run_to_completion()
+    # two sharers; each still prefills its private tail over several ticks
+    tail_a, tail_b = _prompt(201, 17), _prompt(202, 17)
+    ra = eng.submit(np.concatenate([sysp, tail_a]), max_new_tokens=4)
+    rb = eng.submit(np.concatenate([sysp, tail_b]), max_new_tokens=4)
+    eng.step()                      # admitted, first chunk ran
+    assert eng.stats.prefix_hits == 2
+    eng.cancel(ra)                  # mid-prefill on shared pages
+    eng.assert_accounting()
+    eng.run_to_completion()
+    assert not ra.out_tokens and rb.done
+    # the survivor decodes exactly what it would have without the cancel
+    twin = _engine(model, params, True, n_slots=2)
+    tw = twin.submit(sysp, max_new_tokens=4)
+    twin.run_to_completion()
+    tb = twin.submit(np.concatenate([sysp, tail_b]), max_new_tokens=4)
+    twin.run_to_completion()
+    assert tw.out_tokens == warm.out_tokens
+    assert tb.out_tokens == rb.out_tokens
+    eng.assert_accounting()
+    assert eng.pages_allocatable() == eng.n_pages - 1
+
+
+def test_lru_eviction_under_pool_pressure(smol):
+    """A tight pool evicts cached (refcount-zero) pages oldest-first to
+    serve new traffic; the evicted prefix stops hitting but decodes
+    correctly when resubmitted."""
+    _, model, params = smol
+    eng = _engine(model, params, True, n_slots=2, max_len=64, n_pages=7)
+    sysp = _prompt(13, 24)                     # 3 registered pages
+    warm = eng.submit(sysp, max_new_tokens=4)
+    eng.run_to_completion()
+    assert eng.stats.prefix_cached_pages == 3
+    big = eng.submit(_prompt(14, 40), max_new_tokens=4)   # needs 6 pages
+    eng.run_to_completion()
+    assert big.done
+    assert eng.stats.prefix_evictions > 0
+    again = eng.submit(sysp.copy(), max_new_tokens=4)
+    eng.run_to_completion()
+    assert again.out_tokens == warm.out_tokens   # correct, just cold(er)
+    eng.assert_accounting()
+    assert eng.pages_allocatable() == eng.n_pages - 1
+
+
+def test_squeeze_steals_cached_pages_with_parity(smol):
+    """page_squeeze dips into the LRU once the free list is dry: cached
+    pages are sacrificed (counted as evictions), tokens stay IDENTICAL to
+    a fault-free twin, and the restore returns every stolen page."""
+    _, model, params = smol
+    sysp = _prompt(17, 32)
+    kw = dict(n_slots=2, max_len=64, n_pages=11)
+
+    def leg(plan):
+        eng = _engine(model, params, True, fault_plan=plan, **kw)
+        warm, wave = _shared_wave(eng, sysp, n=3, new=4)
+        eng.assert_accounting()
+        return eng, [list(r.out_tokens) for r in [warm] + wave]
+
+    # probe the (deterministic) tick at which the warmup's pages reach the
+    # LRU, so the squeeze provably has only 6 free pages for its 8 — the
+    # 2-page remainder MUST come from evicting registered cache pages
+    probe = _engine(model, params, True, **kw)
+    probe.submit(sysp, max_new_tokens=4)
+    probe.run_to_completion()
+    t = probe._tick + 1
+    assert probe.stats.prefix_cached_pages == 4   # 32 // 8 registered
+    plan = FaultPlan(events=(
+        FaultEvent(tick=t, kind="page_squeeze", pages=8),
+        FaultEvent(tick=t + 6, kind="page_restore")))
+    eng_b, toks_b = leg(None)
+    eng_f, toks_f = leg(plan)
+    assert eng_f.stats.faults_injected == 2
+    assert eng_f.stats.prefix_evictions == 2      # LRU sacrificed 8 - 6
+    assert toks_b == toks_f
+    assert not eng_f._stolen_pages               # restore returned them
+    assert eng_f.pages_allocatable() == eng_f.n_pages - 1
+
+
+# ------------------------------------------------------------ configuration
+def test_window_silently_disables_prefix_cache(smol):
+    """Sliding-window recycling rewrites remapped pages in place — sharing
+    them would corrupt other readers, so windowed engines run cache-off
+    even when asked (silently: the flag is a hint, the window a config)."""
+    import dataclasses
+    cfg, _, _ = smol
+    wcfg = dataclasses.replace(cfg, window=16)
+    wmodel = build_model(wcfg, ExecOptions(attn_impl="reference",
+                                           ce_chunk=32))
+    wparams = wmodel.init(jax.random.key(2))
+    eng = ServeEngine(wmodel, n_slots=2, max_len=96, params=wparams,
+                      page_size=8, prefix_cache=True)
+    assert eng.prefix_cache is False
+    p = _prompt(19, 40)
+    r1 = eng.submit(p, max_new_tokens=4)
+    eng.run_to_completion()
+    r2 = eng.submit(p.copy(), max_new_tokens=4)
+    eng.run_to_completion()
+    assert r1.out_tokens == r2.out_tokens
+    assert eng.stats.prefix_hits == 0
+    eng.assert_accounting()
+
+
+def test_explicit_prefix_cache_needs_paged_chunked(smol):
+    """prefix_cache=True names the paged+chunked datapath — asking for it
+    on an engine without one is a config error, not a silent no-op."""
+    _, model, params = smol
+    with pytest.raises(ValueError):
+        ServeEngine(model, n_slots=2, max_len=64, params=params,
+                    paged=False, prefix_cache=True)
+    with pytest.raises(ValueError):
+        ServeEngine(model, n_slots=2, max_len=64, params=params,
+                    page_size=8, chunked_prefill=False, prefix_cache=True)
+    # opting OUT is always legal, and the refcount machinery still balances
+    eng = ServeEngine(model, n_slots=2, max_len=64, params=params,
+                      page_size=8, prefix_cache=False)
+    r = eng.submit(_prompt(1, 20), max_new_tokens=4)
+    eng.run_to_completion()
+    assert r.done
+    eng.assert_accounting()
+
+
+def test_ttft_tpot_percentiles_in_summary(smol):
+    """EngineStats.summary() emits per-request TTFT/TPOT p50/p99 (wall) —
+    the SLO surface roadmap item 4 consumes."""
+    _, model, params = smol
+    eng = _engine(model, params)
+    for i in range(3):
+        eng.submit(_prompt(30 + i, 10 + 5 * i), max_new_tokens=6)
+    eng.run_to_completion()
+    s = eng.stats.summary()
+    for k in ("ttft_p50_s", "ttft_p99_s", "tpot_p50_s", "tpot_p99_s"):
+        assert k in s and s[k] >= 0.0
+    assert s["ttft_p50_s"] > 0.0 and s["ttft_p99_s"] >= s["ttft_p50_s"]
+
+
+# ------------------------------------------------------------------ sharded
+def test_sharded_prefix_cache_single_shard_parity(smol):
+    """A 1-shard sharded engine with the cache on degenerates exactly to
+    the single-host cached engine — placement, COW, full hits and all."""
+    _, model, params = smol
+    sysp = _prompt(23, 32)
+    single = _engine(model, params, True)
+    sw, swave = _shared_wave(single, sysp)
+    sdup = single.submit(sysp.copy(), max_new_tokens=4)   # full hit
+    single.run_to_completion()
+    eng = ShardedServeEngine(model, mesh=make_serve_mesh(1), n_slots=4,
+                             max_len=96, params=params, page_size=8,
+                             chunk_pages=1, prefix_cache=True)
+    w, wave = _shared_wave(eng, sysp)
+    dup = eng.submit(sysp.copy(), max_new_tokens=4)
+    eng.run_to_completion()
+    assert [list(r.out_tokens) for r in [w] + wave + [dup]] \
+        == [list(r.out_tokens) for r in [sw] + swave + [sdup]]
+    assert eng.stats.prefix_hits == single.stats.prefix_hits
+    assert eng.stats.cow_copies == single.stats.cow_copies >= 1
+    eng.assert_pool_accounting()
+    eng.assert_local_page_tables()
+
+
+_PRELUDE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, numpy as np
+from repro.configs import get_config
+from repro.models import ExecOptions, build_model
+from repro.launch.mesh import make_serve_mesh
+from repro.serve.engine import ServeEngine
+from repro.serve.sharded import ShardedServeEngine
+
+cfg = get_config("smollm-360m").smoke()
+model = build_model(cfg, ExecOptions(attn_impl="reference", ce_chunk=32))
+params = model.init(jax.random.key(1))
+
+def prompt(seed, n, vocab=512):
+    return np.asarray(jax.random.randint(
+        jax.random.key(seed), (n,), 0, vocab), np.int32)
+"""
+
+
+def _run(script: str):
+    env = {**os.environ, "PYTHONPATH": "src"}
+    r = subprocess.run([sys.executable, "-c", _PRELUDE + script], env=env,
+                       capture_output=True, text=True, cwd=REPO)
+    assert r.returncode == 0, (r.stdout[-2000:], r.stderr[-4000:])
+    return r.stdout
+
+
+def test_sharded_prefix_parity_8dev():
+    """8-device mesh: cache-aware placement routes sharers to the shard
+    holding the prefix (shard-local registries, device-local page ids);
+    cached and cache-off engines emit identical streams, and a sequential
+    aligned duplicate is a full hit with a COW clone."""
+    _run(r"""
+mesh = make_serve_mesh()
+sysp = prompt(7, 24)
+
+def leg(cache):
+    eng = ShardedServeEngine(model, mesh=mesh, n_slots=16, max_len=64,
+                             params=params, page_size=8, chunk_pages=1,
+                             prefix_cache=cache)
+    warm = eng.submit(sysp, max_new_tokens=4)
+    eng.run_to_completion()
+    reqs = [eng.submit(np.concatenate([sysp, prompt(100 + i, 5 + i)]),
+                       max_new_tokens=6, seed=50 + i) for i in range(4)]
+    reqs.append(eng.submit(prompt(40, 5), max_new_tokens=6))
+    eng.run_to_completion()
+    dup = eng.submit(sysp.copy(), max_new_tokens=4)   # 24 % 8 == 0
+    eng.run_to_completion()
+    eng.assert_pool_accounting()
+    eng.assert_local_page_tables()
+    return eng, [list(r.out_tokens) for r in [warm] + reqs + [dup]]
+
+eng_c, toks_c = leg(True)
+eng_u, toks_u = leg(False)
+assert toks_c == toks_u, (toks_c, toks_u)
+assert toks_c[-1] == toks_c[0], toks_c        # dup replays the warmup
+assert eng_c.stats.prefix_hits >= 3, eng_c.stats.prefix_hits
+assert eng_c.stats.cow_copies >= 1
+assert eng_c.stats.peak_pages_in_use < eng_u.stats.peak_pages_in_use, \
+    (eng_c.stats.peak_pages_in_use, eng_u.stats.peak_pages_in_use)
+assert eng_u.stats.prefix_hits == 0
+print("OK")
+""")

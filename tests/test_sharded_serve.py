@@ -77,7 +77,7 @@ def parity(model, params, lens, *, kw=None, sample=None, new_tokens=None,
         assert a.done and b.done
         assert a.out_tokens == b.out_tokens, (a.out_tokens, b.out_tokens)
     assert eng.stats.pages_in_use == 0
-    assert all(len(s.free_pages) == eng.n_pages - 1
+    assert all(s.allocatable() == eng.n_pages - 1
                for s in eng._sched.shards)
     # pages are physically partitioned over the data axis
     spec = eng._pools["k"].sharding.spec
@@ -132,7 +132,7 @@ eng.cancel(r_long)             # mid-prefill retirement
 eng.run_to_completion()
 eng.assert_local_page_tables()
 assert eng.stats.pages_in_use == 0
-assert all(len(s.free_pages) == eng.n_pages - 1 for s in eng._sched.shards)
+assert all(s.allocatable() == eng.n_pages - 1 for s in eng._sched.shards)
 single = ServeEngine(model, n_slots=2, max_len=64, params=params, page_size=8)
 s_short = single.submit(prompt(1, 9), max_new_tokens=4)
 single.run_to_completion()
