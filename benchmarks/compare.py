@@ -100,6 +100,16 @@ GATES = {
         "prefix_token_divergence": ("lower", 0.0, "det"),
         "cache_hit_ttft_ratio": ("lower", 0.05, "det"),
         "prefix_pool_pages_ratio": ("lower", 0.05, "det"),
+        # live page migration (PR 9): drain-via-migration twins are exact
+        # replay arithmetic on fixed traffic — migrated streams must equal
+        # the fault-free twin's (zero divergence, zero slack) and migration
+        # must recompute ZERO prefill chunks where replay recomputes the
+        # displaced prompts (chunk ratio pinned at 0). The post-rebalance
+        # imbalance is deterministic tick math, held strictly below the
+        # committed sharded baseline (0.67)
+        "migration_token_divergence": ("lower", 0.0, "det"),
+        "migration_drain_chunk_ratio": ("lower", 0.0, "det"),
+        "rebalance_occupancy_imbalance": ("lower", 0.04, "det"),
     },
     "soc": {
         "sweep_wall_s": ("lower", 0.20, "wall"),
@@ -131,7 +141,12 @@ ABS_SLACK = {"int8_token_divergence": 0.05,
              "chaos_preemptions": 0.5,
              # prefix-cache parity baseline is exactly 0 — ZERO slack: one
              # diverging stream on shared pages fails the gate
-             "prefix_token_divergence": 0.0}
+             "prefix_token_divergence": 0.0,
+             # migration parity and the drain chunk ratio are exactly 0 —
+             # ZERO slack: one diverged stream or one re-prefilled chunk on
+             # the migration path fails the gate
+             "migration_token_divergence": 0.0,
+             "migration_drain_chunk_ratio": 0.0}
 
 
 def load(d: pathlib.Path, section: str):

@@ -457,6 +457,25 @@ def bench_serve():
           f"mean_recovery_ticks={metrics['chaos_mean_recovery_ticks']:.1f},"
           f"faults={metrics['chaos_faults_injected']:.0f}")
 
+    # ---- live page migration + elastic rebalancing (PR 9) -----------------
+    # Drain leg: a sensor-driven DRAINING shard re-homes its live slots by
+    # page moves over the modeled UCIe link instead of re-prefill replay.
+    # Every metric is deterministic tick/chunk arithmetic on fixed traffic:
+    # divergence vs the fault-free twin must be 0, and the drain-cost ratio
+    # — extra prefill chunks of migration over extra chunks of replay — must
+    # be 0 (O(bytes) moves recompute NOTHING). Rebalance leg: after the
+    # drained shard rejoins empty, threshold-1 elastic moves pull load back;
+    # the post-rebalance token imbalance is det-gated strictly below the
+    # committed sharded baseline (0.67).
+    metrics.update(_bench_migration_serve())
+    print(f"serve,migration,token_divergence="
+          f"{metrics['migration_token_divergence']:.3f},"
+          f"drain_chunk_ratio={metrics['migration_drain_chunk_ratio']:.3f},"
+          f"migrations={metrics['migration_count']:.0f},"
+          f"pages={metrics['migration_pages_moved']:.0f},"
+          f"rebalance_imbalance="
+          f"{metrics['rebalance_occupancy_imbalance']:.3f}")
+
     # ---- per-slot sampling overhead ---------------------------------------
     # sampled decode vs greedy decode, same engine config: the sampler rides
     # the same single decode jit, so the delta is the vmapped sort/cumsum
@@ -721,6 +740,101 @@ print("CHAOS_JSON " + json.dumps({
     "chaos_tokens_per_s": tot["toks"] / tot["dt"],
 }))
 """
+
+
+_MIGRATION_BENCH = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import json, time
+import jax, numpy as np
+from repro.configs import get_config
+from repro.models import ExecOptions, build_model
+from repro.launch.mesh import make_serve_mesh
+from repro.serve.faults import FaultEvent, FaultPlan
+from repro.serve.sharded import ShardedServeEngine
+
+mesh = make_serve_mesh(4)
+cfg = get_config("smollm-360m").smoke()
+model = build_model(cfg, ExecOptions(attn_impl="reference", ce_chunk=32))
+params = model.init(jax.random.key(1))
+
+def prompt(seed, n):
+    return np.asarray(jax.random.randint(
+        jax.random.key(seed), (n,), 0, cfg.vocab_size), np.int32)
+
+def leg(lens, max_new, **kw):
+    eng = ShardedServeEngine(model, mesh=mesh, n_slots=8, params=params,
+                             page_size=8, **kw)
+    reqs = [eng.submit(prompt(i, n), max_new_tokens=max_new, seed=100 + i)
+            for i, n in enumerate(lens)]
+    eng.run_to_completion()
+    eng.assert_pool_accounting()
+    eng.assert_local_page_tables()
+    assert all(r.done and not r.timed_out for r in reqs)
+    return eng, [list(r.out_tokens) for r in reqs]
+
+# ---- drain leg: migration vs replay vs fault-free on a sensor drain -----
+PLAN = FaultPlan(events=(
+    FaultEvent(tick=4, kind="sensor_hot", shard=1, delta_c=60.0, ticks=8),))
+lens = [5 + (i * 7) % 23 for i in range(5)]
+dkw = dict(max_len=64, n_pages=24)
+free, free_t = leg(lens, 12, **dkw)
+mig, mig_t = leg(lens, 12, fault_plan=PLAN, **dkw)
+rep, rep_t = leg(lens, 12, fault_plan=PLAN, migration=False, **dkw)
+div = sum(a != b for a, b in zip(free_t, mig_t))
+assert mig.stats.migrations >= 1 and mig.stats.recoveries >= 1, \
+    mig.stats.summary()
+assert mig.stats.prefill_chunks == free.stats.prefill_chunks, \
+    (mig.stats.prefill_chunks, free.stats.prefill_chunks)
+extra_mig = mig.stats.prefill_chunks - free.stats.prefill_chunks
+extra_rep = rep.stats.prefill_chunks - free.stats.prefill_chunks
+assert extra_rep > 0, extra_rep
+
+# ---- rebalance leg: drained shard rejoins empty; threshold-1 elastic
+#      moves pull live slots back (tokens must not change) ----------------
+RPLAN = FaultPlan(events=(
+    FaultEvent(tick=4, kind="sensor_hot", shard=0, delta_c=60.0, ticks=8),))
+rlens = [9, 12, 15, 18, 11, 14]
+rkw = dict(max_len=96, n_pages=36, fault_plan=RPLAN)
+still, still_t = leg(rlens, 24, rebalance_threshold=0, **rkw)
+rebal, rebal_t = leg(rlens, 24, rebalance_threshold=1, **rkw)
+assert still_t == rebal_t, "rebalancing changed tokens"
+assert rebal.stats.rebalance_events >= 1, rebal.stats.summary()
+imb = rebal.shard_summary()["occupancy_imbalance"]
+imb0 = still.shard_summary()["occupancy_imbalance"]
+assert imb < imb0 and imb < 0.67, (imb, imb0)
+
+print("MIGRATION_JSON " + json.dumps({
+    "migration_token_divergence": div / len(lens),
+    "migration_drain_chunk_ratio": extra_mig / max(1, extra_rep),
+    "migration_count": float(mig.stats.migrations),
+    "migration_pages_moved": float(mig.stats.migrated_pages),
+    "migration_wire_bytes": mig.stats.migrated_bytes_compressed,
+    "rebalance_occupancy_imbalance": imb,
+    "rebalance_events": float(rebal.stats.rebalance_events),
+}))
+"""
+
+
+def _bench_migration_serve():
+    """Fork the migration bench onto a 4-device CPU mesh: a drain-cost
+    triple (fault-free / drain-via-migration / drain-via-replay on
+    identical traffic) and a rebalance pair (threshold 0 vs 1 around a
+    drain+rejoin). All gated metrics are deterministic replay arithmetic —
+    divergence and the drain chunk ratio must be exactly 0, the
+    post-rebalance imbalance is fixed tick math."""
+    import subprocess
+    import sys
+    src = pathlib.Path(__file__).resolve().parent.parent / "src"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = f"{src}:{env.get('PYTHONPATH', '')}".rstrip(":")
+    r = subprocess.run([sys.executable, "-c", _MIGRATION_BENCH], env=env,
+                       capture_output=True, text=True)
+    if r.returncode != 0:
+        raise RuntimeError(f"migration serve bench failed:\n{r.stderr[-3000:]}")
+    line = [l for l in r.stdout.splitlines()
+            if l.startswith("MIGRATION_JSON ")][-1]
+    return json.loads(line[len("MIGRATION_JSON "):])
 
 
 def _bench_chaos_serve():

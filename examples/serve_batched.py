@@ -87,6 +87,45 @@ def run_shared_prefix(params, model):
     return reqs
 
 
+def run_migration(params, model):
+    """Live-migration leg: a hot sensor walks one shard into DRAINING; its
+    live slots re-home by moving KV pages over the modeled UCIe link (no
+    re-prefill) and the streams stay token-identical to a fault-free run.
+    Degenerates gracefully on a single device (1 shard = nowhere to move:
+    the drain falls back to replay)."""
+    from repro.launch.mesh import make_serve_mesh
+    from repro.serve.faults import FaultEvent, FaultPlan
+    from repro.serve.sharded import ShardedServeEngine
+    mesh = make_serve_mesh()
+    n_shards = mesh.shape["data"]
+    # drain shard 0: with 2N-1 requests the one FREE slot lands on the last
+    # shard, so the displaced work has somewhere to migrate
+    plan = FaultPlan(events=(FaultEvent(
+        tick=4, kind="sensor_hot", shard=0, delta_c=60.0, ticks=8),))
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, model.cfg.vocab_size,
+                            int(rng.integers(8, 24))).astype(np.int32)
+               for _ in range(2 * n_shards - 1)]
+    runs = []
+    for p in (None, plan):
+        eng = ShardedServeEngine(model, mesh=mesh, n_slots=2 * n_shards,
+                                 max_len=96, params=params, page_size=8,
+                                 fault_plan=p)
+        reqs = [eng.submit(pr.copy(), max_new_tokens=8, seed=i)
+                for i, pr in enumerate(prompts)]
+        eng.run_to_completion()
+        eng.assert_pool_accounting()
+        runs.append((eng, reqs))
+    (_, base), (eng, faulted) = runs
+    st = eng.stats
+    par = sum(a.out_tokens == b.out_tokens for a, b in zip(base, faulted))
+    print(f"\n[migration] sensor-drained shard over {n_shards} shard(s): "
+          f"migrations {st.migrations}  pages {st.migrated_pages}  "
+          f"wire bytes {st.migrated_bytes_compressed:.0f}  "
+          f"recoveries {st.recoveries}  "
+          f"{par}/{len(base)} streams identical to fault-free")
+
+
 def main():
     cfg = get_config("smollm-360m").smoke()
     model = build_model(cfg, ExecOptions(attn_impl="reference", ce_chunk=32))
@@ -114,6 +153,7 @@ def main():
     print(f"sharded vs single-host: {par}/10 requests identical "
           f"(device-partitioned pool, token-exact)")
     run_shared_prefix(params, model)
+    run_migration(params, model)
 
 
 if __name__ == "__main__":

@@ -82,6 +82,24 @@ def transfer(
     return time_us, energy_mj, wire_bytes
 
 
+def migration_ticks(
+    payload_bytes: float,
+    cfg: UCIeConfig | jnp.ndarray,
+    *,
+    tick_us: float,
+) -> int:
+    """Engine ticks one KV page-migration transfer occupies the link.
+
+    This is THE coupling point between the serving stack and the interconnect
+    model: `serve/migration` charges a migrated slot this many ticks of decode
+    delay, and the number comes from the very same `transfer()` closed form
+    the time-stepped simulator drains through `link_tick`. A guard test pins
+    that no serving module re-derives link math outside this call path.
+    """
+    t_us, _, _ = transfer(jnp.asarray(payload_bytes, jnp.float32), cfg)
+    return max(1, int(-(-float(t_us) // float(tick_us))))
+
+
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class LinkState:

@@ -90,6 +90,20 @@ def main():
     ap.add_argument("--shards", type=int, default=0,
                     help="shard slots + KV pages over N local devices "
                          "(sharded multi-chiplet engine; 0 = single-host)")
+    ap.add_argument("--migration", dest="migration", action="store_true",
+                    default=True,
+                    help="live page migration over the modeled UCIe link "
+                         "(default on, --shards only): DRAINING shards "
+                         "re-home live slots by O(bytes) page moves and "
+                         "hot prefixes replicate cross-shard")
+    ap.add_argument("--no-migration", dest="migration",
+                    action="store_false",
+                    help="fall back to re-prefill replay for every "
+                         "displaced slot")
+    ap.add_argument("--rebalance-threshold", type=int, default=0,
+                    help="busy-slot gap that triggers an elastic slot "
+                         "migration between shards (0 = rebalancing off; "
+                         "drain migration is governed by --migration)")
     ap.add_argument("--fault-seed", type=int, default=None,
                     help="inject a seeded chaos FaultPlan (serve/faults."
                          "chaos_plan): shard death/rejoin + page squeezes; "
@@ -170,7 +184,8 @@ def main():
             max_len=args.max_len, params=params, wdtype=wdtype,
             kv_dtype=kv_dtype, page_size=args.page_size,
             n_pages=args.pages or None, chunk_pages=args.chunk_pages,
-            prefix_cache=args.prefix_cache, **ft_kw)
+            prefix_cache=args.prefix_cache, migration=args.migration,
+            rebalance_threshold=args.rebalance_threshold or None, **ft_kw)
     else:
         paged_kw = {"paged": False} if args.page_size == 0 else {
             "page_size": args.page_size,
@@ -204,6 +219,11 @@ def main():
         print(f"[serve] shards={args.shards}  "
               f"tokens/shard={ss['shard_tokens']}  "
               f"occupancy_imbalance={ss['occupancy_imbalance']:.3f}")
+        s = stats
+        print(f"[serve] migrations={s.migrations} "
+              f"migrated_pages={s.migrated_pages} "
+              f"wire_bytes={s.migrated_bytes_compressed:.0f} "
+              f"rebalance_events={s.rebalance_events}")
     if args.fault_seed is not None or args.ttl_ticks is not None:
         s = stats
         print(f"[serve] faults={s.faults_injected} recoveries={s.recoveries} "

@@ -408,6 +408,34 @@ def copy_pool_page(cache, src, dst):
     return c
 
 
+def gather_pool_pages(cache, page_ids):
+    """Snapshot physical pages `page_ids` ((M,) int32) out of every pool in
+    the cache: {key: (L, M, page_size, ...)} — the migration outbox.
+
+    Mesh-free on purpose: `serve/sharded` wraps this in shard_map with the
+    pool's page axis device-local, all_gathers the outboxes, and scatters
+    with `set_pool_page`. Because the gather snapshots BEFORE any scatter
+    runs, a page may be both exported and overwritten in the same move wave.
+    Pool-native bytes move as-is — an int8 pool's int8 rows + f16 scale rows
+    ARE its block-compressed wire format (half the bf16 bytes), and decode's
+    fused dequant is the receive-side decompress — so migrated pages are
+    bit-exact under the schedule-independent KV rounding contract."""
+    return {key: jnp.take(cache[key], page_ids, axis=1)
+            for key in _POOL_KEYS if key in cache}
+
+
+def set_pool_page(cache, dst, rows):
+    """Write one gathered page (`rows`: {key: (L, page_size, ...)}, e.g. an
+    all_gathered `gather_pool_pages` outbox sliced to one move) into local
+    physical page `dst` across every pool. `dst` may be a traced scalar;
+    dst == 0 lands on the null page, which absorbs garbage by contract."""
+    c = dict(cache)
+    for key in _POOL_KEYS:
+        if key in c:
+            c[key] = c[key].at[:, dst].set(rows[key])
+    return c
+
+
 def prefill_chunk(params, batch, cache, cfg, opts: ExecOptions):
     """One fixed-size chunk of page-granular prefill (PR 4).
 

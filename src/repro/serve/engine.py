@@ -393,6 +393,11 @@ class EngineStats:
     faults_injected: int = 0    # FaultPlan events applied
     recoveries: int = 0         # slots migrated off a draining/dead shard
     recovery_ticks_sum: int = 0  # requeue -> back-live latency, summed
+    # ---- live page migration over UCIe (PR 9) --------------------------
+    migrations: int = 0         # live slots re-homed by page moves
+    migrated_pages: int = 0     # physical pages moved across shards
+    migrated_bytes_compressed: float = 0.0  # UCIe wire bytes (post-compress)
+    rebalance_events: int = 0   # elastic-rebalance slot moves
     # ---- prefix cache & copy-on-write (PR 8) ---------------------------
     prefix_hits: int = 0        # admissions that reused >=1 cached page
     prefix_misses: int = 0      # admissions with zero cached pages
@@ -656,6 +661,12 @@ class ServeEngine:
             self._page_hash: Dict[int, bytes] = {}    # phys -> content key
             self._by_hash: Dict[bytes, int] = {}      # content key -> phys
             self._lru: "OrderedDict[int, None]" = OrderedDict()
+        # in-flight prefix dedup (PR 9): page digests a mid-prefill slot
+        # will register, so identical prompts submitted together wait for
+        # the first's pages instead of prefilling twice. (Unconditional:
+        # release/registration clear it on every engine flavour.)
+        self._pending_digest: Dict[bytes, int] = {}       # digest -> rid
+        self._pending_by_rid: Dict[int, List[bytes]] = {}
         # ---- chunked page-granular prefill (PR 4) --------------------------
         can_chunk = self.paged and model.prefill_chunk is not None
         if chunked_prefill is None:
@@ -993,6 +1004,19 @@ class ServeEngine:
             if self.paged:
                 need = self._pages_for(plen, rem)
                 hits, _ = self._prefix_lookup(r, lp)
+                digs = None
+                n_cand = plen // self.page_size if self.prefix_cache else 0
+                if len(hits) < n_cand:
+                    digs = prefix_digests(lp, self.page_size, n_cand,
+                                          request_seed_digest(r.extras))
+                    owner = self._pending_digest.get(digs[len(hits)])
+                    if owner is not None and owner != r.rid:
+                        # in-flight dedup: the head's first missing page is
+                        # being prefilled by a live slot right now — hold
+                        # admission (FIFO) and hit the registry once it
+                        # lands instead of prefilling the same bytes twice.
+                        # NOT a page starvation: no preemption pressure.
+                        return
                 n_shared, cow_src = self._share_plan(plen, hits)
                 shared = hits[:n_shared]
                 n_private = need - n_shared
@@ -1076,6 +1100,14 @@ class ServeEngine:
                     self._active[slot] = True
                 else:
                     self._prefill_fifo.append(slot)
+                    if digs is not None:
+                        # claim the pages this slot will register, so
+                        # identical prompts behind it wait for the cache
+                        mine = self._pending_by_rid.setdefault(r.rid, [])
+                        for d in digs[len(hits):]:
+                            if d not in self._pending_digest:
+                                self._pending_digest[d] = r.rid
+                                mine.append(d)
                 continue
             blen = bucket_length(plen, self.max_len) if self.bucket_prompts \
                 else plen
@@ -1163,6 +1195,8 @@ class ServeEngine:
     def _release(self, slot: int):
         """Return a finished slot to the pool and drain any queued prefill
         work it still holds (mid-prefill retirement must leak nothing)."""
+        if self._slots[slot] is not None:
+            self._clear_pending(self._slots[slot].rid)
         self._slots[slot] = None
         self._active[slot] = False
         self._fresh[slot] = False
@@ -1265,11 +1299,19 @@ class ServeEngine:
         positions >= plen-1: pages strictly below the tail are never touched
         again, and a plen%page_size==0 tail page only takes the replay's
         byte-identical rewrite (schedule-independent KV rounding, PR 4)."""
+        self._clear_pending(r.rid)
         if not self.prefix_cache:
             return
         register_prefix_pages(self._slot_pages[slot], lp, self.page_size,
                               request_seed_digest(r.extras),
                               self._page_hash, self._by_hash)
+
+    def _clear_pending(self, rid: int) -> None:
+        """Drop a request's in-flight dedup claims (registration landed, or
+        the slot died mid-prefill) so deferred twins stop waiting on it."""
+        for d in self._pending_by_rid.pop(rid, ()):
+            if self._pending_digest.get(d) == rid:
+                del self._pending_digest[d]
 
     def assert_accounting(self):
         """Ref-counted pool invariant: every non-null physical page is in

@@ -18,9 +18,11 @@ Event kinds:
   * ``sensor_hot``   — a faulty/hot sensor reading: ``delta_c`` is added to
     the shard's predicted temperature (core/thermal's sensor extrapolation)
     for ``ticks`` ticks. Sustained hot readings walk the shard through
-    DEGRADED → DRAINING, which migrates its live work off exactly like a
-    death — the paper's §II sensor-driven load migration, at serving
-    granularity.
+    DEGRADED → DRAINING. Unlike a death, a DRAINING shard's pool bytes are
+    still alive, so its slots re-home by LIVE PAGE MIGRATION over the
+    modeled UCIe link (serve/migration) — O(bytes), no re-prefill — with
+    replay as the fallback when nothing can place them. This is the
+    paper's §II sensor-driven load migration, at serving granularity.
   * ``page_squeeze`` — free-list exhaustion: up to ``pages`` pages vanish
     from the shard's free list (fragmentation / a co-tenant landing on the
     chiplet). Queued requests that can no longer reserve starve, which is

@@ -17,11 +17,15 @@ migration policy uses) drives a five-state machine:
   * HEALTHY   — in placement.
   * DEGRADED  — sensor hot: new admissions avoid the shard, existing slots
     keep decoding (soft avoidance). Cools back to HEALTHY.
-  * DRAINING  — sustained hot (or an injected stall): the engine migrates
-    every live slot off via re-prefill replay on a healthy shard; once cool,
-    the shard returns to HEALTHY through REJOINING's cooldown.
-  * DEAD      — hard failure (fault-injected): slots are recovered the same
-    way; the shard is inert until a rejoin event.
+  * DRAINING  — sustained hot (or an injected stall): the shard's pool
+    bytes are still alive, so the engine re-homes every live slot by LIVE
+    PAGE MIGRATION over the modeled UCIe link (serve/migration — O(bytes),
+    no re-prefill), falling back to re-prefill replay for slots that fit
+    nowhere; once cool, the shard returns to HEALTHY through REJOINING's
+    cooldown.
+  * DEAD      — hard failure (fault-injected): the pool bytes are GONE, so
+    slots recover by re-prefill replay only; the shard is inert until a
+    rejoin event.
   * REJOINING — free list has been reset; after `rejoin_ticks` the shard
     re-enters placement.
 

@@ -44,9 +44,9 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.serve.engine import (
-    Request, lookup_prefix_hits, page_row_of, prefix_share_plan,
-    recycle_dead_pages, register_prefix_pages, request_seed_digest,
-    reserve_page_count, window_page_budget)
+    Request, lookup_prefix_hits, page_row_of, prefix_digests,
+    prefix_share_plan, recycle_dead_pages, register_prefix_pages,
+    request_seed_digest, reserve_page_count, window_page_budget)
 
 
 @dataclasses.dataclass
@@ -126,6 +126,15 @@ class ShardScheduler:
         self.prefix_hit_tokens = 0
         self.prefix_evictions = 0
         self.cow_copies = 0
+        # ---- live migration & in-flight dedup (PR 9) -------------------
+        # digest -> admissions that hit it: the prefix-hotness signal the
+        # cross-shard replication planner thresholds on
+        self.digest_hits: Dict[bytes, int] = {}
+        # digest -> rid of the live request currently prefilling it; a
+        # queue head whose first MISS digest is pending defers (without
+        # counting as page starvation) instead of duplicating the prefill
+        self.pending_digest: Dict[bytes, int] = {}
+        self.pending_by_rid: Dict[int, List[bytes]] = {}
         self.queue: List[Request] = []
         self.shards = [
             ShardState(free_pages=list(range(n_pages - 1, 0, -1)),
@@ -188,6 +197,13 @@ class ShardScheduler:
             s.pages_in_use += 1
         s.ref[phys] += 1
 
+    def _count_hit(self, s: ShardState, phys: int) -> None:
+        """Bump the hotness counter of the digest behind a hit page — the
+        signal `plan_prefix_replication` thresholds on."""
+        h = s.page_hash.get(phys)
+        if h is not None:
+            self.digest_hits[h] = self.digest_hits.get(h, 0) + 1
+
     def _decref(self, s: ShardState, phys: int) -> None:
         s.ref[phys] -= 1
         assert s.ref[phys] >= 0, int(phys)
@@ -217,12 +233,21 @@ class ShardScheduler:
     def register_prefix(self, shard: int, slot: int, r: Request) -> None:
         """Content-register a fully-prefilled slot's full prompt pages in
         ITS shard's registry (engine calls this at finalize)."""
+        self._clear_pending(r.rid)
         if not self.prefix_cache:
             return
         s = self.shards[shard]
         register_prefix_pages(s.slot_pages[slot], r.live_prompt(),
                               self.page_size, request_seed_digest(r.extras),
                               s.page_hash, s.by_hash)
+
+    def _clear_pending(self, rid: int) -> None:
+        """Drop a request's in-flight dedup claims — at finalize (the pages
+        are registered now; waiters hit them) or at any release (the prefill
+        died; waiters must stop deferring and prefill themselves)."""
+        for d in self.pending_by_rid.pop(rid, ()):
+            if self.pending_digest.get(d) == rid:
+                del self.pending_digest[d]
 
     # -------------------------------------------------------------- placement
     def _eligible(self, need: int) -> Optional[int]:
@@ -279,6 +304,20 @@ class ShardScheduler:
                 break
             _, shard, hits, n_shared, cow_src, cached = best
             s = self.shards[shard]
+            # in-flight dedup (PR 9): if the first page this request would
+            # prefill is ALREADY being prefilled by a live request, defer —
+            # once that prefill finalizes and registers, this one hits its
+            # pages instead of duplicating the work. FIFO still holds
+            # (nothing overtakes a deferred head), and the claim dies with
+            # its owner (`_clear_pending` on release), so no deadlock.
+            digs = None
+            n_cand = plen // self.page_size if self.prefix_cache else 0
+            if len(hits) < n_cand:
+                digs = prefix_digests(lp, self.page_size, n_cand,
+                                      request_seed_digest(r.extras))
+                owner = self.pending_digest.get(digs[len(hits)])
+                if owner is not None and owner != r.rid:
+                    break
             slot = s.slots.index(None)
             shared = hits[:n_shared]
             # commit order: protect the hit pages FIRST (incref pulls them
@@ -287,9 +326,11 @@ class ShardScheduler:
             # clones it before any of this wave's pages get written
             for p in shared:
                 self._incref(s, p)
+                self._count_hit(s, p)
             cow = None
             if cow_src is not None:
                 self._incref(s, cow_src)
+                self._count_hit(s, cow_src)
                 pending_decref.append((s, cow_src))
             pages = [self._alloc(s) for _ in range(need - n_shared)]
             if cow_src is not None:
@@ -318,6 +359,14 @@ class ShardScheduler:
                 self.register_prefix(shard, slot, r)
             else:
                 s.prefill_fifo.append(slot)
+                if digs is not None:
+                    # claim the full pages this prefill will register, so
+                    # concurrent identical first-misses coalesce onto it
+                    mine = self.pending_by_rid.setdefault(r.rid, [])
+                    for d in digs[len(hits):]:
+                        if d not in self.pending_digest:
+                            self.pending_digest[d] = r.rid
+                            mine.append(d)
             self.queue.pop(0)
             placed.append(Placement(shard=shard, slot=slot, req=r,
                                     cached_tokens=cached, cow=cow,
@@ -389,6 +438,8 @@ class ShardScheduler:
         returns to the free list (or parks in the LRU, if registered) at
         refcount zero."""
         s = self.shards[shard]
+        if s.slots[slot] is not None:
+            self._clear_pending(s.slots[slot].rid)
         s.slots[slot] = None
         if slot in s.prefill_fifo:
             s.prefill_fifo.remove(slot)
@@ -465,6 +516,95 @@ class ShardScheduler:
             while i < len(self.queue) and self.queue[i].rid < r.rid:
                 i += 1
             self.queue.insert(i, r)
+
+    # ----------------------------------------- live page migration (PR 9)
+    def migration_target(self, src_shard: int, slot: int,
+                         placeable: Optional[List[bool]] = None
+                         ) -> Optional[int]:
+        """Least-loaded placeable shard (never the source) with a free slot
+        and enough allocatable pages to host the slot's whole mapping —
+        where a drained/rebalanced slot re-homes. None when nowhere fits
+        (the caller falls back to PR 6's release + re-prefill replay)."""
+        mask = self.placeable if placeable is None else placeable
+        need = len(self.shards[src_shard].slot_pages[slot])
+        best = None
+        for i, s in enumerate(self.shards):
+            if i == src_shard or not mask[i]:
+                continue
+            if None not in s.slots or s.allocatable() < need:
+                continue
+            busy = sum(r is not None for r in s.slots)
+            key = (s.pages_in_use, busy, i)
+            if best is None or key < best[0]:
+                best = (key, i)
+        return None if best is None else best[1]
+
+    def migrate_slot(self, src_shard: int, slot: int, dst_shard: int
+                     ) -> Tuple[int, List[Tuple[int, int]]]:
+        """Re-home ONE live slot's host bookkeeping src -> dst atomically:
+        a fresh destination page per mapped logical page, the page-table
+        mapping / slot cap / chunk cursor / prefill-FIFO membership carried
+        over, source references dropped (shared source pages survive via
+        their other refs; registered ones park in the source LRU).
+
+        A registered source page's digest re-registers on the destination
+        (first registration wins, as everywhere) — the copy is byte-exact,
+        so this is how a hot prefix becomes visible to placement on another
+        shard. Returns (dst_slot, moves) with moves = [(src_phys,
+        dst_phys)] in LOCAL page ids, for the engine's device move waves.
+        The device copy must run before any later allocation can reuse the
+        freed source pages (the engine executes it synchronously)."""
+        assert dst_shard != src_shard, src_shard
+        ss, ds = self.shards[src_shard], self.shards[dst_shard]
+        r = ss.slots[slot]
+        assert r is not None, (src_shard, slot)
+        dst_slot = ds.slots.index(None)
+        moves: List[Tuple[int, int]] = []
+        mapping: Dict[int, int] = {}
+        for j in sorted(ss.slot_pages[slot]):
+            src_phys = ss.slot_pages[slot][j]
+            dst_phys = self._alloc(ds)
+            moves.append((src_phys, dst_phys))
+            mapping[j] = dst_phys
+            h = ss.page_hash.get(src_phys)
+            if self.prefix_cache and h is not None \
+                    and h not in ds.by_hash and dst_phys not in ds.page_hash:
+                ds.page_hash[dst_phys] = h
+                ds.by_hash[h] = dst_phys
+        ds.slot_pages[dst_slot] = mapping
+        ds.slot_cap[dst_slot] = ss.slot_cap[slot]
+        ds.chunk_next[dst_slot] = ss.chunk_next[slot]
+        ds.slots[dst_slot] = r
+        if slot in ss.prefill_fifo:   # mid-prefill: chunking resumes on dst
+            ss.prefill_fifo.remove(slot)
+            ds.prefill_fifo.append(dst_slot)
+        ss.slots[slot] = None
+        ss.chunk_next[slot] = 0
+        old = ss.slot_pages[slot]
+        ss.slot_pages[slot] = {}
+        ss.slot_cap[slot] = 0
+        for phys in old.values():
+            self._decref(ss, phys)
+        return dst_slot, moves
+
+    def replicate_page(self, src_shard: int, dst_shard: int, digest: bytes
+                       ) -> Optional[Tuple[int, int]]:
+        """Cross-shard prefix replication: allocate a destination page for
+        `digest` (registered on the source shard), register it, and park it
+        refcount-zero in the destination LRU — the admission that motivated
+        the copy picks it up through the normal hit/incref path, and until
+        then it is evictable like any cached page. Returns (src_phys,
+        dst_phys) for the device move, or None if either side can't."""
+        ss, ds = self.shards[src_shard], self.shards[dst_shard]
+        src_phys = ss.by_hash.get(digest)
+        if src_phys is None or digest in ds.by_hash \
+                or ds.allocatable() == 0:
+            return None
+        dst_phys = self._alloc(ds)
+        ds.page_hash[dst_phys] = digest
+        ds.by_hash[digest] = dst_phys
+        self._decref(ds, dst_phys)
+        return src_phys, dst_phys
 
     def page_starved(self, need: int) -> bool:
         """True when the head fits nowhere but at least one placeable shard

@@ -45,10 +45,25 @@ pinned chunk-size/batch-composition invariance; sampling is keyed by
 single-host `ServeEngine` for the same submissions — the equivalence
 `tests/test_sharded_serve.py` pins on an 8-device CPU mesh for dense/moe ×
 {f32, int8} KV, windowed configs, and mid-stream retirements.
+
+Live page migration (PR 9): the one deliberate exception to "KV bytes never
+cross devices". A shard_map'd move program (gather → all_gather → scatter of
+whole physical pages) re-homes a live slot's pool-native bytes between
+device-local partitions, so a DRAINING shard's work migrates at O(bytes) —
+priced through `core/ucie.transfer`'s closed form, the SAME cost model the
+simulator drains — instead of O(FLOPs) re-prefill replay (DEAD shards still
+replay: their bytes are gone). The same primitive powers elastic
+rebalancing (busy-gap moves + migration-instead-of-preemption) and
+cross-shard replication of hot prefix pages; `serve/migration` owns the
+planning policy, `ShardScheduler.migrate_slot` the atomic re-homing of
+page-table rows, refcounts and registry entries. Migrated tokens stay
+bit-exact; the only observable cost is the link hold before the slot's next
+decode step.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import time
 from typing import Dict, List, Optional, Tuple
 
@@ -57,12 +72,16 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.models.transformer import gather_pool_pages, set_pool_page
 from repro.parallel.shmap import shard_map
 from repro.serve.engine import (
     _ATTN_FAMILIES, _KV_DTYPES, EngineOverloaded, EngineStats, Request)
 from repro.serve.faults import FaultPlan
 from repro.serve.health import (
     EVACUATED, Health, HealthConfig, ShardHealthMonitor)
+from repro.serve.migration import (
+    MigrationConfig, migration_cost, page_payload_bytes,
+    plan_prefix_replication, plan_rebalance, plan_starvation_rescue)
 from repro.serve.sampling import clamp_sample_params, sample_tokens
 from repro.serve.scheduler import ShardScheduler
 
@@ -93,7 +112,10 @@ class ShardedServeEngine:
                  preempt_after: int = 2,
                  max_preemptions: int = 3,
                  fault_plan: Optional[FaultPlan] = None,
-                 health_cfg: Optional[HealthConfig] = None):
+                 health_cfg: Optional[HealthConfig] = None,
+                 migration: bool = True,
+                 migration_cfg: Optional[MigrationConfig] = None,
+                 rebalance_threshold: Optional[int] = None):
         self.model = model
         self.cfg = model.cfg
         if self.cfg.family not in ("dense", "moe", "vlm"):
@@ -193,6 +215,18 @@ class ShardedServeEngine:
         self._starved = 0            # consecutive page-starved ticks
         self._any_ttl = ttl_ticks is not None
         self._recover_started: Dict[int, int] = {}  # rid -> requeue tick
+        # ---- live page migration over UCIe (PR 9) --------------------------
+        self._mig_cfg = migration_cfg or MigrationConfig()
+        if rebalance_threshold is not None:
+            self._mig_cfg = dataclasses.replace(
+                self._mig_cfg, rebalance_threshold=int(rebalance_threshold))
+        self._migration = bool(migration)
+        # per-slot link hold: a migrated slot's pages are "on the wire" for
+        # migration_ticks(bytes, UCIeConfig) engine ticks — it neither
+        # decodes nor chunks until the modeled transfer lands
+        self._hold = np.zeros((n_slots,), np.int32)
+        self._resume_live = [False] * n_slots
+        self._replica_hold: Optional[Tuple[int, int]] = None  # (rid, ticks)
         self.shard_tokens = [0] * self.n_shards
         self.shard_occupancy_sum = [0.0] * self.n_shards
         self._slots: List[Optional[Request]] = [None] * n_slots
@@ -307,6 +341,33 @@ class ShardedServeEngine:
             in_specs=(self._pool_specs, vec_spec, vec_spec),
             out_specs=self._pool_specs), **cow_donate)
 
+        # move_pool_pages (PR 9): one wave moves up to `wave_moves` pages
+        # per shard between device-local pools. Each shard snapshots its
+        # exports (outbox) BEFORE any write, the outboxes cross the mesh in
+        # ONE all_gather — the modeled UCIe transfer — and each shard
+        # scatters its imports into freshly-allocated local pages. Pools
+        # move their NATIVE bytes: an int8 pool's int8 rows + f16 scales
+        # are its block-compressed wire format (half the bf16 bytes), so
+        # migrated pages stay bit-exact. Unused rows are 0 on both sides —
+        # exporting and importing the null page are no-ops by contract.
+        M = self._mig_cfg.wave_moves
+
+        def _move(pools, out_idx, in_shard, in_slot, in_dst):
+            ob = gather_pool_pages(pools, out_idx[0])
+            gath = {k: jax.lax.all_gather(v, ax) for k, v in ob.items()}
+            for m in range(M):
+                rows = {k: gath[k][in_shard[0, m], :, in_slot[0, m]]
+                        for k in gath}
+                pools = set_pool_page(pools, in_dst[0, m], rows)
+            return pools
+
+        mspec = P(ax, None)
+        self._move_jit = jax.jit(shard_map(
+            _move, mesh=mesh,
+            in_specs=(self._pool_specs, mspec, mspec, mspec, mspec),
+            out_specs=self._pool_specs), **cow_donate)
+        self._page_bytes = page_payload_bytes(self._pools)
+
     # ------------------------------------------------------------- lifecycle
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
                extras: Optional[Dict[str, np.ndarray]] = None,
@@ -378,6 +439,8 @@ class ShardedServeEngine:
         self._page_table[g] = 0         # back on the shard's null page
         self._temp[g], self._topk[g] = 0.0, 0
         self._topp[g], self._sseed[g] = 1.0, 0
+        self._hold[g] = 0
+        self._resume_live[g] = False
         self.stats.pages_in_use = self._sched.pages_in_use
 
     def kv_cache_bytes(self) -> int:
@@ -394,6 +457,9 @@ class ShardedServeEngine:
     # ---------------------------------------------------------------- prefill
     def _prefill_tick(self) -> bool:
         work = self._sched.next_chunks()
+        # held slots (mid-migration) don't chunk: their pages are on the wire
+        work = [w for w in work
+                if not self._hold[self._gslot(w.shard, w.slot)]]
         if not work:
             return False
         S, C = self.n_shards, self.chunk_tokens
@@ -483,6 +549,17 @@ class ShardedServeEngine:
                 # every prompt page came from the cache: zero prefill
                 # chunks, the slot goes live straight from placement
                 self._go_live(p.shard, p.slot, p.req)
+            if self._replica_hold is not None \
+                    and p.req.rid == self._replica_hold[0]:
+                # this admission rode freshly-replicated prefix pages:
+                # charge it the modeled UCIe transfer before it proceeds
+                g = self._gslot(p.shard, p.slot)
+                self._hold[g] = self._replica_hold[1]
+                if p.full_hit:
+                    self._active[g] = False
+                    self._page_table[g] = 0
+                    self._resume_live[g] = True
+                self._replica_hold = None
 
     def _sync_prefix_stats(self) -> None:
         sc = self._sched
@@ -495,26 +572,37 @@ class ShardedServeEngine:
         st.prefix_cached_pages = sum(len(s.lru) for s in sc.shards)
 
     def step(self) -> bool:
-        """One engine tick: apply scheduled faults, advance shard health
-        (recovering live slots off any shard that enters DRAINING/DEAD),
-        expire TTLs, admit — preempting a young decoding slot if the head
-        has starved on pages — then per-shard chunk prefill and ONE global
-        shard_map'd decode step."""
+        """One engine tick: advance migration holds, apply scheduled
+        faults, advance shard health (DRAINING evacuates by live page
+        migration, DEAD by replay), expire TTLs, replicate a hot prefix for
+        the queue head if one is remote, admit — rescuing a page-starved
+        head by migrating a victim away before falling back to preemption —
+        rebalance one busy-gap move, then per-shard chunk prefill and ONE
+        global shard_map'd decode step."""
         self._tick += 1
+        self._advance_holds()
         if self.fault_plan is not None:
             self._apply_faults()
         if self._monitor is not None:
             self._health_tick()
         if self._any_ttl:
             self._expire_ttl()
+        if self._migration:
+            self._replicate_prefix()
         self._place(self._sched.admit())
+        rebalance = self._migration and self._mig_cfg.rebalance_threshold > 0
         if self._sched.queue:
             head = self._sched.queue[0]
             need = self._sched.pages_for(head.live_prompt().shape[0],
                                          head.remaining_new())
             if self._sched.page_starved(need):
                 self._starved += 1
-                if self._starved >= self.preempt_after:
+                if rebalance and self._rescue(need):
+                    # migration-instead-of-preemption: the head unblocked
+                    # without any decoded work being thrown away
+                    self._place(self._sched.admit())
+                    self._starved = 0
+                elif self._starved >= self.preempt_after:
                     cand = self._sched.preempt_candidate(
                         need, head.rid, self.max_preemptions)
                     if cand is not None:
@@ -524,6 +612,8 @@ class ShardedServeEngine:
                 self._starved = 0
         else:
             self._starved = 0
+        if rebalance:
+            self._rebalance_tick()
         self.stats.pages_in_use = self._sched.pages_in_use
         self.stats.peak_pages_in_use = max(self.stats.peak_pages_in_use,
                                            self.stats.pages_in_use)
@@ -595,6 +685,153 @@ class ShardedServeEngine:
                 self._page_table[g, j_dead] = 0
         self.stats.pages_in_use = self._sched.pages_in_use
 
+    # ------------------------------------- live page migration (PR 9)
+    def _advance_holds(self):
+        """Count down per-slot migration holds; a slot whose hold expires
+        (and whose request survived the wait) restamps its page-table row
+        from the scheduler and resumes decoding — the link latency the
+        `core/ucie` cost model charged is exactly how long it sat out."""
+        for g in np.nonzero(self._hold > 0)[0]:
+            self._hold[g] -= 1
+            if self._hold[g] == 0 and self._resume_live[g] \
+                    and self._slots[g] is not None:
+                shard, slot = divmod(int(g), self.slots_per_shard)
+                self._page_table[g] = self._sched.page_row(shard, slot)
+                self._active[g] = True
+                self._resume_live[g] = False
+
+    def _device_move(self, moves) -> None:
+        """Execute (src_shard, src_phys, dst_shard, dst_phys) page moves on
+        device, batched into shard_map'd waves of at most `wave_moves`
+        outgoing AND incoming pages per shard. Gather-before-scatter inside
+        a wave (every shard snapshots its outbox before any write) and
+        freshly-allocated destinations make waves order-independent."""
+        M = self._mig_cfg.wave_moves
+        S = self.n_shards
+        i = 0
+        while i < len(moves):
+            out_idx = np.zeros((S, M), np.int32)
+            in_shard = np.zeros((S, M), np.int32)
+            in_slot = np.zeros((S, M), np.int32)
+            in_dst = np.zeros((S, M), np.int32)
+            out_n = [0] * S
+            in_n = [0] * S
+            while i < len(moves):
+                ss, sp, ds, dp = moves[i]
+                if out_n[ss] >= M or in_n[ds] >= M:
+                    break
+                out_idx[ss, out_n[ss]] = sp
+                in_shard[ds, in_n[ds]] = ss
+                in_slot[ds, in_n[ds]] = out_n[ss]
+                in_dst[ds, in_n[ds]] = dp
+                out_n[ss] += 1
+                in_n[ds] += 1
+                i += 1
+            self._pools = self._move_jit(
+                self._pools, jnp.asarray(out_idx), jnp.asarray(in_shard),
+                jnp.asarray(in_slot), jnp.asarray(in_dst))
+
+    def _migrate_slot(self, src_shard: int, src_slot: int, dst_shard: int,
+                      *, count_recovery: bool = False) -> int:
+        """Re-home one live slot: scheduler bookkeeping moves atomically
+        (`migrate_slot`), the pages fly over the modeled UCIe link via the
+        move program, and the destination slot sits held for the link's
+        `migration_ticks` before its next decode step. Returns the hold."""
+        g_src = self._gslot(src_shard, src_slot)
+        r = self._slots[g_src]
+        # a slot already on hold (migration/replica wait in flight) keeps
+        # its pending go-live across a second move
+        was_active = bool(self._active[g_src]) or self._resume_live[g_src]
+        prior_hold = int(self._hold[g_src])
+        dst_slot, page_moves = self._sched.migrate_slot(
+            src_shard, src_slot, dst_shard)
+        g_dst = self._gslot(dst_shard, dst_slot)
+        self._device_move([(src_shard, sp, dst_shard, dp)
+                           for sp, dp in page_moves])
+        self._pos[g_dst] = self._pos[g_src]
+        self._next_tok[g_dst, 0] = self._next_tok[g_src, 0]
+        self._fresh[g_dst] = self._fresh[g_src]
+        self._temp[g_dst], self._topk[g_dst] = \
+            self._temp[g_src], self._topk[g_src]
+        self._topp[g_dst], self._sseed[g_dst] = \
+            self._topp[g_src], self._sseed[g_src]
+        self._slots[g_dst], self._slots[g_src] = r, None
+        self._temp[g_src], self._topk[g_src] = 0.0, 0
+        self._topp[g_src], self._sseed[g_src] = 1.0, 0
+        self._fresh[g_src] = False
+        self._active[g_src] = self._active[g_dst] = False
+        self._page_table[g_src] = 0     # back on the source's null page
+        self._page_table[g_dst] = 0     # stamped when the hold expires
+        self._resume_live[g_dst] = was_active
+        self._resume_live[g_src] = False
+        ticks, wire = migration_cost(
+            len(page_moves) * self._page_bytes, self._mig_cfg)
+        self._hold[g_dst] = max(ticks, prior_hold)
+        self._hold[g_src] = 0
+        self.stats.migrations += 1
+        self.stats.migrated_pages += len(page_moves)
+        self.stats.migrated_bytes_compressed += wire
+        if count_recovery:
+            self.stats.recoveries += 1
+            self.stats.recovery_ticks_sum += ticks
+        self.stats.pages_in_use = self._sched.pages_in_use
+        return ticks
+
+    def _movable(self, shard: int, slot: int) -> bool:
+        """Planner veto: only settled decoding slots migrate for balance —
+        never mid-prefill, never already on the wire."""
+        g = self._gslot(shard, slot)
+        return bool(self._active[g]) and self._hold[g] == 0
+
+    def _rescue(self, need: int) -> bool:
+        """Try migration-instead-of-preemption for a page-starved head."""
+        plan = plan_starvation_rescue(self._sched, need,
+                                      self._sched.placeable, self._movable)
+        if plan is None:
+            return False
+        self._migrate_slot(*plan)
+        self.stats.rebalance_events += 1
+        return True
+
+    def _rebalance_tick(self) -> None:
+        """One elastic-balance move per tick when the busy-slot gap between
+        shards exceeds the configured threshold."""
+        plan = plan_rebalance(self._sched, self._mig_cfg.rebalance_threshold,
+                              self._sched.placeable, self._movable)
+        if plan is not None:
+            self._migrate_slot(*plan)
+            self.stats.rebalance_events += 1
+
+    def _replicate_prefix(self) -> None:
+        """Cross-shard prefix reuse for the queue head: copy a hot remote
+        prefix run onto the shard admission will pick, as compressed-UCIe
+        page moves instead of local re-prefill. The admission that rides
+        the fresh replicas is charged the link time via a hold."""
+        if not self._sched.queue or not self._sched.prefix_cache \
+                or self._replica_hold is not None:
+            return
+        r = self._sched.queue[0]
+        plan = plan_prefix_replication(self._sched, r, self._mig_cfg,
+                                       self._sched.placeable)
+        if plan is None:
+            return
+        src, dst, digests = plan
+        moves = []
+        for d in digests:
+            mv = self._sched.replicate_page(src, dst, d)
+            if mv is None:
+                break
+            moves.append((src, mv[0], dst, mv[1]))
+        if not moves:
+            return
+        self._device_move(moves)
+        ticks, wire = migration_cost(
+            len(moves) * self._page_bytes, self._mig_cfg)
+        self.stats.migrated_pages += len(moves)
+        self.stats.migrated_bytes_compressed += wire
+        self._replica_hold = (r.rid, ticks)
+        self.stats.pages_in_use = self._sched.pages_in_use
+
     # ------------------------------------------- fault tolerance (PR 6)
     def _apply_faults(self):
         """Apply this tick's FaultPlan events — at the tick boundary, before
@@ -629,27 +866,47 @@ class ShardedServeEngine:
                 if self._slots[base + s] is not None) / self.slots_per_shard
         for shard, old, new in self._monitor.step(occ):
             if new in EVACUATED and old not in EVACUATED:
-                self._recover_shard(shard)
+                # DRAINING pool bytes are still alive → live page migration;
+                # DEAD bytes are gone → re-prefill replay is all there is
+                self._recover_shard(shard,
+                                    migrate=(new == Health.DRAINING))
             if new == Health.REJOINING and old == Health.DRAINING:
                 self._sched.reset_shard(shard)
         self._sched.placeable = self._monitor.placeable()
 
-    def _recover_shard(self, shard: int):
-        """Migrate every live slot off a draining/dead shard by re-prefill
-        replay: each displaced request re-enters the queue (rid order) and
-        its live_prompt — prompt + already-emitted tokens — chunk-prefills
-        on whichever healthy shard admission picks. Schedule-independent KV
-        rounding and (seed, token_index)-keyed sampling make the resumed
-        stream token-exact with its uninterrupted twin; the dead shard's
-        slots go inactive, so subsequent decode garbage lands on its local
-        null page."""
+    def _recover_shard(self, shard: int, migrate: bool = False):
+        """Evacuate every live slot off a draining/dead shard.
+
+        With `migrate=True` (DRAINING: the pool bytes are still alive) each
+        slot first tries a live page migration — its physical pages move to
+        a healthy shard over the modeled UCIe link at O(bytes), no prefill
+        chunk is recomputed, and the stream resumes token-identically after
+        the link hold. Slots that don't fit anywhere (or when migration is
+        off / the shard is DEAD and its bytes are gone) fall back to PR 6's
+        re-prefill replay: release, requeue in rid order, and chunk-prefill
+        the live_prompt on whichever healthy shard admission picks.
+        Schedule-independent KV rounding and (seed, token_index)-keyed
+        sampling make BOTH paths token-exact with an uninterrupted twin."""
         base = shard * self.slots_per_shard
-        displaced = []
+        remaining = []
         for s in range(self.slots_per_shard):
             g = base + s
-            if self._slots[g] is not None:
-                displaced.append(self._slots[g])
-                self._release(g)
+            if self._slots[g] is None:
+                continue
+            if migrate and self._migration:
+                placeable = (self._monitor.placeable()
+                             if self._monitor is not None
+                             else self._sched.placeable)
+                dst = self._sched.migration_target(shard, s, placeable)
+                if dst is not None:
+                    self._migrate_slot(shard, s, dst, count_recovery=True)
+                    continue
+            remaining.append(s)
+        displaced = []
+        for s in remaining:
+            g = base + s
+            displaced.append(self._slots[g])
+            self._release(g)
         if not displaced:
             return
         displaced.sort(key=lambda r: r.rid)
