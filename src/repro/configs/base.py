@@ -8,8 +8,7 @@ config for CPU tests; the full configs are exercised only via the dry-run.
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Optional, Tuple
+from typing import Tuple
 
 
 @dataclasses.dataclass(frozen=True)

@@ -29,8 +29,6 @@ import pathlib
 import time
 import traceback
 
-import jax
-
 from repro.configs import ARCH_ORDER, SHAPES, SHAPE_ORDER, get_config
 from repro.configs.base import cell_is_runnable
 from repro.launch import hlo_analysis, steps

@@ -19,7 +19,7 @@ import pathlib
 from typing import Dict, Optional
 
 from repro.configs import ARCH_ORDER, SHAPES, SHAPE_ORDER, get_config
-from repro.core.planner import HBM_BW, ICI_BW, PEAK_FLOPS_BF16, RooflineTerms
+from repro.core.planner import RooflineTerms
 
 DRYRUN_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
 
@@ -146,9 +146,6 @@ def main():
         marker = "<!-- ROOFLINE_TABLE -->"
         text = exp.read_text()
         start = text.index(marker)
-        end = text.index("\n\n", start + len(marker) + 1) \
-            if marker + "\n|" in text[start:start + len(marker) + 3] \
-            else start + len(marker)
         # replace marker (and any previously injected table right after it)
         rest = text[start + len(marker):]
         if rest.lstrip().startswith("|"):

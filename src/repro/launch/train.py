@@ -14,12 +14,9 @@ Usage (CPU, reduced config):
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config
 from repro.configs.base import ShapeConfig

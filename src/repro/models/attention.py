@@ -15,7 +15,6 @@ Shapes: q (B, Sq, KV, G, D) where G = n_heads // n_kv_heads; k/v (B, Sk, KV, D).
 
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

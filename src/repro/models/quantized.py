@@ -34,7 +34,6 @@ consumer can rebroadcast it onto the matmul output.
 
 from __future__ import annotations
 
-import functools
 from typing import Dict, Optional, Tuple
 
 import jax

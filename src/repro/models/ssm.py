@@ -14,7 +14,7 @@ this family runs the long_500k cell.
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

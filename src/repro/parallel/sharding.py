@@ -10,14 +10,12 @@ axis and TP comes from a different dim (DESIGN.md §6).
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Dict, Optional, Sequence, Tuple, Union
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.models.common import ParamDef, is_schema_leaf
+from repro.models.common import is_schema_leaf
 
 Axis = Union[str, Tuple[str, ...], None]
 

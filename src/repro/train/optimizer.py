@@ -7,8 +7,7 @@ the param tree, so `schema_pspecs` applies verbatim.
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Any, Dict, NamedTuple, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,6 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.train import compression as comp
 

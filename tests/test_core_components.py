@@ -1,6 +1,5 @@
 """Unit tests for the paper's four innovation models (I1–I4) + time-stepped SoC."""
 
-import jax
 import jax.numpy as jnp
 import pytest
 
@@ -9,7 +8,7 @@ from repro.core import dvfs as dvfs_mod
 from repro.core import security as sec_mod
 from repro.core import thermal as thermal_mod
 from repro.core import ucie as ucie_mod
-from repro.core.scenarios import AI_OPTIMIZED, BASIC_CHIPLET, SCENARIOS
+from repro.core.scenarios import SCENARIOS
 from repro.core.workloads import WORKLOADS
 
 MNV2 = WORKLOADS["mobilenetv2"]

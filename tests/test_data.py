@@ -2,7 +2,6 @@
 prefetch correctness."""
 
 import numpy as np
-import pytest
 
 from repro.data.pipeline import DataConfig, PrefetchIterator, TokenSource
 

@@ -3,7 +3,7 @@
 import pytest
 
 from repro.train.elastic import (
-    ElasticPolicy, HeartbeatRegistry, MigrationDecision, detect_stragglers,
+    ElasticPolicy, HeartbeatRegistry, detect_stragglers,
     elastic_mesh_shape, plan_migration, rebalanced_batch_split,
 )
 

@@ -4,7 +4,6 @@ every attention family — plus the serve-engine correctness fixes that ride
 along (capacity off-by-one, idle-slot drift, stats summary)."""
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

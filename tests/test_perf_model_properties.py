@@ -13,7 +13,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import perf_model as pm
 from repro.core.scenarios import AI_OPTIMIZED, BASIC_CHIPLET, Scenario
-from repro.core.workloads import MOBILENET_V2, Workload
+from repro.core.workloads import Workload
 
 settings.register_profile("ci", max_examples=40, deadline=None)
 settings.load_profile("ci")

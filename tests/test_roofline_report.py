@@ -2,9 +2,9 @@
 
 import pytest
 
-from repro.configs import ARCH_ORDER, get_config
+from repro.configs import get_config
 from repro.configs.base import SHAPES
-from repro.core.planner import HBM_BW, ICI_BW, PEAK_FLOPS_BF16, RooflineTerms
+from repro.core.planner import RooflineTerms
 from repro.launch.roofline import cell_terms, model_flops
 from repro.launch.steps import suggest_plan
 

@@ -81,7 +81,11 @@ def test_engine_state_families(arch):
 
 def test_int8_weight_path_close(smol):
     """Weight-only int8 (the 15 TOPS NPU datapath) perturbs logits only
-    mildly: generated prefix should usually match fp path."""
+    mildly. Token streams CAN'T be the yardstick here: random smoke-config
+    weights give near-uniform logits, so per-channel quantization noise
+    legitimately flips the argmax (the old token-prefix comparison sat
+    unused — F841 — and the test asserted nothing about numerics). Compare
+    the prefill logits directly instead."""
     from repro.kernels import ops as kops
     cfg, model, params = smol
     # quantize+dequantize every 2-D matmul weight (simulating the int8 path
@@ -92,6 +96,12 @@ def test_int8_weight_path_close(smol):
             return (q.astype(jnp.float32) * s[None, :]).astype(p.dtype)
         return p
     params_q = jax.tree.map(qdq, params)
-    a = generate_greedy(model, params, _prompt(5), n_tokens=4, max_len=64)
+    toks = _prompt(5)[None, :]
+    logits, _ = model.prefill(params, {"tokens": toks})
+    logits_q, _ = model.prefill(params_q, {"tokens": toks})
+    a = np.asarray(logits, np.float64).ravel()
+    b = np.asarray(logits_q, np.float64).ravel()
+    corr = np.corrcoef(a, b)[0, 1]
+    assert corr > 0.8, corr      # measured ~0.92 on the smoke config
     b = generate_greedy(model, params_q, _prompt(5), n_tokens=4, max_len=64)
-    assert len(b) == 4  # and numerics stay sane
+    assert len(b) == 4  # quantized path still generates

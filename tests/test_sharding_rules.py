@@ -3,7 +3,6 @@ specs — pure logic, no devices needed (mesh built on 1 CPU device is fine
 for spec resolution since rules read mesh.shape)."""
 
 import jax
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config
@@ -98,7 +97,6 @@ def test_cache_specs_kv_vs_seq():
 
 
 def test_suggest_n_micro_monotone_in_model_size():
-    shape = steps_mod.SHAPES["train_4k"] if hasattr(steps_mod, "SHAPES") else None
     from repro.configs.base import SHAPES
     small = steps_mod.suggest_n_micro(get_config("smollm-360m"),
                                       SHAPES["train_4k"], MESH)
