@@ -110,6 +110,14 @@ GATES = {
         "migration_token_divergence": ("lower", 0.0, "det"),
         "migration_drain_chunk_ratio": ("lower", 0.0, "det"),
         "rebalance_occupancy_imbalance": ("lower", 0.04, "det"),
+        # retrace sanitizer (PR 10): compile counts are deterministic trace
+        # math — the chunked engine compiles ONE chunk step and the greedy
+        # decode variant on the first wave, and an identical second wave
+        # under `analysis.sanitizer.watch()` must compile NOTHING. Zero
+        # tolerance, zero slack: one steady-state retrace is a shape leak
+        "chunk_compiles": ("lower", 0.0, "det"),
+        "decode_compiles": ("lower", 0.0, "det"),
+        "steady_state_retraces": ("lower", 0.0, "det"),
     },
     "soc": {
         "sweep_wall_s": ("lower", 0.20, "wall"),
@@ -131,6 +139,9 @@ ABS_SLACK = {"int8_token_divergence": 0.05,
              # sharded parity baseline is exactly 0 — ZERO slack: a single
              # diverging request stream fails the gate
              "sharded_token_divergence": 0.0,
+             # steady-state baseline IS 0 compiles — ZERO slack: a single
+             # retrace in the warm second wave fails the gate
+             "steady_state_retraces": 0.0,
              "sharded_occupancy_imbalance": 0.10,
              # chaos parity baseline is exactly 0 — ZERO slack: a surviving
              # engine that drops or reorders even one token fails

@@ -428,6 +428,24 @@ def bench_serve():
           f"{metrics['monolithic_pad_waste']:.3f}->"
           f"{metrics['chunked_pad_waste']:.3f}")
 
+    # ---- retrace sanitizer: steady-state compile budget (PR 10) -----------
+    # Re-run the IDENTICAL mixed wave against the still-warm chunked engine
+    # under `analysis.sanitizer.watch()`. The first wave exercised every
+    # shape the scheduler can produce (chunk, decode, every prefill bucket,
+    # paste), so any XLA compile in the second wave is a retrace leak — a
+    # shape or dtype smuggled into trace context. All three counts are
+    # deterministic trace math, det-gated at zero slack.
+    from repro.analysis import sanitizer
+    with sanitizer.watch() as wlog:
+        mixed_traffic(eng)
+    metrics["chunk_compiles"] = eng.stats.chunk_compiles
+    metrics["decode_compiles"] = eng.stats.decode_compiles
+    metrics["steady_state_retraces"] = wlog.compiles
+    print(f"serve,sanitizer,chunk_compiles={eng.stats.chunk_compiles},"
+          f"decode_compiles={eng.stats.decode_compiles},"
+          f"steady_state_retraces={wlog.compiles},"
+          f"host_syncs={wlog.host_syncs}")
+
     # ---- sharded multi-chiplet serving (PR 5) -----------------------------
     # Device-partitioned paged pool + shard_map decode on a 4-device CPU
     # mesh vs the single-host engine on the SAME traffic, both legs inside

@@ -1,0 +1,25 @@
+"""Static analysis + runtime sanitizers for the repo's own contracts.
+
+Two halves, one job — keep the invariants PRs 1-9 established from rotting
+as the tree grows:
+
+  * `contracts`  — an AST rule engine (R1..R7) over `src/` + `benchmarks/`:
+    UCIe-cost isolation, attention-core unification, replay determinism,
+    host authority, donation safety, pool-key genericity, Pallas hygiene.
+    CLI: `python tools/check_contracts.py --strict`.
+  * `sanitizer`  — runtime retrace / host-sync accounting for jitted entry
+    points (`watch()`, `compile_budget()`), riding `jax.monitoring`'s
+    compile events; the serve bench gates `steady_state_retraces == 0`
+    through it.
+
+`contracts` is pure stdlib (no jax import) so the lint gate runs anywhere;
+`sanitizer` imports jax lazily at first use.
+"""
+
+from repro.analysis.contracts import (  # noqa: F401  (re-exports)
+    Finding,
+    Rule,
+    RULES,
+    rules_by_id,
+    run_rules,
+)

@@ -1,0 +1,215 @@
+"""Runtime retrace / host-sync sanitizer for jitted entry points.
+
+The serving stack's hot loops carry documented compile budgets: ONE chunk
+compile total, O(log max_len) prefill compiles, at most two decode variants
+(greedy + lazily-traced sampled), and ZERO retraces once traffic reaches
+steady state. The contract linter (`analysis/contracts`) keeps the *code*
+shaped so those hold; this module *measures* them at runtime:
+
+  * `watch()` — context manager counting every XLA backend compile (via
+    `jax.monitoring`'s `/jax/core/compile/backend_compile_duration` event),
+    every jaxpr trace (cache miss), and every explicit device->host sync
+    (`jax.device_get` + `np.asarray`/`np.array` of a jax Array) inside the
+    region. The serve bench wraps its steady-state wave in one of these and
+    det-gates `steady_state_retraces == 0`.
+  * `register_entry_point(name, jitted_fn)` — engines label their jits
+    ("decode", "chunk", "prefill", "paste", ...); compile counts per label
+    come from each function's jit cache size, so they attribute exactly.
+  * `compile_budget(decode=2, chunk=1, total=None)` — context manager that
+    raises `CompileBudgetExceeded` when a label (or the global compile
+    count) exceeds its declared budget. Usable directly in tests.
+
+Registration holds weakrefs only — engines (and the params their jit
+closures capture) die normally; dead entries are pruned on read.
+
+Host-sync counting is explicit-conversion counting: numpy's C conversion
+path doesn't consult Python-level hooks, so `watch()` temporarily wraps the
+`np.asarray`/`np.array`/`np.ascontiguousarray` module attributes and
+`jax.device_get`. That covers how this repo's host code materializes device
+values; a sync smuggled through the buffer protocol directly is out of
+scope (and R4 lints the known spellings).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import weakref
+from typing import Dict, Iterator, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+BACKEND_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+JAXPR_TRACE_EVENT = "/jax/core/compile/jaxpr_trace_duration"
+
+
+class CompileBudgetExceeded(AssertionError):
+    """A jitted entry point (or the watched region) blew its compile/sync
+    budget. AssertionError subclass so plain pytest handling applies."""
+
+
+@dataclasses.dataclass
+class WatchLog:
+    """Counters for one watched region (filled while active; entry-point
+    deltas stamped at exit)."""
+    compiles: int = 0        # XLA backend compiles anywhere in the process
+    traces: int = 0          # jaxpr traces (cache misses, incl. jit-of-jit)
+    host_syncs: int = 0      # explicit device->host materializations
+    entry_compiles: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def summary(self) -> Dict[str, int]:
+        d = {"compiles": self.compiles, "traces": self.traces,
+             "host_syncs": self.host_syncs}
+        d.update({f"{k}_compiles": v for k, v in
+                  sorted(self.entry_compiles.items())})
+        return d
+
+
+_active: List[WatchLog] = []
+_listener_installed = False
+
+
+def _on_duration_event(event: str, duration: float, **kwargs) -> None:
+    del duration, kwargs
+    if event == BACKEND_COMPILE_EVENT:
+        for log in _active:
+            log.compiles += 1
+    elif event == JAXPR_TRACE_EVENT:
+        for log in _active:
+            log.traces += 1
+
+
+def _install_listener() -> None:
+    # jax.monitoring has no unregister; install ONE process-wide listener
+    # lazily and fan out to whatever watches are active (usually 0 or 1)
+    global _listener_installed
+    if not _listener_installed:
+        jax.monitoring.register_event_duration_secs_listener(
+            _on_duration_event)
+        _listener_installed = True
+
+
+# --------------------------------------------------------------------------
+# named entry points
+
+
+_entry_points: Dict[str, List[weakref.ref]] = {}
+
+
+def register_entry_point(name: str, jitted_fn) -> None:
+    """Label a jitted callable so `compile_budget(name=...)` can attribute
+    compiles to it. Multiple functions may share a label (the greedy and
+    sampled decode variants both register as "decode"); weakrefs only."""
+    if not hasattr(jitted_fn, "_cache_size"):
+        raise TypeError(f"{jitted_fn!r} has no _cache_size — pass the "
+                        "jax.jit-wrapped function, not the python callable")
+    _entry_points.setdefault(name, []).append(weakref.ref(jitted_fn))
+
+
+def entry_cache_sizes() -> Dict[str, int]:
+    """Live compiled-variant count per registered label (dead refs
+    pruned). A label with only dead referents still reports 0 — a budget
+    naming it stays valid across engine teardown."""
+    out: Dict[str, int] = {}
+    for name, refs in _entry_points.items():
+        live = [r for r in refs if r() is not None]
+        _entry_points[name] = live
+        out[name] = sum(r()._cache_size() for r in live if r() is not None)
+    return out
+
+
+def registered_entry_points() -> Tuple[str, ...]:
+    return tuple(sorted(_entry_points))
+
+
+# --------------------------------------------------------------------------
+# watch / budgets
+
+
+@contextlib.contextmanager
+def _count_host_syncs(log: WatchLog) -> Iterator[None]:
+    orig_np = {name: getattr(np, name)
+               for name in ("asarray", "array", "ascontiguousarray")}
+    orig_get = jax.device_get
+
+    def _wrap_np(fn):
+        def wrapped(obj, *args, **kwargs):
+            if isinstance(obj, jax.Array):
+                log.host_syncs += 1
+            return fn(obj, *args, **kwargs)
+        return wrapped
+
+    def _wrap_get(x):
+        log.host_syncs += 1
+        return orig_get(x)
+
+    for name, fn in orig_np.items():
+        setattr(np, name, _wrap_np(fn))
+    jax.device_get = _wrap_get
+    try:
+        yield
+    finally:
+        for name, fn in orig_np.items():
+            setattr(np, name, fn)
+        jax.device_get = orig_get
+
+
+@contextlib.contextmanager
+def watch() -> Iterator[WatchLog]:
+    """Count compiles / traces / explicit host syncs inside the region.
+    Entry-point compile deltas are stamped on the log at exit."""
+    _install_listener()
+    log = WatchLog()
+    before = entry_cache_sizes()
+    _active.append(log)
+    try:
+        with _count_host_syncs(log):
+            yield log
+    finally:
+        _active.remove(log)
+        after = entry_cache_sizes()
+        log.entry_compiles = {
+            name: after.get(name, 0) - before.get(name, 0)
+            for name in after}
+
+
+@contextlib.contextmanager
+def compile_budget(total: Optional[int] = None,
+                   host_syncs: Optional[int] = None,
+                   **entries: int) -> Iterator[WatchLog]:
+    """Assert compile budgets over a region:
+
+        with compile_budget(decode=2, chunk=1):
+            ... build + run the engine ...
+
+    Keyword budgets name registered entry points (their compile count in
+    the region must stay <= the budget); `total` caps backend compiles
+    process-wide; `host_syncs` caps explicit device->host pulls. Raises
+    CompileBudgetExceeded listing every violation. Unknown labels raise
+    ValueError at exit (catching typos — a misspelled label would otherwise
+    pass vacuously); labels registered *inside* the region count."""
+    with watch() as log:
+        yield log
+    known = set(entry_cache_sizes())
+    unknown = sorted(set(entries) - known)
+    if unknown:
+        raise ValueError(
+            f"compile_budget: unknown entry point(s) {unknown}; "
+            f"registered: {sorted(known)}")
+    violations = []
+    for name, budget in sorted(entries.items()):
+        got = log.entry_compiles.get(name, 0)
+        if got > budget:
+            violations.append(f"{name}: {got} compiles > budget {budget}")
+    if total is not None and log.compiles > total:
+        violations.append(f"total: {log.compiles} backend compiles > "
+                          f"budget {total}")
+    if host_syncs is not None and log.host_syncs > host_syncs:
+        violations.append(f"host_syncs: {log.host_syncs} > budget "
+                          f"{host_syncs}")
+    if violations:
+        raise CompileBudgetExceeded(
+            "compile budget exceeded — " + "; ".join(violations) +
+            " (a retrace in a hot loop means a shape/dtype leaked into "
+            "trace context; see README 'Repo contracts & sanitizers')")

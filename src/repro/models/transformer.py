@@ -298,7 +298,6 @@ def _write_cache_paged(pool, kv_new, positions, page_table):
     lands on the null page too. Single-host layout; the paged pool trades the
     one-hot update's GSPMD-friendliness for O(live tokens) memory."""
     ps = pool.shape[1]
-    b = positions.shape[0]
     logical = jnp.minimum(positions // ps, page_table.shape[1] - 1)
     page = jnp.take_along_axis(page_table, logical[:, None], axis=1)[:, 0]
     return pool.at[page, positions % ps].set(
@@ -386,6 +385,14 @@ def _pools_of(cache):
     """The layer-stacked K/V pools present in a cache — family-agnostic:
     GQA carries k/v (+ int8 scale pools), MLA a single latent pool."""
     return {key: cache[key] for key in _POOL_KEYS if key in cache}
+
+
+def pool_data_keys(cache) -> Tuple[str, ...]:
+    """Base (unscaled) pool keys present in a cache or prefill dict —
+    ("k", "v") for GQA, ("k",) for MLA's single latent pool. THE way
+    engine code iterates pools (contract R6): a spelled-out key tuple at a
+    call site silently skips pools the family doesn't have."""
+    return tuple(key for key in ("k", "v") if key in cache)
 
 
 def copy_pool_page(cache, src, dst):

@@ -135,8 +135,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.sanitizer import register_entry_point
 from repro.models.quantized import quantize_kv_rows
-from repro.models.transformer import copy_pool_page
+from repro.models.transformer import copy_pool_page, pool_data_keys
 from repro.serve.faults import FaultPlan
 from repro.serve.sampling import (
     apply_logit_processors, clamp_rep_penalty, clamp_sample_params,
@@ -462,7 +463,7 @@ def _make_paste(fam: str):
             int8_kv = "ks" in c
             # pools present in the prefill cache: ('k', 'v') for GQA,
             # ('k',) for MLA's single latent pool (models/mla.py)
-            for key in (key for key in ("k", "v") if key in pf):
+            for key in pool_data_keys(pf):
                 if int8_kv:
                     # quantize prompt rows per (position, kv head) — the same
                     # map the decode write path applies, so dense and paged
@@ -516,7 +517,7 @@ def _make_paste_paged(fam: str):
         n_prompt_pages = -(-blen // ps)    # static per prefill bucket
         int8_kv = "ks" in c
         # ('k', 'v') for GQA, ('k',) for MLA's single latent pool
-        for key in (key for key in ("k", "v") if key in pf):
+        for key in pool_data_keys(pf):
             pool = c[key]
             if int8_kv:
                 qrows, srows = quantize_kv_rows(pf[key][:, 0])  # (L,blen,KV,·)
@@ -546,6 +547,15 @@ def _make_paste_paged(fam: str):
 
 
 class ServeEngine:
+    # Declared hot-loop compile budgets for a FIXED engine config (ROADMAP
+    # contract: every serving subsystem declares its budgets). "decode" is
+    # the greedy + lazily-traced sampled variants; "chunk" is the ONE
+    # fixed-shape chunk-prefill compile; "prefill" is per pow2 bucket so it
+    # scales O(log max_len) with traffic, not a constant — it is asserted
+    # by the fastpath tests against the bucket count, not here. Enforced at
+    # runtime via analysis/sanitizer.compile_budget(**COMPILE_BUDGETS).
+    COMPILE_BUDGETS = {"decode": 2, "chunk": 1}
+
     def __init__(self, model, *, n_slots: int = 4, max_len: int = 128,
                  params=None, bucket_prompts: bool = True,
                  paged: Optional[bool] = None, page_size: int = 32,
@@ -847,6 +857,15 @@ class ServeEngine:
         # first output from the prefill logits, counter 0)
         self._sample1_jit = jax.jit(sample_tokens)
         self._proc1_jit = jax.jit(apply_logit_processors)
+        # label the hot-loop jits for the retrace sanitizer: compile counts
+        # per label back COMPILE_BUDGETS and the bench's
+        # steady_state_retraces == 0 gate (analysis/sanitizer)
+        register_entry_point("prefill", self._prefill_jit)
+        register_entry_point("decode", self._decode_jit)
+        register_entry_point("decode", self._decode_sample_jit)
+        register_entry_point("paste", self._paste_jit)
+        if getattr(self, "_chunk_jit", None) is not None:
+            register_entry_point("chunk", self._chunk_jit)
         self._next_tok = np.zeros((n_slots, 1), np.int32)
         if self.paged:
             abs_cache = model.cache_shape(n_slots, max_len, self.kv_dtype,

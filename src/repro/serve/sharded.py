@@ -72,10 +72,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.analysis.sanitizer import register_entry_point
 from repro.models.transformer import gather_pool_pages, set_pool_page
 from repro.parallel.shmap import shard_map
 from repro.serve.engine import (
-    _ATTN_FAMILIES, _KV_DTYPES, EngineOverloaded, EngineStats, Request)
+    _KV_DTYPES, EngineOverloaded, EngineStats, Request)
 from repro.serve.faults import FaultPlan
 from repro.serve.health import (
     EVACUATED, Health, HealthConfig, ShardHealthMonitor)
@@ -367,6 +368,13 @@ class ShardedServeEngine:
             in_specs=(self._pool_specs, mspec, mspec, mspec, mspec),
             out_specs=self._pool_specs), **cow_donate)
         self._page_bytes = page_payload_bytes(self._pools)
+        # retrace-sanitizer labels (analysis/sanitizer): the sharded engine
+        # shares the single-host labels so COMPILE_BUDGETS apply unchanged,
+        # plus "move" for the migration wave program
+        register_entry_point("decode", self._decode_jit)
+        register_entry_point("decode", self._decode_sample_jit)
+        register_entry_point("chunk", self._chunk_jit)
+        register_entry_point("move", self._move_jit)
 
     # ------------------------------------------------------------- lifecycle
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,

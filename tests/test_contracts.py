@@ -1,0 +1,447 @@
+"""Contract linter + runtime sanitizer (PR 10).
+
+Each rule gets three fixture legs written into a tmp mini-tree that mirrors
+the scoped paths: a POSITIVE snippet the rule must flag, a NEGATIVE snippet
+(the sanctioned spelling) it must pass, and the `# contract: allow(ID)`
+escape hatch suppressing the positive. A meta-test then runs every rule
+over the LIVE tree and requires zero findings — the linter is only useful
+if the repo it guards is clean under it.
+
+The sanitizer half is tested against real jits: fresh-compile counting,
+warm-cache zero, per-entry-point attribution, budget enforcement, and the
+engine-level steady-state guarantee (a warm ServeEngine re-running
+identical traffic compiles NOTHING).
+"""
+
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import sanitizer
+from repro.analysis.contracts import RULES, Finding, run_rules
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _lint(tmp_path, rel, source, rules):
+    """Write one file into a tmp mini-tree and run `rules` over it."""
+    p = tmp_path / rel
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(textwrap.dedent(source))
+    return run_rules(tmp_path, rules=rules, files=[p])
+
+
+def _hits(findings, rule_id):
+    return [f for f in findings if f.rule == rule_id]
+
+
+# --------------------------------------------------------------------------
+# R1 — UCIe cost isolation
+
+
+def test_r1_flags_link_math_in_serve(tmp_path):
+    fs = _lint(tmp_path, "src/repro/serve/rogue.py", """
+        def price(nbytes, cfg):
+            link_bandwidth_gbps = 16.0
+            ticks = nbytes * 8 / cfg.bandwidth_gbps
+            return ticks + FLIT_BYTES
+        """, rules=["R1"])
+    msgs = " ".join(f.message for f in fs)
+    assert len(_hits(fs, "R1")) == 3, fs
+    assert "bandwidth_gbps" in msgs and "FLIT_BYTES" in msgs
+
+
+def test_r1_flags_direct_transfer_call(tmp_path):
+    fs = _lint(tmp_path, "src/repro/serve/rogue.py", """
+        from repro.core import ucie
+
+        def cost(n):
+            return ucie.transfer(n)
+        """, rules=["R1"])
+    assert len(fs) == 1 and "ucie.transfer" in fs[0].message
+
+
+def test_r1_passes_migration_ticks_and_config_build(tmp_path):
+    fs = _lint(tmp_path, "benchmarks/rogue.py", """
+        from repro.core.ucie import UCIeConfig, migration_ticks
+
+        def cost(n, link):
+            cfg = UCIeConfig(bandwidth_gbps=32.0, latency_us=0.25)
+            return migration_ticks(n, link)
+        """, rules=["R1"])
+    assert fs == []
+
+
+def test_r1_out_of_scope_files_not_scanned(tmp_path):
+    # core/ucie itself obviously names its own fields
+    fs = _lint(tmp_path, "src/repro/core/ucie.py", """
+        def transfer(n, cfg):
+            return n * 8 / cfg.bandwidth_gbps
+        """, rules=["R1"])
+    assert fs == []
+
+
+# --------------------------------------------------------------------------
+# R2 — attention-core unification
+
+
+def test_r2_flags_projection_mirror(tmp_path):
+    fs = _lint(tmp_path, "src/repro/serve/rogue.py", """
+        from repro.models.common import apply_rope
+
+        def my_attn(x, params):
+            q, k, v = _project_qkv(params, x)
+            return apply_rope(q, 0)
+        """, rules=["R2"])
+    assert len(fs) == 3, fs  # import + _project_qkv call + apply_rope call
+
+
+def test_r2_passes_attn_block_wrapper(tmp_path):
+    fs = _lint(tmp_path, "src/repro/serve/rogue.py", """
+        from repro.models.transformer import attn_block
+
+        def step(params, x, cache):
+            return attn_block(params, x, cache, mode="decode")
+        """, rules=["R2"])
+    assert fs == []
+
+
+def test_r2_allowlist_covers_core_and_plugins(tmp_path):
+    # the core's own module-scope import of the primitives is sanctioned
+    fs = _lint(tmp_path, "src/repro/models/transformer.py", """
+        from repro.models.common import apply_rope
+        """, rules=["R2"])
+    assert fs == []
+    # ...but a NEW function in a non-allowlisted model file is not
+    fs = _lint(tmp_path, "src/repro/models/newfam.py", """
+        def attn(x):
+            return apply_rope(x, 0)
+        """, rules=["R2"])
+    assert len(fs) == 1
+
+
+# --------------------------------------------------------------------------
+# R3 — replay determinism
+
+
+def test_r3_flags_clocks_and_ambient_rng(tmp_path):
+    fs = _lint(tmp_path, "src/repro/serve/faults.py", """
+        import time
+        import numpy as np
+
+        def jitter():
+            t = time.time()
+            x = np.random.rand()
+            rng = np.random.default_rng()
+            return t + x
+        """, rules=["R3"])
+    assert len(fs) >= 4, fs  # import time, time.time, np.random.rand, rng()
+
+
+def test_r3_passes_seeded_rng(tmp_path):
+    fs = _lint(tmp_path, "src/repro/serve/sampling.py", """
+        import numpy as np
+
+        def draw(seed):
+            rng = np.random.default_rng(seed)
+            return rng.integers(0, 10)
+        """, rules=["R3"])
+    assert fs == []
+
+
+def test_r3_scope_excludes_engine(tmp_path):
+    # engine.py legitimately stamps wall-clock TTFT stats — out of scope
+    fs = _lint(tmp_path, "src/repro/serve/engine.py", """
+        import time
+
+        def stamp():
+            return time.time()
+        """, rules=["R3"])
+    assert fs == []
+
+
+# --------------------------------------------------------------------------
+# R4 — host authority
+
+
+def test_r4_flags_jax_in_planner(tmp_path):
+    fs = _lint(tmp_path, "src/repro/serve/scheduler.py", """
+        import jax
+        import jax.numpy as jnp
+
+        def plan(pages):
+            return jnp.argmax(pages)
+        """, rules=["R4"])
+    assert len(fs) == 3, fs  # import jax, import jnp, jnp use
+
+
+def test_r4_flags_device_get_and_item(tmp_path):
+    fs = _lint(tmp_path, "src/repro/serve/rogue.py", """
+        import jax
+
+        def peek(x):
+            a = jax.device_get(x)
+            return x.sum().item()
+        """, rules=["R4"])
+    assert len(fs) == 2, fs
+
+
+def test_r4_passes_numpy_planner(tmp_path):
+    fs = _lint(tmp_path, "src/repro/serve/scheduler.py", """
+        import numpy as np
+
+        def plan(pages):
+            return int(np.argmax(pages))
+        """, rules=["R4"])
+    assert fs == []
+
+
+# --------------------------------------------------------------------------
+# R5 — donation safety
+
+
+def test_r5_flags_read_after_donation(tmp_path):
+    fs = _lint(tmp_path, "src/repro/launch/rogue.py", """
+        import jax
+
+        step = jax.jit(_step, donate_argnums=(0,))
+
+        def run(state, batch):
+            out = step(state, batch)
+            return state.params, out
+        """, rules=["R5"])
+    assert len(fs) == 1 and "donated" in fs[0].message
+
+
+def test_r5_passes_rebind(tmp_path):
+    fs = _lint(tmp_path, "src/repro/launch/rogue.py", """
+        import jax
+
+        step = jax.jit(_step, donate_argnums=(0,))
+
+        def run(state, batch):
+            state = step(state, batch)
+            return state
+        """, rules=["R5"])
+    assert fs == []
+
+
+def test_r5_tracks_self_attributes(tmp_path):
+    fs = _lint(tmp_path, "src/repro/serve/rogue.py", """
+        import jax
+
+        class Eng:
+            def __init__(self):
+                self._decode = jax.jit(_d, donate_argnums=(2,))
+
+            def step(self, tok, pos, cache):
+                new = self._decode(tok, pos, cache)
+                stale = cache["k"]
+                return new, stale
+        """, rules=["R5"])
+    assert len(fs) == 1 and "cache" in fs[0].message
+
+
+# --------------------------------------------------------------------------
+# R6 — pool-key genericity
+
+
+def test_r6_flags_literal_kv_tuple(tmp_path):
+    fs = _lint(tmp_path, "src/repro/serve/rogue.py", """
+        def paste(cache, pf):
+            for key in ("k", "v"):
+                cache[key] = pf[key]
+        """, rules=["R6"])
+    assert len(fs) == 1 and "pool_data_keys" in fs[0].message
+
+
+def test_r6_passes_generic_iteration(tmp_path):
+    fs = _lint(tmp_path, "src/repro/serve/rogue.py", """
+        from repro.models.transformer import pool_data_keys
+
+        def paste(cache, pf):
+            for key in pool_data_keys(pf):
+                cache[key] = pf[key]
+        """, rules=["R6"])
+    assert fs == []
+
+
+# --------------------------------------------------------------------------
+# R7 — Pallas hygiene
+
+
+def test_r7_flags_host_calls_in_kernel(tmp_path):
+    fs = _lint(tmp_path, "src/repro/kernels/rogue.py", """
+        import numpy as np
+
+        def _bad_kernel(x_ref, o_ref):
+            print("tracing")
+            o_ref[...] = x_ref[...] * np.float32(2)
+        """, rules=["R7"])
+    msgs = " ".join(f.message for f in fs)
+    assert len(fs) == 2 and "print" in msgs and "np.float32" in msgs
+
+
+def test_r7_flags_impure_index_map(tmp_path):
+    fs = _lint(tmp_path, "src/repro/kernels/rogue.py", """
+        import numpy as np
+        from jax.experimental import pallas as pl
+
+        spec = pl.BlockSpec((8, 8), lambda i: (np.random.randint(2), 0))
+        """, rules=["R7"])
+    assert len(fs) == 1 and "index map" in fs[0].message
+
+
+def test_r7_passes_pure_kernel(tmp_path):
+    fs = _lint(tmp_path, "src/repro/kernels/rogue.py", """
+        import jax.numpy as jnp
+
+        def _ok_kernel(x_ref, o_ref):
+            o_ref[...] = jnp.maximum(x_ref[...], 0.0)
+        """, rules=["R7"])
+    assert fs == []
+
+
+# --------------------------------------------------------------------------
+# escape hatch + engine plumbing
+
+
+def test_allow_comment_suppresses_and_is_counted(tmp_path):
+    src = """
+        def paste(cache, pf):
+            for key in ("k", "v"):  # contract: allow(R6)
+                cache[key] = pf[key]
+        """
+    p = tmp_path / "src/repro/serve/rogue.py"
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(textwrap.dedent(src))
+    suppressed = []
+    fs = run_rules(tmp_path, rules=["R6"], files=[p],
+                   collect_suppressed=suppressed)
+    assert fs == []
+    assert len(suppressed) == 1 and suppressed[0].rule == "R6"
+
+
+def test_allow_comment_is_rule_specific(tmp_path):
+    fs = _lint(tmp_path, "src/repro/serve/rogue.py", """
+        def paste(cache, pf):
+            for key in ("k", "v"):  # contract: allow(R1)
+                cache[key] = pf[key]
+        """, rules=["R6"])
+    assert len(fs) == 1  # allow(R1) does not silence R6
+
+
+def test_unknown_rule_id_raises():
+    with pytest.raises(ValueError, match="R99"):
+        run_rules(REPO_ROOT, rules=["R99"], files=[])
+
+
+def test_finding_str_and_dict():
+    f = Finding(rule="R1", path="src/x.py", line=3, message="m")
+    assert "R1 src/x.py:3" in str(f)
+    assert f.as_dict() == {"rule": "R1", "path": "src/x.py", "line": 3,
+                           "message": "m"}
+
+
+# --------------------------------------------------------------------------
+# the live tree is clean, and the CLI agrees
+
+
+def test_live_tree_has_zero_findings():
+    """Every rule, whole repo. A finding here means a contract regressed —
+    the message says which invariant and why it exists."""
+    fs = run_rules(REPO_ROOT)
+    assert fs == [], "\n".join(str(f) for f in fs)
+    assert len(RULES) >= 7
+
+
+def test_cli_strict_exits_zero():
+    proc = subprocess.run(
+        [sys.executable, str(REPO_ROOT / "tools" / "check_contracts.py"),
+         "--strict", "--json"],
+        cwd=REPO_ROOT, capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    import json
+    out = json.loads(proc.stdout)
+    assert out["findings"] == []
+    assert len(out["rules"]) >= 7
+
+
+# --------------------------------------------------------------------------
+# runtime sanitizer
+
+
+def test_watch_counts_fresh_compile_then_cached():
+    @jax.jit
+    def f(x):
+        return x * 2 + 1
+
+    x = jnp.arange(8, dtype=jnp.float32)
+    with sanitizer.watch() as log:
+        f(x).block_until_ready()
+    assert log.compiles >= 1 and log.traces >= 1
+    with sanitizer.watch() as log2:
+        f(x).block_until_ready()
+    assert log2.compiles == 0 and log2.traces == 0
+
+
+def test_watch_counts_explicit_host_syncs():
+    x = jnp.arange(4)
+    with sanitizer.watch() as log:
+        np.asarray(x)
+        jax.device_get(x)
+        np.asarray(np.zeros(3))     # numpy->numpy: NOT a sync
+    assert log.host_syncs == 2
+
+
+def test_entry_point_attribution():
+    @jax.jit
+    def g(x):
+        return x + 1
+
+    sanitizer.register_entry_point("g_test", g)
+    with sanitizer.watch() as log:
+        g(jnp.ones(4)).block_until_ready()
+        g(jnp.ones((2, 2))).block_until_ready()   # second shape variant
+    assert log.entry_compiles["g_test"] == 2
+    assert "g_test_compiles" in log.summary()
+
+
+def test_register_rejects_unjitted():
+    with pytest.raises(TypeError):
+        sanitizer.register_entry_point("nope", lambda x: x)
+
+
+def test_compile_budget_enforced():
+    @jax.jit
+    def h(x):
+        return x - 1
+
+    sanitizer.register_entry_point("h_test", h)
+    with sanitizer.compile_budget(h_test=2):
+        h(jnp.ones(3)).block_until_ready()
+    with pytest.raises(sanitizer.CompileBudgetExceeded, match="h_test"):
+        with sanitizer.compile_budget(h_test=0):
+            h(jnp.ones(7)).block_until_ready()   # fresh shape: 1 > 0
+
+
+def test_compile_budget_unknown_label():
+    with pytest.raises(ValueError, match="not_registered"):
+        with sanitizer.compile_budget(not_registered=1):
+            pass
+
+
+def test_compile_budget_total_and_syncs():
+    @jax.jit
+    def k(x):
+        return x * x
+
+    with pytest.raises(sanitizer.CompileBudgetExceeded, match="host_syncs"):
+        with sanitizer.compile_budget(host_syncs=0):
+            np.asarray(k(jnp.ones(5)))

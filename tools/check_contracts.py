@@ -1,0 +1,78 @@
+#!/usr/bin/env python
+"""Repo-contract linter CLI — AST rules over src/ + benchmarks/.
+
+    PYTHONPATH=src python tools/check_contracts.py [--strict] [--json]
+                                                   [--rules R1,R3] [--root .]
+
+Exit status: 0 clean (or findings without --strict), 1 findings under
+--strict, 2 usage error. `--list-rules` prints the rule table (id, title,
+scope, rationale) and exits.
+
+Pure stdlib + repro.analysis.contracts (itself stdlib-only): the CI
+`contracts` job needs no jax install.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO_ROOT / "src"))
+
+from repro.analysis import contracts  # noqa: E402
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--root", type=pathlib.Path, default=REPO_ROOT,
+                    help="repo root to scan (default: this checkout)")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule ids (default: all)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 if any finding survives")
+    ap.add_argument("--json", action="store_true",
+                    help="machine-readable output")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args()
+
+    if args.list_rules:
+        for r in contracts.RULES:
+            print(f"{r.id}  {r.title}")
+            print(f"    scope: {', '.join(r.paths)}")
+            print(f"    {r.rationale}")
+        return 0
+
+    rule_ids = args.rules.split(",") if args.rules else None
+    try:
+        rules = contracts.rules_by_id(rule_ids)
+    except ValueError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+
+    suppressed: list = []
+    findings = contracts.run_rules(args.root, rules=rules,
+                                   collect_suppressed=suppressed)
+
+    if args.json:
+        print(json.dumps({
+            "root": str(args.root),
+            "rules": [r.id for r in rules],
+            "findings": [f.as_dict() for f in findings],
+            "suppressed": [f.as_dict() for f in suppressed],
+        }, indent=2))
+    else:
+        for f in findings:
+            print(f)
+        for f in suppressed:
+            print(f"suppressed({f.rule}) {f.path}:{f.line}")
+        print(f"contracts: {len(rules)} rules, {len(findings)} finding(s), "
+              f"{len(suppressed)} suppressed")
+
+    return 1 if (findings and args.strict) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
