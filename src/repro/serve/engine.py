@@ -875,6 +875,14 @@ class ServeEngine:
             abs_cache = model.cache_shape(n_slots, max_len, self.kv_dtype)
         self._cache = jax.tree.map(
             lambda s: jnp.zeros(s.shape, s.dtype), abs_cache)
+        if self.prefix_cache and getattr(self, "_cow_jit", None) is not None:
+            # Warm the COW tail-clone NOW: its first use is the first
+            # prefix-cache HIT, which otherwise pays the XLA compile
+            # mid-serving — a latency spike on exactly the path whose point
+            # is to be fast (caught by the steady-state retrace gate).
+            # Cloning the null page onto itself is a no-op by construction.
+            self._cache = self._cow_jit(self._cache, jnp.int32(0),
+                                        jnp.int32(0))
 
     # ------------------------------------------------------------- lifecycle
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,

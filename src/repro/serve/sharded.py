@@ -375,6 +375,13 @@ class ShardedServeEngine:
         register_entry_point("decode", self._decode_sample_jit)
         register_entry_point("chunk", self._chunk_jit)
         register_entry_point("move", self._move_jit)
+        if self.prefix_cache:
+            # Warm the COW clone at construction — its first use is the
+            # first prefix-cache hit, which would otherwise stall every
+            # shard on an XLA compile mid-serving (steady-state retrace
+            # gate). All-null src=dst=0 is the documented no-op round.
+            z = jnp.zeros((self.n_shards,), jnp.int32)
+            self._pools = self._cow_jit(self._pools, z, z)
 
     # ------------------------------------------------------------- lifecycle
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,

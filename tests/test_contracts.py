@@ -445,3 +445,40 @@ def test_compile_budget_total_and_syncs():
     with pytest.raises(sanitizer.CompileBudgetExceeded, match="host_syncs"):
         with sanitizer.compile_budget(host_syncs=0):
             np.asarray(k(jnp.ones(5)))
+
+
+# --------------------------------------------------------------------------
+# engine-level steady state
+
+
+@pytest.fixture(scope="module")
+def smol():
+    from repro.configs import get_config
+    from repro.models import ExecOptions, build_model
+    cfg = get_config("smollm-360m").smoke()
+    model = build_model(cfg, ExecOptions(attn_impl="reference", ce_chunk=32))
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _wave(eng, cfg, n=4):
+    rng = np.random.default_rng(3)
+    for i in range(n):
+        eng.submit(np.asarray(rng.integers(0, cfg.vocab_size, 6 + 5 * i),
+                              np.int32), max_new_tokens=4)
+    return eng.run_to_completion()
+
+
+def test_engine_meets_declared_compile_budgets(smol):
+    """A chunked engine's first full wave stays inside COMPILE_BUDGETS, and
+    an identical second wave against the warm engine compiles NOTHING —
+    the steady_state_retraces == 0 gate, as a unit test."""
+    from repro.serve.engine import ServeEngine
+    cfg, model, params = smol
+    eng = ServeEngine(model, n_slots=2, max_len=64, params=params,
+                      page_size=16)
+    with sanitizer.compile_budget(**ServeEngine.COMPILE_BUDGETS):
+        _wave(eng, cfg)
+    with sanitizer.compile_budget(total=0):
+        _wave(eng, cfg)
+    assert eng.stats.chunk_compiles == 1
